@@ -1,0 +1,104 @@
+"""Shared measurement harness for the paper-figure benchmarks.
+
+All times ns/query over vectorized numpy batches (single-core container;
+ratios — not absolute ns vs the paper's C++ — are the comparable
+quantity, stated in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core import LearnedIndex
+from repro.core.mdl import mae as mae_fn
+from repro.core.sampling import exponential_search
+
+
+def time_ns_per(fn, n_items: int, repeats: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter_ns()
+        fn()
+        best = min(best, time.perf_counter_ns() - t0)
+    return best / n_items
+
+
+def measure(index: LearnedIndex, queries: np.ndarray,
+            payload_bytes_per_key: int = 16) -> Dict[str, float]:
+    """T_build/T_predict/T_correct/T_overall (ns/query), size, MAE."""
+    keys = index.keys
+    n_q = len(queries)
+
+    t_pred = time_ns_per(lambda: index.predict(queries), n_q)
+    y_hat = index.predict(queries)
+
+    if index.gapped is not None:
+        t_overall = time_ns_per(lambda: index.gapped.lookup_batch(queries), n_q)
+        slots = np.searchsorted(index.gapped.slot_key, keys, "right") - 1
+        m = mae_fn(slots, index.predict(keys))
+        size = (index.gapped.n_slots * payload_bytes_per_key
+                + index.gapped.link_stats()[0] * payload_bytes_per_key
+                + 8 * index.mech.param_count())
+    else:
+        t_correct_only = time_ns_per(
+            lambda: exponential_search(keys, queries, y_hat), n_q)
+        t_overall = t_pred + t_correct_only
+        m = mae_fn(np.arange(len(keys)), index.predict(keys))
+        size = (len(keys) * payload_bytes_per_key
+                + 8 * index.mech.param_count())
+
+    t_correct = max(t_overall - t_pred, 0.0)
+    return {
+        "build_ns": index.build_seconds * 1e9,
+        "predict_ns": t_pred,
+        "correct_ns": t_correct,
+        "overall_ns": t_overall,
+        "size_bytes": float(size),
+        "mae": m,
+    }
+
+
+def btree_measure(index: LearnedIndex, queries: np.ndarray) -> Dict[str, float]:
+    """B+Tree: predict = fence walk, correct = in-page binary search."""
+    mech = index.mech
+    n_q = len(queries)
+    t_pred = time_ns_per(lambda: mech.predict(queries), n_q)
+    pred = mech.predict(queries)
+
+    def correct():
+        page = (pred // mech.page_size).astype(np.int64) * mech.page_size
+        # binary scan within the page (vectorized searchsorted per page)
+        return exponential_search(index.keys, queries, pred)
+
+    t_corr = time_ns_per(correct, n_q)
+    return {
+        "build_ns": index.build_seconds * 1e9,
+        "predict_ns": t_pred,
+        "correct_ns": t_corr,
+        "overall_ns": t_pred + t_corr,
+        "size_bytes": float(mech.size_bytes()),
+        "mae": mae_fn(np.arange(len(index.keys)), mech.predict(index.keys)),
+    }
+
+
+def emit(rows, prefix: str):
+    """Print ``name,us_per_call,derived`` CSV lines (run.py contract)."""
+    out = []
+    for r in rows:
+        r = dict(r)
+        name = f"{prefix}.{r.pop('name')}"
+        if "overall_ns" in r:
+            us = r["overall_ns"] / 1e3
+        elif "us" in r:
+            us = r.pop("us")
+        else:
+            us = 0.0
+        derived = ";".join(f"{k}={v:.6g}" if isinstance(v, float)
+                           else f"{k}={v}" for k, v in r.items())
+        line = f"{name},{us:.4f},{derived}"
+        print(line)
+        out.append(line)
+    return out

@@ -1,0 +1,71 @@
+"""Synthetic analogs of the paper's datasets (Weblogs/IoT/OSM are not
+redistributable offline; these match size-class and distributional
+character — see DESIGN.md §6).  Sizes scale with env BENCH_N
+(default 400k keys; the paper's ratios, not absolute ns, are the target).
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+BENCH_N = int(os.environ.get("BENCH_N", 400_000))
+
+
+def weblogs(n: int = None, seed: int = 0) -> np.ndarray:
+    """Bursty periodic request timestamps (school-schedule pattern)."""
+    n = n or BENCH_N
+    rng = np.random.default_rng(seed)
+    lam = 1.0 + 4.0 * (np.sin(np.linspace(0, 60 * np.pi, n)) ** 2)
+    gaps = rng.exponential(1.0, n) * lam
+    gaps *= 1.0 + 12.0 * (rng.random(n) < 0.01)  # outage bursts
+    return np.unique(np.cumsum(gaps))
+
+
+def iot(n: int = None, seed: int = 1) -> np.ndarray:
+    """Noisy multi-source sensor timestamps: piecewise activity regimes,
+    outages, and per-source clock jitter (complex temporal patterns —
+    paper §6.1 notes IoT is harder than Weblogs)."""
+    n = n or BENCH_N
+    rng = np.random.default_rng(seed)
+    parts = []
+    for i, scale in enumerate((0.3, 1.0, 3.0, 10.0)):
+        m = n // 4
+        # activity regime changes every ~m/50 events (bursts + quiet)
+        n_regimes = 50
+        rates = rng.lognormal(0.0, 1.2, n_regimes)
+        reg = np.repeat(rates, m // n_regimes + 1)[:m]
+        gaps = rng.exponential(scale, m) * reg
+        gaps *= 1.0 + 50.0 * (rng.random(m) < 0.002)  # outages
+        t = np.cumsum(gaps)
+        t += rng.normal(0, scale * 0.05, m)  # collection jitter
+        parts.append(t)
+    return np.unique(np.concatenate(parts))
+
+
+def longitude(n: int = None, seed: int = 2) -> np.ndarray:
+    """Beta-mixture longitudes (population clusters)."""
+    n = n or BENCH_N
+    rng = np.random.default_rng(seed)
+    a = rng.beta(2, 5, n // 3) * 360 - 180
+    b = rng.beta(8, 2, n // 3) * 360 - 180
+    c = rng.normal(10, 30, n - 2 * (n // 3))
+    return np.unique(np.concatenate([a, b, np.clip(c, -180, 180)]))
+
+
+def latilong(n: int = None, seed: int = 3) -> np.ndarray:
+    """Compound keys: 90*latitude + longitude (paper's construction)."""
+    n = n or BENCH_N
+    rng = np.random.default_rng(seed)
+    lat = rng.beta(5, 5, n) * 180 - 90
+    lon = rng.beta(2, 5, n) * 360 - 180
+    return np.unique(90.0 * lat + lon)
+
+
+DATASETS = {
+    "weblogs": weblogs,
+    "iot": iot,
+    "longitude": longitude,
+    "latilong": latilong,
+}

@@ -1,0 +1,51 @@
+"""Figure 11: dynamic workloads (read-heavy w=0.3, write-heavy w=0.7).
+
+Split D into D_init + insert batches; after each batch, query the keys
+seen so far and report MAE / times / remaining gap fraction, plus the
+no-gap baseline that sees all data (the paper's 1.227x overall claim).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import LearnedIndex
+
+from .common import measure
+from .datasets import iot
+
+
+def run(n=None, seed=0, method="pgm", eps=128, rho=0.3, batches=5):
+    keys = iot(n if n else None)
+    keys = keys[: min(len(keys), 200_000)]  # dynamic path is host-side
+    rng = np.random.default_rng(seed)
+    rows = []
+    for w, label in ((0.3, "read_heavy"), (0.7, "write_heavy")):
+        perm = rng.permutation(len(keys))
+        n_ins = int(w * len(keys))
+        init_keys = np.sort(keys[perm[n_ins:]])
+        ins_keys = keys[perm[:n_ins]]
+        idx = LearnedIndex.build(init_keys, method=method, eps=eps,
+                                 gap_rho=rho)
+        # baseline without gaps that can access ALL the data
+        full = LearnedIndex.build(np.sort(keys), method=method, eps=eps)
+        qs = rng.choice(init_keys, 20_000)
+        base = measure(full, qs)
+        seen = [init_keys]
+        for b in range(batches):
+            batch = ins_keys[b * n_ins // batches:(b + 1) * n_ins // batches]
+            for k in batch:
+                idx.insert(float(k), 10_000_000 + b)
+            seen.append(batch)
+            qpool = np.concatenate(seen)
+            qs = rng.choice(qpool, 20_000)
+            m = measure(idx, qs)
+            m["gap_fraction"] = idx.gapped.gap_fraction
+            m["overall_vs_nogap_baseline"] = base["overall_ns"] / m["overall_ns"]
+            rows.append({"name": f"{label}.batch{b+1}", **m})
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(), "fig11")

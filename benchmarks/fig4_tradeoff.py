@@ -1,0 +1,41 @@
+"""Figures 4+5: trade-offs as the alpha knob moves.
+
+alpha proxies (paper §6.2): B+Tree page size and FIT/PGM eps are
+inversely proportional to alpha; RMI #layer-2 models is proportional.
+Emits (size, overall time) and (predict time, correct time, MAE) curves.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import LearnedIndex
+
+from .common import btree_measure, measure
+from .datasets import iot
+
+
+def run(n=None, seed=0):
+    keys = iot(n)
+    rng = np.random.default_rng(seed)
+    queries = rng.choice(keys, min(100_000, len(keys)))
+    rows = []
+    sweeps = {
+        "btree": [("page_size", p) for p in (64, 256, 1024, 4096)],
+        "rmi": [("n_leaf", max(16, len(keys) // d))
+                for d in (2000, 500, 100, 25)],
+        "fiting": [("eps", e) for e in (16, 64, 256, 1024)],
+        "pgm": [("eps", e) for e in (16, 64, 256, 1024)],
+    }
+    for method, knobs in sweeps.items():
+        for pname, pval in knobs:
+            idx = LearnedIndex.build(keys, method=method, **{pname: pval})
+            m = btree_measure(idx, queries) if method == "btree" else \
+                measure(idx, queries)
+            rows.append({"name": f"{method}.{pname}{pval}", **m})
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(), "fig4")

@@ -1,0 +1,38 @@
+"""Figure 6: sampling sweep — MAE / build time / query time vs sample
+rate (the 78x construction-speedup claim lives here)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import LearnedIndex
+
+from .common import measure
+from .datasets import iot
+
+RATES = (1.0, 0.5, 0.1, 0.05, 0.01, 0.005, 0.0025, 0.001)
+
+
+def run(n=None, seed=0, method="pgm", eps=256):
+    keys = iot(n)
+    rng = np.random.default_rng(seed)
+    queries = rng.choice(keys, min(100_000, len(keys)))
+    rows = []
+    build_full = None
+    for s in RATES:
+        idx = LearnedIndex.build(keys, method=method, eps=eps,
+                                 sample_rate=s,
+                                 rng=np.random.default_rng(seed))
+        m = measure(idx, queries)
+        if s == 1.0:
+            build_full = m["build_ns"]
+        m["build_speedup"] = (build_full / m["build_ns"]
+                              if build_full else 1.0)
+        m["segments"] = idx.mech.plm.n_segments
+        rows.append({"name": f"{method}.s{s}", **m})
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(), "fig6")

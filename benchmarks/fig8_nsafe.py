@@ -1,0 +1,52 @@
+"""Figure 8: smallest "safe" sample size n_safe vs the alpha knob.
+
+Theory (Thm. 1): n_safe = O(alpha^2 log^2 E) => log n_safe linear in
+log alpha.  We binary-search the smallest rate keeping MAE within 2x of
+the full build, per alpha setting, and report the log-log slope.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import LearnedIndex
+from repro.core.mdl import mae as mae_fn
+
+from .datasets import iot
+
+# alpha proxies: eps inversely proportional (FIT/PGM); n_leaf proportional
+SWEEPS = {
+    "pgm": [("eps", e) for e in (1024, 256, 64, 16)],
+    "fiting": [("eps", e) for e in (1024, 256, 64, 16)],
+    "rmi": [("n_leaf", l) for l in (250, 1000, 4000, 16000)],
+}
+RATES = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5)
+
+
+def _mae_of(keys, method, kw, rate, seed):
+    idx = LearnedIndex.build(keys, method=method, sample_rate=rate,
+                             rng=np.random.default_rng(seed), **kw)
+    return mae_fn(np.arange(len(keys)), idx.predict(keys))
+
+
+def run(n=None, seed=0, tol=2.0):
+    keys = iot(n)
+    rows = []
+    for method, knobs in SWEEPS.items():
+        for pname, pval in knobs:
+            kw = {pname: pval}
+            full = _mae_of(keys, method, kw, 1.0, seed)
+            n_safe = len(keys)
+            for rate in RATES:  # smallest rate with non-degraded MAE
+                m = _mae_of(keys, method, kw, rate, seed)
+                if m <= tol * max(full, 1.0):
+                    n_safe = max(2, int(rate * len(keys)))
+                    break
+            rows.append({"name": f"{method}.{pname}{pval}", "us": 0.0,
+                         "n_safe": n_safe, "full_mae": full})
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(), "fig8")

@@ -1,0 +1,45 @@
+"""Figures 9+10: gap insertion — static performance across (s, rho).
+
+Reports overall/predict/correct query times, MAE, index size vs the
+no-gap baseline (the paper's 1.59x overall / ~2x correction speedups).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import LearnedIndex
+
+from .common import measure
+from .datasets import iot
+
+RHOS = (0.0, 0.05, 0.2, 0.5)
+RATES = (1.0, 0.1, 0.01)
+
+
+def run(n=None, seed=0, method="pgm", eps=128):
+    keys = iot(n)
+    rng = np.random.default_rng(seed)
+    queries = rng.choice(keys, min(100_000, len(keys)))
+    rows = []
+    base_overall = None
+    for s in RATES:
+        for rho in RHOS:
+            idx = LearnedIndex.build(
+                keys, method=method, eps=eps, sample_rate=s, gap_rho=rho,
+                rng=np.random.default_rng(seed))
+            m = measure(idx, queries)
+            if s == 1.0 and rho == 0.0:
+                base_overall = m["overall_ns"]
+            m["query_speedup"] = (base_overall / m["overall_ns"]
+                                  if base_overall else 1.0)
+            if idx.gapped is not None:
+                m["gap_fraction"] = idx.gapped.gap_fraction
+                m["chained"], m["max_chain"] = idx.gapped.link_stats()
+            rows.append({"name": f"{method}.s{s}.rho{rho}", **m})
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(), "fig9")

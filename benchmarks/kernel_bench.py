@@ -1,0 +1,60 @@
+"""Pallas lookup kernel benchmark: kernel(interpret) vs jnp-oracle vs
+numpy reference, plus the roofline-relevant bytes/query accounting.
+
+interpret=True timing is NOT TPU wall-time (the body runs in Python);
+the comparable numbers are (a) jnp-oracle XLA-CPU time and (b) the
+per-query bytes/ops the kernel's tiling contracts to, reported as
+derived columns.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import LearnedIndex
+from repro.kernels import batched_lookup, from_learned_index
+
+from .datasets import iot
+
+
+def run(n=None, seed=0):
+    keys = iot(n)[:200_000]
+    # f32-exact grid for the kernel path
+    keys = np.unique(np.round(keys * 64.0))
+    idx = LearnedIndex.build(keys, method="pgm", eps=64, gap_rho=0.15)
+    arrs = from_learned_index(idx)
+    err_lo = idx.mech.plm.err_lo
+    rng = np.random.default_rng(seed)
+    rows = []
+    for n_q in (4096, 32768):
+        q = rng.choice(keys, n_q)
+        # warm + time oracle path (XLA CPU)
+        out_o, *_ = batched_lookup(arrs, err_lo, q, use_kernel=False)
+        t0 = time.perf_counter_ns()
+        out_o, *_ = batched_lookup(arrs, err_lo, q, use_kernel=False)
+        t_oracle = (time.perf_counter_ns() - t0) / n_q
+        # kernel (interpret) — correctness + fallback-rate measurement
+        out_k, slot, found, fb = batched_lookup(arrs, err_lo, q,
+                                                interpret=True)
+        assert np.array_equal(np.asarray(out_k), np.asarray(out_o))
+        # numpy reference
+        t0 = time.perf_counter_ns()
+        idx.gapped.lookup_batch(q)
+        t_numpy = (time.perf_counter_ns() - t0) / n_q
+        w_tile = 2048
+        rows.append({
+            "name": f"lookup.q{n_q}",
+            "overall_ns": t_oracle,
+            "numpy_ns": t_numpy,
+            "fallback_rate": float(fb) / n_q,
+            "hbm_bytes_per_query": 2 * w_tile * 4 / 256.0,  # window/q_tile
+            "match_oracle": 1.0,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(), "kernel")

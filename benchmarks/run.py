@@ -1,0 +1,51 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  BENCH_N scales dataset size
+(default 400k keys); BENCH_FAST=1 runs a reduced sweep for CI.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+from . import (fig4_tradeoff, fig6_sampling, fig7_segments, fig8_nsafe,
+               fig9_gaps, fig11_dynamic, kernel_bench, table1)
+from .common import emit
+
+MODULES = [
+    ("table1", table1),
+    ("fig4", fig4_tradeoff),
+    ("fig6", fig6_sampling),
+    ("fig7", fig7_segments),
+    ("fig8", fig8_nsafe),
+    ("fig9", fig9_gaps),
+    ("fig11", fig11_dynamic),
+    ("kernel", kernel_bench),
+]
+
+
+def main() -> None:
+    fast = os.environ.get("BENCH_FAST", "0") == "1"
+    n = 60_000 if fast else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for prefix, mod in MODULES:
+        t0 = time.time()
+        try:
+            rows = mod.run(n=n)
+            emit(rows, prefix)
+            print(f"# {prefix}: {len(rows)} rows in {time.time()-t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:  # noqa: BLE001 — keep the suite going
+            failures += 1
+            print(f"# {prefix} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

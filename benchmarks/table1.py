@@ -1,0 +1,37 @@
+"""Table 1: B+Tree vs RMI vs FITing-Tree vs PGM on the IoT-like dataset.
+Columns: T_build, T_predict, T_correct, T_overall, index size, MAE."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import LearnedIndex
+
+from .common import btree_measure, measure
+from .datasets import iot
+
+
+def run(n=None, seed=0):
+    keys = iot(n)
+    rng = np.random.default_rng(seed)
+    queries = rng.choice(keys, min(200_000, len(keys)))
+    rows = []
+    configs = [
+        ("btree", dict(method="btree", page_size=256)),
+        ("rmi", dict(method="rmi", n_leaf=max(100, len(keys) // 200))),
+        ("fiting", dict(method="fiting", eps=128)),
+        ("pgm", dict(method="pgm", eps=128)),
+    ]
+    for name, kw in configs:
+        idx = LearnedIndex.build(keys, **kw)
+        m = btree_measure(idx, queries) if name == "btree" else \
+            measure(idx, queries)
+        if hasattr(idx.mech, "plm") and idx.mech.plm is not None:
+            m["segments"] = idx.mech.plm.n_segments
+        rows.append({"name": name, **m})
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(), "table1")

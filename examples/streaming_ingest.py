@@ -1,0 +1,47 @@
+"""Streaming ingestion: append documents to a live indexed dataset with
+NO index rebuild (paper §5.3 dynamic inserts land in reserved gaps).
+
+    PYTHONPATH=src python examples/streaming_ingest.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.data import IndexedTokenDataset, PackedTokenStore
+
+
+def main():
+    store = PackedTokenStore.synthetic(20_000, mean_len=64, vocab=32_000)
+    t0 = time.perf_counter()
+    ds = IndexedTokenDataset.build(store, method="pgm", eps=64,
+                                   sample_rate=0.1, gap_rho=0.25)
+    print(f"[ingest] initial index over {store.n_docs:,} docs in "
+          f"{time.perf_counter()-t0:.2f}s "
+          f"(gap fraction {ds.index.gapped.gap_fraction:.2f})")
+
+    rng = np.random.default_rng(1)
+    existing = set(store.sample_keys.tolist())
+    t0 = time.perf_counter()
+    n_new, slots, chains = 2000, 0, 0
+    added = []
+    while len(added) < n_new:
+        k = int(rng.integers(1, 2 ** 48))
+        if k in existing:
+            continue
+        existing.add(k)
+        doc = rng.integers(0, 32_000, 32, dtype=np.uint32)
+        path = ds.ingest(doc, k)
+        slots += path == "slot"
+        chains += path == "chain"
+        added.append(k)
+    dt = time.perf_counter() - t0
+    print(f"[ingest] streamed {n_new} docs in {dt:.2f}s "
+          f"({1e6*dt/n_new:.0f} us/doc) — gap-slot={slots} chained={chains}, "
+          f"zero retrains")
+    ords = ds.ordinals(np.array(added[:500], np.float64))
+    print(f"[ingest] spot-check lookups: all resolved = {bool((ords >= 0).all())}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro — production-grade JAX framework reproducing and extending
+"A Pluggable Learned Index Method via Sampling and Gap Insertion"
+(Li & Chen et al., 2021) for multi-pod TPU deployments."""
+
+__version__ = "1.0.0"

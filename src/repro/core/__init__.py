@@ -1,0 +1,54 @@
+"""Core learned-index library: the paper's contribution.
+
+Layout:
+  mechanisms.py — RMI / FITing-Tree / PGM / B+Tree in one PLM framework
+  mdl.py        — §3 MDL objective (L(M), L(D|M), reports)
+  sampling.py   — §4 sampling + coverage patches + theory bounds
+  gaps.py       — §5 result-driven gap insertion, gapped array, dynamics
+  index.py      — pluggable facade combining all of the above
+"""
+
+from .index import LearnedIndex
+from .mechanisms import (
+    BTreeMechanism,
+    FITingMechanism,
+    MECHANISMS,
+    PGMMechanism,
+    PiecewiseLinearModel,
+    RMIMechanism,
+    build_mechanism,
+)
+from .mdl import MDLReport, correction_cost, mae, mdl_report
+from .sampling import (
+    exponential_search,
+    fit_sampled,
+    hoeffding_bound,
+    refinalize_bounds,
+    sample_pairs,
+    sample_size_bound,
+)
+from .gaps import GappedArray, build_gapped, gap_positions
+
+__all__ = [
+    "LearnedIndex",
+    "BTreeMechanism",
+    "FITingMechanism",
+    "MECHANISMS",
+    "PGMMechanism",
+    "PiecewiseLinearModel",
+    "RMIMechanism",
+    "build_mechanism",
+    "MDLReport",
+    "correction_cost",
+    "mae",
+    "mdl_report",
+    "exponential_search",
+    "fit_sampled",
+    "hoeffding_bound",
+    "refinalize_bounds",
+    "sample_pairs",
+    "sample_size_bound",
+    "GappedArray",
+    "build_gapped",
+    "gap_positions",
+]

@@ -1,0 +1,448 @@
+"""Result-driven gap insertion and the gapped physical layout (paper §5).
+
+Pipeline (``build_gapped``):
+
+1. Learn a base mechanism with K segments on (x, y) — optionally on a
+   sample (§5.4 "Combining Sampling and Gap Insertion").
+2. **Result-driven position manipulation** (Eq. 3): per segment k, propose
+   the hypothetical line through the gap-shifted endpoints; every key's
+   target position is
+   ``y^g = y_k1 + S_k + (x - x_k1) * (y_km - y_k1) (1 + rho) / (x_km - x_k1)``
+   with ``S_k = sum of gaps inserted in earlier segments`` and gap budget
+   ``rho * n`` overall.
+3. Re-learn the mechanism on the gap-inserted pairs (x, y^g) — the data is
+   now near-linear per segment, so the re-learned index is much more
+   precise (this is the paper's information-bottleneck argument, §5.1).
+4. **Physical key placement** (§5.2): place each key at its re-learned
+   predicted slot ``round(M(x))``; prediction conflicts and monotonicity
+   violations go to per-slot **linking arrays**; slot-key total order is
+   maintained by giving unoccupied slots the key of the first occupied slot
+   to their right ("empty payload sorts before non-empty").
+
+Dynamic scenario (§5.3): inserts land on their predicted slot when it is
+free and order-compatible (the gaps were *reserved in a data-dependent
+way*, so this is the common case), otherwise they chain onto the upper-
+bound slot's linking array.  Deletes/updates are local.  No retraining.
+
+The frozen arrays (`slot_key`, `occupied`, CSR links) are exactly what the
+jnp reference and the Pallas lookup kernel consume (``repro.kernels``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .mechanisms import PiecewiseLinearModel, _finalize_errors
+from . import sampling as _sampling
+
+__all__ = ["gap_positions", "GappedArray", "build_gapped"]
+
+_EMPTY = np.iinfo(np.int64).min  # payload marker for unoccupied slots
+
+
+def gap_positions(
+    x: np.ndarray,
+    y: np.ndarray,
+    plm: PiecewiseLinearModel,
+    rho: float,
+) -> np.ndarray:
+    """Eq. 3 — target positions y^g for every key, fully vectorized.
+
+    Segment boundaries come from ``plm`` (learned on (x, y) or a sample);
+    anchoring points are each segment's first/last *present* key.
+    """
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    seg = plm.segment_of(x)
+    K = plm.n_segments
+    # first/last data index per segment (segments may be empty under sampling)
+    first = np.full(K, -1, np.int64)
+    last = np.full(K, -1, np.int64)
+    idx = np.arange(x.shape[0], dtype=np.int64)
+    first = np.full(K, x.shape[0], np.int64)
+    np.minimum.at(first, seg, idx)
+    np.maximum.at(last, seg, idx)
+    n = x.shape[0]
+    present = first < n
+    f_idx = np.minimum(first, n - 1)
+    l_idx = np.clip(last, 0, n - 1)
+    y_first = np.where(present, y[f_idx], 0.0)
+    y_last = np.where(present, y[l_idx], 0.0)
+    x_first = np.where(present, x[f_idx], 0.0)
+    x_last = np.where(present, x[l_idx], 1.0)
+    # gaps inserted inside segment j:  U_j = rho * (y_jm - y_j1)
+    U = np.where(present, rho * (y_last - y_first), 0.0)
+    S = np.concatenate([[0.0], np.cumsum(U)[:-1]])  # sum over j < k
+    dx = np.where(x_last > x_first, x_last - x_first, 1.0)
+    scale = (y_last - y_first) * (1.0 + rho) / dx
+    yg = y_first[seg] + S[seg] + (x - x_first[seg]) * scale[seg]
+    # monotonicity guard: numerical ties across segment boundaries
+    return np.maximum.accumulate(yg)
+
+
+@dataclasses.dataclass
+class GappedArray:
+    """First-level gapped array G + linking arrays (paper §5.2).
+
+    * ``slot_key[i]``: the total-order key of slot i.  Occupied slots hold
+      ``min(A_i)``; unoccupied slots carry the key of the first occupied
+      slot to their right (+inf past the last occupied slot).
+    * ``payload[i]``: payload of the occupied slot's min key, or _EMPTY.
+    * ``links``: slot -> list of (key, payload), keys > slot min, sorted.
+    """
+
+    slot_key: np.ndarray           # (m,) float64
+    occupied: np.ndarray           # (m,) bool
+    payload: np.ndarray            # (m,) int64
+    links: Dict[int, List[Tuple[float, int]]]
+    mech: object                   # re-learned mechanism (predicts slots)
+    n_keys: int
+    rho: float
+
+    # ------------------------------------------------------------------
+    @property
+    def n_slots(self) -> int:
+        return int(self.slot_key.shape[0])
+
+    @property
+    def gap_fraction(self) -> float:
+        return float(1.0 - self.occupied.mean())
+
+    def link_stats(self) -> Tuple[int, int]:
+        """(#chained keys, max chain length)."""
+        if not self.links:
+            return 0, 0
+        lens = [len(v) for v in self.links.values()]
+        return int(sum(lens)), int(max(lens))
+
+    # ------------------------------------------------------------------
+    # read path
+    # ------------------------------------------------------------------
+    def _upper_bound_slot(self, q: float) -> int:
+        """Rightmost slot whose (total-order) key is <= q and occupied.
+
+        Relies on the carried-key construction: the last slot with
+        slot_key < q is always occupied; for slot_key == q the occupied
+        slot is the last one of the equal run.
+        """
+        j = int(np.searchsorted(self.slot_key, q, side="right")) - 1
+        while j >= 0 and not self.occupied[j]:
+            j -= 1  # only possible at the very front (all-carried prefix)
+        return j
+
+    def lookup(self, q: float) -> Optional[int]:
+        """Exact-match lookup -> payload or None (paper's read path)."""
+        j = self._upper_bound_slot(q)
+        if j < 0:
+            return None
+        if self.slot_key[j] == q:
+            return int(self.payload[j])
+        for k, p in self.links.get(j, ()):  # bounded linear chain scan
+            if k == q:
+                return int(p)
+        return None
+
+    def _csr(self):
+        """Cached CSR link tables (invalidated by dynamic ops)."""
+        if getattr(self, "_csr_cache", None) is None:
+            self._csr_cache = self.export_csr_links()
+        return self._csr_cache
+
+    def _invalidate(self):
+        self._csr_cache = None
+
+    def lookup_batch(self, qs: np.ndarray, bounded: bool = True) -> np.ndarray:
+        """Vectorized batch lookup; -1 for misses (numpy kernel reference).
+
+        ``bounded`` uses the mechanism's prediction + exponential search
+        (the paper's correction step — cost scales with log|err|, which
+        is where gap insertion's precision pays off); otherwise a plain
+        full-array binary search.
+        """
+        from . import sampling as _s
+
+        qs = np.asarray(qs, np.float64)
+        if bounded and getattr(self.mech, "plm", None) is not None:
+            y_hat = self.mech.predict(qs)
+            j = _s.exponential_search(self.slot_key, qs, y_hat)
+        else:
+            j = np.searchsorted(self.slot_key, qs, side="right") - 1
+        out = np.full(qs.shape[0], -1, np.int64)
+        ok = j >= 0
+        hit = ok & (np.where(ok, self.slot_key[np.maximum(j, 0)], np.nan) == qs)
+        out[hit] = self.payload[j[hit]]
+        # vectorized chain scan over the CSR link tables for the misses
+        miss = np.flatnonzero(ok & ~hit)
+        if miss.size:
+            offsets, lkeys, lpays = self._csr()
+            start = offsets[j[miss]]
+            end = offsets[j[miss] + 1]
+            live = np.flatnonzero(end > start)
+            start, end = start[live], end[live]
+            midx = miss[live]
+            t = 0
+            max_t = int(np.max(end - start)) if live.size else 0
+            while t < max_t and midx.size:
+                idx = start + t
+                in_chain = idx < end
+                found = in_chain & (lkeys[np.minimum(idx, len(lkeys) - 1)]
+                                    == qs[midx])
+                out[midx[found]] = lpays[idx[found]]
+                keep = in_chain & ~found
+                start, end, midx = start[keep], end[keep], midx[keep]
+                t += 1
+        return out
+
+    # ------------------------------------------------------------------
+    # dynamic path (paper §5.3) — host-side mutation, no retraining
+    # ------------------------------------------------------------------
+    def _prev_occupied(self, i: int) -> int:
+        j = i
+        while j >= 0 and not self.occupied[j]:
+            j -= 1
+        return j
+
+    def _next_occupied(self, i: int) -> int:
+        m = self.n_slots
+        j = i
+        while j < m and not self.occupied[j]:
+            j += 1
+        return j  # == m when none
+
+    def insert(self, key: float, payload: int) -> str:
+        """Insert via predicted position.  Returns 'slot'|'chain' (path taken)."""
+        self._invalidate()
+        m = self.n_slots
+        p = int(np.clip(np.rint(self.mech.predict(np.array([key]))[0]), 0, m - 1))
+        if not self.occupied[p]:
+            prev = self._prev_occupied(p)
+            nxt = self._next_occupied(p)
+            # order check must include the previous slot's chain maximum
+            # (total-order invariant: max(A_{i-1}) < G(i), paper §5.3)
+            prev_max = -np.inf
+            if prev >= 0:
+                prev_max = float(self.slot_key[prev])
+                chain = self.links.get(prev)
+                if chain:
+                    prev_max = max(prev_max, chain[-1][0])
+            prev_ok = prev < 0 or prev_max < key
+            next_ok = nxt >= m or self.slot_key[nxt] > key
+            if prev_ok and next_ok:
+                self.occupied[p] = True
+                self.payload[p] = payload
+                # carried keys: slots (prev, p] now see `key` as next occupied
+                self.slot_key[prev + 1 : p + 1] = key
+                self.n_keys += 1
+                return "slot"
+        # chain onto the upper-bound slot (or become the new global min)
+        ub = self._upper_bound_slot(key)
+        if ub < 0:
+            nxt = self._next_occupied(0)
+            if nxt >= m:  # empty structure: take slot p
+                self.occupied[p] = True
+                self.payload[p] = payload
+                self.slot_key[: p + 1] = key
+                self.n_keys += 1
+                return "slot"
+            # new global minimum: displace the current min into the chain
+            old_key = float(self.slot_key[nxt])
+            old_payload = int(self.payload[nxt])
+            chain = self.links.setdefault(nxt, [])
+            chain.append((old_key, old_payload))
+            chain.sort()
+            self.payload[nxt] = payload
+            self.slot_key[: nxt + 1] = key
+            self.n_keys += 1
+            return "chain"
+        if self.slot_key[ub] == key:
+            raise KeyError(f"duplicate key {key!r}")
+        chain = self.links.setdefault(ub, [])
+        if any(k == key for k, _ in chain):
+            raise KeyError(f"duplicate key {key!r}")
+        chain.append((key, payload))
+        chain.sort()
+        self.n_keys += 1
+        return "chain"
+
+    def delete(self, key: float) -> bool:
+        """Delete a key (paper §5.3).  Returns True if present."""
+        self._invalidate()
+        ub = self._upper_bound_slot(key)
+        if ub < 0:
+            return False
+        chain = self.links.get(ub)
+        if self.slot_key[ub] == key:
+            if chain:  # promote chain min into the slot
+                k2, p2 = chain.pop(0)
+                if not chain:
+                    del self.links[ub]
+                prev = self._prev_occupied(ub - 1)
+                self.slot_key[prev + 1 : ub + 1] = k2
+                self.payload[ub] = p2
+            else:  # unoccupy; carried keys point at next occupied
+                self.occupied[ub] = False
+                self.payload[ub] = _EMPTY
+                nxt = self._next_occupied(ub)
+                nk = self.slot_key[nxt] if nxt < self.n_slots else np.inf
+                prev = self._prev_occupied(ub)
+                self.slot_key[prev + 1 : nxt] = nk
+            self.n_keys -= 1
+            return True
+        if chain:
+            for t, (k, _) in enumerate(chain):
+                if k == key:
+                    chain.pop(t)
+                    if not chain:
+                        del self.links[ub]
+                    self.n_keys -= 1
+                    return True
+        return False
+
+    def update(self, key: float, payload: int) -> bool:
+        """Reset the payload of an existing key (paper §5.3)."""
+        self._invalidate()
+        ub = self._upper_bound_slot(key)
+        if ub < 0:
+            return False
+        if self.slot_key[ub] == key:
+            self.payload[ub] = payload
+            return True
+        chain = self.links.get(ub, [])
+        for t, (k, _) in enumerate(chain):
+            if k == key:
+                chain[t] = (key, payload)
+                return True
+        return False
+
+    # ------------------------------------------------------------------
+    # frozen export for the jnp/Pallas query path
+    # ------------------------------------------------------------------
+    def export_csr_links(self, max_chain: Optional[int] = None):
+        """CSR link tables: (offsets (m+1,), keys (L,), payloads (L,)).
+
+        ``max_chain`` bounds per-slot chains for the fixed-trip-count
+        kernel; overflow raises (asserted rare — paper §5.2 observes
+        chains are short).
+        """
+        m = self.n_slots
+        counts = np.zeros(m + 1, np.int64)
+        for i, chain in self.links.items():
+            counts[i + 1] = len(chain)
+            if max_chain is not None and len(chain) > max_chain:
+                raise ValueError(
+                    f"chain at slot {i} has {len(chain)} > max_chain={max_chain}"
+                )
+        offsets = np.cumsum(counts)
+        total = int(offsets[-1])
+        keys = np.empty(total, np.float64)
+        payloads = np.empty(total, np.int64)
+        for i, chain in self.links.items():
+            o = offsets[i]
+            for t, (k, p) in enumerate(chain):
+                keys[o + t] = k
+                payloads[o + t] = p
+        return offsets, keys, payloads
+
+
+def _place_keys(
+    x: np.ndarray,
+    payloads: np.ndarray,
+    pred_slot: np.ndarray,
+    m: int,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, Dict[int, List[Tuple[float, int]]]]:
+    """Linking-array placement (§5.2): slot = prediction; conflicts chain.
+
+    Keys arrive sorted; we keep a cursor at the last occupied slot.  A key
+    predicted at/behind the cursor chains onto the cursor slot; otherwise
+    it occupies its predicted slot.
+    """
+    slot_key = np.full(m, np.inf, np.float64)
+    occupied = np.zeros(m, bool)
+    payload = np.full(m, _EMPTY, np.int64)
+    links: Dict[int, List[Tuple[float, int]]] = {}
+    cur = -1
+    for t in range(x.shape[0]):
+        p = int(pred_slot[t])
+        if p > cur:
+            slot_key[p] = x[t]
+            occupied[p] = True
+            payload[p] = payloads[t]
+            cur = p
+        else:
+            links.setdefault(cur, []).append((float(x[t]), int(payloads[t])))
+    # carried keys for unoccupied slots: next occupied key to the right
+    carried = slot_key.copy()
+    nxt = np.inf
+    for i in range(m - 1, -1, -1):
+        if occupied[i]:
+            nxt = carried[i]
+        else:
+            carried[i] = nxt
+    return carried, occupied, payload, links
+
+
+def build_gapped(
+    mechanism_factory,
+    x: np.ndarray,
+    payloads: Optional[np.ndarray] = None,
+    rho: float = 0.1,
+    sample_rate: float = 1.0,
+    rng: Optional[np.random.Generator] = None,
+    refinalize: bool = True,
+    refit_factory=None,
+) -> GappedArray:
+    """Full §5 pipeline: base fit (+sampling §5.4) -> Eq.3 -> re-learn -> place.
+
+    ``refit_factory`` builds the step-3 mechanism re-learned on the
+    gap-inserted data; default is the base factory.  Because D_g is
+    near-linear per segment, a *tighter* eps here costs few segments but
+    sharply reduces placement collisions (shorter linking arrays) — see
+    LearnedIndex.build's adaptive default.
+    """
+    x = np.asarray(x, np.float64)
+    n = x.shape[0]
+    y = np.arange(n, dtype=np.float64)
+    if payloads is None:
+        payloads = np.arange(n, dtype=np.int64)
+
+    # 1) base mechanism (optionally on a sample)
+    if sample_rate < 1.0:
+        base = _sampling.fit_sampled(
+            mechanism_factory, x, y, rate=sample_rate, rng=rng, refinalize=False
+        )
+    else:
+        base = mechanism_factory()
+        base.fit(x, y)
+    base_plm = getattr(base, "plm", None)
+    if base_plm is None:
+        raise ValueError("gap insertion needs a PLM-exporting mechanism")
+
+    # 2) result-driven target positions (Eq. 3)
+    yg = gap_positions(x, y, base_plm, rho)
+
+    # 3) re-learn on the gap-inserted data
+    mech = (refit_factory or mechanism_factory)()
+    mech.fit(x, yg)
+
+    # 4) physical placement at re-learned predictions
+    m = int(np.ceil(yg[-1])) + 2
+    pred = np.clip(np.rint(mech.predict(x)), 0, m - 1).astype(np.int64)
+    slot_key, occupied, payload, links = _place_keys(x, payloads, pred, m)
+
+    ga = GappedArray(
+        slot_key=slot_key,
+        occupied=occupied,
+        payload=payload,
+        links=links,
+        mech=mech,
+        n_keys=n,
+        rho=rho,
+    )
+    # error bounds against *physical* slots so bounded search is exact
+    if refinalize and getattr(mech, "plm", None) is not None:
+        slot_of_key = np.searchsorted(ga.slot_key, x, side="right") - 1
+        _finalize_errors(mech.plm, x, slot_of_key.astype(np.float64))
+    return ga

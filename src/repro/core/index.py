@@ -1,0 +1,139 @@
+"""Pluggable LearnedIndex facade — the paper's techniques as composable knobs.
+
+``LearnedIndex.build(keys, method=..., sample_rate=..., gap_rho=...)``
+combines any base mechanism (rmi / fiting / pgm / btree) with the two
+pluggable techniques:
+
+* ``sample_rate < 1``  -> §4 sampling (+ coverage patches)
+* ``gap_rho > 0``      -> §5 result-driven gap insertion (gapped layout,
+                          linking arrays, dynamic ops)
+
+Static layout (no gaps) supports batched exact lookup via bounded search;
+gapped layout additionally supports insert/delete/update without
+retraining.  ``mdl()`` evaluates the instance under the §3 framework.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from . import gaps as _gaps
+from . import mdl as _mdl
+from . import sampling as _sampling
+from .mechanisms import MECHANISMS
+
+__all__ = ["LearnedIndex"]
+
+
+def _mechanism_factory(method: str, **kwargs):
+    cls = MECHANISMS[method]
+    return lambda: cls(**kwargs)
+
+
+@dataclasses.dataclass
+class LearnedIndex:
+    """A built index over a sorted unique key array."""
+
+    keys: np.ndarray
+    mech: object
+    method: str
+    gapped: Optional[_gaps.GappedArray] = None
+    sample_rate: float = 1.0
+    gap_rho: float = 0.0
+    build_seconds: float = 0.0
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def build(
+        keys: np.ndarray,
+        method: str = "pgm",
+        sample_rate: float = 1.0,
+        gap_rho: float = 0.0,
+        rng: Optional[np.random.Generator] = None,
+        **mech_kwargs,
+    ) -> "LearnedIndex":
+        keys = np.asarray(keys, np.float64)
+        if keys.ndim != 1 or keys.shape[0] < 2:
+            raise ValueError("need a 1-D array of at least two keys")
+        if not bool(np.all(np.diff(keys) > 0)):
+            raise ValueError("keys must be sorted, strictly increasing (unique)")
+        factory = _mechanism_factory(method, **mech_kwargs)
+        t0 = time.perf_counter()
+        if gap_rho > 0.0:
+            refit_factory = None
+            if method in ("pgm", "fiting") and "eps" in mech_kwargs:
+                # D_g is near-linear: tighter refit eps => precise
+                # placement, short linking arrays (beyond-paper knob)
+                rkw = dict(mech_kwargs)
+                rkw["eps"] = max(4.0, float(mech_kwargs["eps"]) / 16.0)
+                refit_factory = _mechanism_factory(method, **rkw)
+            ga = _gaps.build_gapped(
+                factory, keys, rho=gap_rho, sample_rate=sample_rate, rng=rng,
+                refit_factory=refit_factory,
+            )
+            mech = ga.mech
+            gapped = ga
+        else:
+            gapped = None
+            if sample_rate < 1.0:
+                mech = _sampling.fit_sampled(factory, keys, rate=sample_rate, rng=rng)
+            else:
+                mech = factory()
+                mech.fit(keys, np.arange(keys.shape[0], dtype=np.float64))
+        dt = time.perf_counter() - t0
+        return LearnedIndex(
+            keys=keys,
+            mech=mech,
+            method=method,
+            gapped=gapped,
+            sample_rate=sample_rate,
+            gap_rho=gap_rho,
+            build_seconds=dt,
+        )
+
+    # ------------------------------------------------------------------
+    def predict(self, qs: np.ndarray) -> np.ndarray:
+        return self.mech.predict(np.asarray(qs, np.float64))
+
+    def lookup(self, qs: np.ndarray) -> np.ndarray:
+        """Exact positions (static) or payloads (gapped); -1 for misses."""
+        qs = np.asarray(qs, np.float64)
+        if self.gapped is not None:
+            return self.gapped.lookup_batch(qs)
+        pos = _sampling.exponential_search(self.keys, qs, self.predict(qs))
+        found = self.keys[pos] == qs
+        return np.where(found, pos, -1)
+
+    def insert(self, key: float, payload: int) -> str:
+        if self.gapped is None:
+            raise NotImplementedError(
+                "dynamic ops need gap insertion (build with gap_rho > 0)"
+            )
+        return self.gapped.insert(key, payload)
+
+    def delete(self, key: float) -> bool:
+        if self.gapped is None:
+            raise NotImplementedError(
+                "dynamic ops need gap insertion (build with gap_rho > 0)"
+            )
+        return self.gapped.delete(key)
+
+    def update(self, key: float, payload: int) -> bool:
+        if self.gapped is None:
+            raise NotImplementedError(
+                "dynamic ops need gap insertion (build with gap_rho > 0)"
+            )
+        return self.gapped.update(key, payload)
+
+    # ------------------------------------------------------------------
+    def mdl(self, alpha: float = 1.0) -> _mdl.MDLReport:
+        """Evaluate under the §3 MDL framework (positions = logical y)."""
+        y = np.arange(self.keys.shape[0], dtype=np.float64)
+        if self.gapped is not None:
+            # positions are physical slots in the gapped layout
+            y = np.searchsorted(self.gapped.slot_key, self.keys, side="right") - 1
+        return _mdl.mdl_report(self.method, self.mech, self.keys, y, alpha=alpha)

@@ -1,0 +1,87 @@
+"""Learned-index-backed sample lookup — the paper as a data-plane feature.
+
+A training job addresses samples by *key* (content hash / global shuffle
+id), not ordinal: restarts, online mixing, and streamed ingestion all
+need key -> storage-position resolution.  Classically that's a B-tree or
+a hash map per worker; here it is the paper's pluggable learned index:
+
+ * build: PGM/FITing/RMI over the store's sorted sample keys —
+   optionally **sampled** (§4) for fast worker startup on huge stores;
+ * serve: batched lookups through the jnp/Pallas path (`use_device=True`)
+   or the numpy reference;
+ * stream: new documents appended out-of-key-order land in **gap slots**
+   (§5.3 dynamic insert) — no index rebuild on ingestion.
+
+Misses raise KeyError (a miss means a corrupt manifest — fail loudly).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..core import LearnedIndex
+from .token_store import PackedTokenStore
+
+
+@dataclasses.dataclass
+class IndexedTokenDataset:
+    store: PackedTokenStore
+    index: LearnedIndex
+    use_device: bool = False
+    _device_state: Optional[tuple] = None
+
+    @staticmethod
+    def build(store: PackedTokenStore, method: str = "pgm",
+              sample_rate: float = 1.0, gap_rho: float = 0.15,
+              use_device: bool = False, **mech_kwargs) -> "IndexedTokenDataset":
+        keys = store.sample_keys.astype(np.float64)
+        index = LearnedIndex.build(
+            keys, method=method, sample_rate=sample_rate, gap_rho=gap_rho,
+            **mech_kwargs)
+        ds = IndexedTokenDataset(store=store, index=index,
+                                 use_device=use_device)
+        if use_device:
+            ds._refresh_device()
+        return ds
+
+    def _refresh_device(self):
+        from ..kernels import from_learned_index
+        arrays = from_learned_index(self.index)
+        self._device_state = (arrays, self.index.mech.plm.err_lo.copy())
+
+    # ------------------------------------------------------------------
+    def ordinals(self, sample_keys: np.ndarray) -> np.ndarray:
+        """Batched key -> document ordinal (payload) resolution."""
+        q = np.asarray(sample_keys, np.float64)
+        if self.use_device and self._device_state is not None:
+            from ..kernels import batched_lookup
+            arrays, err_lo = self._device_state
+            out, *_ = batched_lookup(arrays, err_lo, q)
+            out = np.asarray(out)
+        else:
+            out = self.index.lookup(q)
+        if np.any(out < 0):
+            missing = q[out < 0][:5]
+            raise KeyError(f"sample keys not in index (first 5): {missing}")
+        return out.astype(np.int64)
+
+    def batch(self, sample_keys: np.ndarray, seq_len: int) -> np.ndarray:
+        """Fetch + pad/trim documents into an (n, seq_len) token matrix."""
+        ords = self.ordinals(sample_keys)
+        out = np.zeros((len(ords), seq_len), np.int32)
+        for i, o in enumerate(ords):
+            doc = self.store.doc(int(o))[:seq_len]
+            out[i, : len(doc)] = doc
+        return out
+
+    # ------------------------------------------------------------------
+    def ingest(self, doc: np.ndarray, sample_key: int) -> str:
+        """Streamed append: O(1) gap-slot insert, no retrain (paper §5.3)."""
+        ordinal = self.store.append(doc, sample_key)
+        path = self.index.insert(float(sample_key), int(ordinal))
+        if self.use_device:
+            self._refresh_device()  # device arrays are immutable snapshots
+        return path

@@ -1,0 +1,94 @@
+"""Packed token storage: one flat token array + document boundaries.
+
+On disk: ``<name>.tokens.npy`` (uint32) and ``<name>.meta.json`` with the
+document offsets and the *sample keys* (sorted uint64 ids — e.g. content
+hashes or global shuffle ids).  The learned index in
+``indexed_dataset.py`` maps sample key -> document ordinal.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Iterable, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PackedTokenStore:
+    tokens: np.ndarray        # (total_tokens,) uint32
+    doc_offsets: np.ndarray   # (n_docs + 1,) int64
+    sample_keys: np.ndarray   # (n_docs,) uint64, strictly increasing
+
+    @property
+    def n_docs(self) -> int:
+        return int(self.sample_keys.shape[0])
+
+    def doc(self, ordinal: int) -> np.ndarray:
+        a, b = self.doc_offsets[ordinal], self.doc_offsets[ordinal + 1]
+        return self.tokens[a:b]
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def build(docs: Sequence[np.ndarray],
+              sample_keys: Optional[np.ndarray] = None) -> "PackedTokenStore":
+        """Pack token documents; keys default to spaced ids (gap-friendly)."""
+        lens = np.array([len(d) for d in docs], np.int64)
+        offsets = np.concatenate([[0], np.cumsum(lens)])
+        tokens = (np.concatenate(docs).astype(np.uint32)
+                  if docs else np.zeros(0, np.uint32))
+        if sample_keys is None:
+            # spaced keys leave headroom for streamed appends (paper §5.3)
+            sample_keys = (np.arange(len(docs), dtype=np.uint64) + 1) * 16
+        sample_keys = np.asarray(sample_keys, np.uint64)
+        if not np.all(np.diff(sample_keys.astype(np.float64)) > 0):
+            raise ValueError("sample keys must be strictly increasing")
+        return PackedTokenStore(tokens, offsets, sample_keys)
+
+    @staticmethod
+    def synthetic(n_docs: int, mean_len: int = 512, vocab: int = 32_000,
+                  seed: int = 0) -> "PackedTokenStore":
+        rng = np.random.default_rng(seed)
+        lens = np.maximum(8, rng.poisson(mean_len, n_docs))
+        # Zipfian token frequencies (realistic, and gives training a
+        # learnable unigram signal in tests/examples)
+        docs = [(rng.zipf(1.4, l) - 1).clip(0, vocab - 1).astype(np.uint32)
+                for l in lens]
+        # realistic keys: sorted 48-bit content hashes
+        keys = np.sort(rng.choice(2 ** 48, n_docs, replace=False)).astype(
+            np.uint64)
+        return PackedTokenStore.build(docs, keys)
+
+    # ------------------------------------------------------------------
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        np.save(path + ".tokens.npy", self.tokens)
+        np.save(path + ".offsets.npy", self.doc_offsets)
+        np.save(path + ".keys.npy", self.sample_keys)
+        with open(path + ".meta.json", "w") as f:
+            json.dump({"n_docs": self.n_docs,
+                       "total_tokens": int(self.tokens.shape[0])}, f)
+
+    @staticmethod
+    def load(path: str) -> "PackedTokenStore":
+        return PackedTokenStore(
+            tokens=np.load(path + ".tokens.npy", mmap_mode="r"),
+            doc_offsets=np.load(path + ".offsets.npy"),
+            sample_keys=np.load(path + ".keys.npy"),
+        )
+
+    def append(self, doc: np.ndarray, sample_key: int) -> int:
+        """Streamed ingestion: append one document (key may interleave).
+
+        Returns the new document ordinal.  The learned index layer
+        handles out-of-order keys through gap insertion (paper §5.3) —
+        physical token storage is append-only.
+        """
+        self.tokens = np.concatenate([self.tokens, doc.astype(np.uint32)])
+        self.doc_offsets = np.concatenate(
+            [self.doc_offsets, [self.doc_offsets[-1] + len(doc)]])
+        self.sample_keys = np.concatenate(
+            [self.sample_keys, [np.uint64(sample_key)]])
+        return self.n_docs - 1

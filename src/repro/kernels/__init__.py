@@ -1,0 +1,20 @@
+# Pallas TPU kernels for the paper's compute hot-spot: fused batched
+# learned-index lookup (predict + bounded rank-search over VMEM tiles).
+# lookup.py: pl.pallas_call + BlockSpec (+scalar-prefetch dynamic windows)
+# ops.py:    jitted end-to-end wrapper (sort, schedule, fallback, chains)
+# ref.py:    pure-jnp oracle the kernel is validated against.
+
+from .ops import IndexArrays, batched_lookup, from_learned_index
+from .ops_gap import gap_positions_device, gap_positions_oracle
+from .ref import lookup_ref, predict_ref, resolve_chains
+
+__all__ = [
+    "IndexArrays",
+    "batched_lookup",
+    "from_learned_index",
+    "gap_positions_device",
+    "gap_positions_oracle",
+    "lookup_ref",
+    "predict_ref",
+    "resolve_chains",
+]

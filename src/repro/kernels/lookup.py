@@ -1,0 +1,175 @@
+"""Fused learned-index lookup — Pallas TPU kernel.
+
+The paper's query hot path is ``predict(q) -> bounded search around the
+prediction``.  On GPU/CPU that is a pointer-chasing binary search; the
+TPU-native re-think (DESIGN.md §2) recasts it as:
+
+  1. **Tile scheduling (host/XLA)**: queries are sorted; for each tile of
+     ``q_tile`` queries the mechanism's prediction + error bound gives a
+     slot window; the tile's window start (quantized to ``w_tile`` blocks)
+     is passed via *scalar prefetch* so the BlockSpec index_map DMAs
+     exactly the two adjacent ``w_tile`` blocks of the slot-key array that
+     cover the tile's window from HBM into VMEM.
+  2. **In-kernel (VMEM, branchless)**: segment routing and the linear
+     prediction are recomputed fused (segment tables live in VMEM), and
+     the bounded "search" is a *rank computation*: counting
+     ``slot_key <= q`` over the 2·w_tile VMEM window with chunked masked
+     reductions — no per-lane gather, pure VPU compare+reduce.
+  3. Queries whose true bracket falls outside the tile window raise a
+     fallback flag and are re-resolved by the jnp oracle path outside
+     (rare by construction; measured in tests/benchmarks).
+
+Memory/roofline: the kernel reads each needed slot-key block exactly once
+per tile (2·w_tile·4 B), the segment tables once per tile (VMEM-resident),
+and is memory-bound by design — arithmetic intensity ≈ (comparisons per
+byte) — matching the §Roofline treatment of index lookup as a memory-term
+workload.
+
+VMEM budget per grid step (defaults q_tile=256, w_tile=2048, K<=8192):
+  window 2*2048*4 = 16 KiB, segments 4*8192*4 = 128 KiB,
+  queries/outputs < 8 KiB, compare chunk 256*512*4 = 512 KiB  << 16 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["lookup_kernel_call"]
+
+
+def _lookup_kernel(
+    tile_block_ref,  # scalar-prefetch: (num_tiles,) int32 block index
+    q_ref,           # (q_tile,) f32 queries (sorted, padded with +inf)
+    segk_ref,        # (K,) f32 segment first keys (padded with +inf)
+    slope_ref,       # (K,) f32
+    icept_ref,       # (K,) f32
+    win_a_ref,       # (w_tile,) f32 slot keys, block b
+    win_b_ref,       # (w_tile,) f32 slot keys, block b+1
+    slot_ref,        # out (q_tile,) i32 absolute predecessor slot
+    found_ref,       # out (q_tile,) i32 1 if slot_key[slot] == q
+    fb_ref,          # out (q_tile,) i32 1 if fallback needed
+    pred_ref,        # out (q_tile,) f32 fused in-kernel prediction y_hat
+    *,
+    w_tile: int,
+    seg_chunk: int,
+    win_chunk: int,
+):
+    i = pl.program_id(0)
+    q = q_ref[:]
+    q_tile = q.shape[0]
+    k_pad = segk_ref.shape[0]
+
+    # ---- segment routing: rank of q among segment first keys ----------
+    # chunked masked count, no gather:  seg = sum(segk <= q) - 1
+    def seg_count(c, acc):
+        ks = segk_ref[pl.ds(c * seg_chunk, seg_chunk)]
+        return acc + jnp.sum(
+            (ks[None, :] <= q[:, None]).astype(jnp.int32), axis=1
+        )
+
+    n_seg_chunks = k_pad // seg_chunk
+    seg_cnt = jax.lax.fori_loop(
+        0, n_seg_chunks, seg_count, jnp.zeros((q_tile,), jnp.int32)
+    )
+    seg = jnp.clip(seg_cnt - 1, 0, k_pad - 1)
+
+    # per-query segment parameters (small VMEM gathers over the K tables)
+    fk = jnp.take(segk_ref[:], seg)
+    sl = jnp.take(slope_ref[:], seg)
+    ic = jnp.take(icept_ref[:], seg)
+    y_hat = sl * (q - fk) + ic  # fused in-kernel prediction
+
+    # ---- bounded search: rank of q within the 2*w_tile VMEM window ----
+    base = tile_block_ref[i] * w_tile  # absolute element offset of win_a
+
+    def win_count(c, acc):
+        off = c * win_chunk
+        in_a = off < w_tile
+        # static: win_chunk divides w_tile, so a chunk never straddles
+        ks = jax.lax.cond(
+            in_a,
+            lambda: win_a_ref[pl.ds(off % w_tile, win_chunk)],
+            lambda: win_b_ref[pl.ds(off % w_tile, win_chunk)],
+        )
+        le = acc[0] + jnp.sum((ks[None, :] <= q[:, None]).astype(jnp.int32), axis=1)
+        eq = acc[1] + jnp.sum((ks[None, :] == q[:, None]).astype(jnp.int32), axis=1)
+        return (le, eq)
+
+    n_win_chunks = (2 * w_tile) // win_chunk
+    zero = jnp.zeros((q_tile,), jnp.int32)
+    rank, eq_cnt = jax.lax.fori_loop(0, n_win_chunks, win_count, (zero, zero))
+
+    slot_ref[:] = base + rank - 1
+    found_ref[:] = (eq_cnt > 0).astype(jnp.int32)
+    # fallback: true bracket may lie outside the window
+    fb_lo = (rank == 0) & (base > 0)
+    fb_hi = rank == 2 * w_tile
+    fb_ref[:] = (fb_lo | fb_hi).astype(jnp.int32)
+    pred_ref[:] = y_hat
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("q_tile", "w_tile", "seg_chunk", "win_chunk", "interpret"),
+)
+def lookup_kernel_call(
+    queries_sorted,   # (Qpad,) f32, sorted ascending, padded with +inf
+    tile_block,       # (Qpad // q_tile,) i32 — window block index per tile
+    seg_first_key,    # (Kpad,) f32, padded with +inf
+    seg_slope,        # (Kpad,) f32
+    seg_icept,        # (Kpad,) f32
+    slot_key_padded,  # (Mpad,) f32, padded with +inf, Mpad % w_tile == 0
+    *,
+    q_tile: int = 256,
+    w_tile: int = 2048,
+    seg_chunk: int = 512,
+    win_chunk: int = 512,
+    interpret: bool = False,
+):
+    """Invoke the fused lookup kernel.  See ops.py for the full pipeline."""
+    n_q = queries_sorted.shape[0]
+    assert n_q % q_tile == 0, "pad queries to a multiple of q_tile"
+    assert slot_key_padded.shape[0] % w_tile == 0
+    assert w_tile % win_chunk == 0 and (2 * w_tile) % win_chunk == 0
+    assert seg_first_key.shape[0] % seg_chunk == 0
+    num_tiles = n_q // q_tile
+
+    kernel = functools.partial(
+        _lookup_kernel, w_tile=w_tile, seg_chunk=seg_chunk, win_chunk=win_chunk
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec((q_tile,), lambda i, tb: (i,)),
+            pl.BlockSpec(seg_first_key.shape, lambda i, tb: (0,)),
+            pl.BlockSpec(seg_slope.shape, lambda i, tb: (0,)),
+            pl.BlockSpec(seg_icept.shape, lambda i, tb: (0,)),
+            pl.BlockSpec((w_tile,), lambda i, tb: (tb[i],)),
+            pl.BlockSpec((w_tile,), lambda i, tb: (tb[i] + 1,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((q_tile,), lambda i, tb: (i,)),
+            pl.BlockSpec((q_tile,), lambda i, tb: (i,)),
+            pl.BlockSpec((q_tile,), lambda i, tb: (i,)),
+            pl.BlockSpec((q_tile,), lambda i, tb: (i,)),
+        ],
+    )
+    slot, found, fb, pred = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_q,), jnp.int32),
+            jax.ShapeDtypeStruct((n_q,), jnp.int32),
+            jax.ShapeDtypeStruct((n_q,), jnp.int32),
+            jax.ShapeDtypeStruct((n_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tile_block, queries_sorted, seg_first_key, seg_slope, seg_icept,
+      slot_key_padded, slot_key_padded)
+    return slot, found.astype(bool), fb.astype(bool), pred

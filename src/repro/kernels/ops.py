@@ -1,0 +1,213 @@
+"""Jitted wrapper around the fused lookup kernel — the public device API.
+
+``IndexArrays`` freezes a host-side ``LearnedIndex`` / ``GappedArray``
+into f32/i32 device arrays; ``batched_lookup`` runs the full pipeline:
+
+    sort queries -> tile window scheduling -> Pallas kernel
+    -> unsort -> fallback re-resolve (jnp oracle, rare)
+    -> payload + linking-array (CSR) resolution
+
+Everything is shape-static and jit-friendly; ``interpret=True`` runs the
+kernel body in Python on CPU (how this container validates it — the TPU
+is the deploy target).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref as _ref
+from .lookup import lookup_kernel_call
+
+__all__ = ["IndexArrays", "batched_lookup", "from_learned_index"]
+
+
+def _pad_pow(a: np.ndarray, multiple: int, fill) -> np.ndarray:
+    n = a.shape[0]
+    m = ((n + multiple - 1) // multiple) * multiple
+    if m == n:
+        return a
+    return np.concatenate([a, np.full(m - n, fill, a.dtype)])
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexArrays:
+    """Frozen device-side index state (all f32/i32/i64, shape-static)."""
+
+    seg_first_key: jax.Array   # (Kpad,) f32, +inf padded
+    seg_slope: jax.Array       # (Kpad,) f32
+    seg_icept: jax.Array       # (Kpad,) f32
+    slot_key: jax.Array        # (Mpad,) f32, +inf padded
+    payload: jax.Array         # (Mpad,) i32 (row ids; 64-bit payloads pair two arrays)
+    link_offsets: jax.Array    # (Mpad+1,) i32
+    link_keys: jax.Array       # (Lpad,) f32
+    link_payloads: jax.Array   # (Lpad,) i32
+    n_slots: int               # true (unpadded) slot count
+    max_chain: int
+
+
+def from_learned_index(index, *, w_tile: int = 2048, seg_chunk: int = 512,
+                       max_chain: Optional[int] = None) -> IndexArrays:
+    """Freeze a ``repro.core.LearnedIndex`` for the device query path."""
+    plm = getattr(index.mech, "plm", None)
+    if plm is None:
+        raise ValueError("mechanism does not export a piecewise linear model")
+    if index.gapped is not None:
+        ga = index.gapped
+        slot_key = ga.slot_key
+        payload = ga.payload
+        offsets, lkeys, lpay = ga.export_csr_links()
+        chain = max((len(v) for v in ga.links.values()), default=0)
+    else:
+        slot_key = index.keys
+        payload = np.arange(index.keys.shape[0], dtype=np.int64)
+        offsets = np.zeros(index.keys.shape[0] + 1, np.int64)
+        lkeys = np.zeros(0, np.float64)
+        lpay = np.zeros(0, np.int64)
+        chain = 0
+    if max_chain is None:
+        max_chain = int(chain)
+
+    n_slots = slot_key.shape[0]
+    skp = _pad_pow(np.asarray(slot_key, np.float32), w_tile, np.float32(np.inf))
+    # one extra +inf block so index_map's (b, b+1) pair is always valid
+    skp = np.concatenate([skp, np.full(w_tile, np.inf, np.float32)])
+    payp = _pad_pow(np.asarray(payload, np.int32), 1, np.int32(-1))
+    payp = np.concatenate(
+        [payp, np.full(skp.shape[0] - payp.shape[0], -1, np.int32)]
+    )
+    offp = np.concatenate(
+        [offsets, np.full(skp.shape[0] + 1 - offsets.shape[0], offsets[-1])]
+    ).astype(np.int32)
+
+    return IndexArrays(
+        seg_first_key=jnp.asarray(
+            _pad_pow(np.asarray(plm.seg_first_key, np.float32), seg_chunk,
+                     np.float32(np.inf))
+        ),
+        seg_slope=jnp.asarray(
+            _pad_pow(np.asarray(plm.slope, np.float32), seg_chunk, np.float32(0))
+        ),
+        seg_icept=jnp.asarray(
+            _pad_pow(np.asarray(plm.icept, np.float32), seg_chunk,
+                     np.float32(n_slots - 1))
+        ),
+        slot_key=jnp.asarray(skp),
+        payload=jnp.asarray(payp),
+        link_offsets=jnp.asarray(offp),
+        link_keys=jnp.asarray(lkeys.astype(np.float32)),
+        link_payloads=jnp.asarray(lpay.astype(np.int32)),
+        n_slots=n_slots,
+        max_chain=max_chain,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("q_tile", "w_tile", "seg_chunk", "win_chunk",
+                     "max_chain", "n_slots", "interpret", "use_kernel"),
+)
+def _pipeline(
+    queries,
+    seg_first_key, seg_slope, seg_icept, err_lo_by_seg,
+    slot_key, payload, link_offsets, link_keys, link_payloads,
+    *,
+    q_tile, w_tile, seg_chunk, win_chunk, max_chain, n_slots,
+    interpret, use_kernel,
+):
+    n_q = queries.shape[0]
+    m_pad = slot_key.shape[0]
+    order = jnp.argsort(queries)
+    qs = jnp.take(queries, order)
+
+    if use_kernel:
+        # --- tile window scheduling (host-side XLA, cheap) -------------
+        y_hat, seg = _ref.predict_ref(qs, seg_first_key, seg_slope, seg_icept)
+        lo = y_hat + jnp.take(err_lo_by_seg, seg) - 1.0
+        lo = jnp.clip(lo, 0.0, float(n_slots - 1))
+        tile_lo = jnp.min(lo.reshape(-1, q_tile), axis=1)
+        tile_block = jnp.clip(
+            (tile_lo // w_tile).astype(jnp.int32), 0, m_pad // w_tile - 2
+        )
+        slot_s, found_s, fb_s, _pred = lookup_kernel_call(
+            qs, tile_block, seg_first_key, seg_slope, seg_icept, slot_key,
+            q_tile=q_tile, w_tile=w_tile, seg_chunk=seg_chunk,
+            win_chunk=win_chunk, interpret=interpret,
+        )
+        # --- fallback: re-resolve flagged queries with the oracle ------
+        slot_o, found_o = _ref.lookup_ref(
+            qs, seg_first_key, seg_slope, seg_icept, slot_key
+        )
+        slot_s = jnp.where(fb_s, slot_o, slot_s)
+        found_s = jnp.where(fb_s, found_o, found_s)
+        fb_count = jnp.sum(fb_s.astype(jnp.int32))
+    else:
+        slot_s, found_s = _ref.lookup_ref(
+            qs, seg_first_key, seg_slope, seg_icept, slot_key
+        )
+        fb_count = jnp.int32(0)
+
+    # --- unsort ---------------------------------------------------------
+    inv = jnp.argsort(order)
+    slot = jnp.take(slot_s, inv)
+    found = jnp.take(found_s, inv)
+
+    # --- payload + linking arrays ---------------------------------------
+    out = _ref.resolve_chains(
+        queries, slot, found, payload,
+        link_offsets, link_keys, link_payloads, max_chain,
+    )
+    return out, slot, found, fb_count
+
+
+def auto_q_tile(n_q: int, n_slots: int, w_tile: int) -> int:
+    """Pick q_tile so a sorted-query tile's slot span ~fits the 2*w_tile
+    window: span ~= n_slots * q_tile / n_q.  Clamped to [32, 512]."""
+    t = max(32, min(512, int(n_q * w_tile / max(n_slots, 1))))
+    return 1 << (t.bit_length() - 1)  # floor to a power of two
+
+
+def batched_lookup(
+    arrays: IndexArrays,
+    err_lo_by_seg,
+    queries,
+    *,
+    q_tile: int = 0,
+    w_tile: int = 2048,
+    seg_chunk: int = 512,
+    win_chunk: int = 512,
+    interpret: bool = True,
+    use_kernel: bool = True,
+):
+    """Full device lookup: payloads (i64, -1 = miss), slots, found, #fallbacks.
+
+    ``err_lo_by_seg`` is the (Kpad,) f32 lower error bound per segment
+    (finalized on the full data — see sampling.refinalize_bounds).
+    """
+    queries = np.asarray(queries, np.float32)
+    n_q = queries.shape[0]
+    if q_tile <= 0:  # density-aware default (fallbacks stay rare)
+        q_tile = auto_q_tile(n_q, arrays.n_slots, w_tile)
+    qp = _pad_pow(queries, q_tile, np.float32(np.inf))
+    err_lo_by_seg = _pad_pow(
+        np.asarray(err_lo_by_seg, np.float32),
+        int(arrays.seg_first_key.shape[0]),
+        np.float32(0),
+    )[: arrays.seg_first_key.shape[0]]
+    out, slot, found, fb = _pipeline(
+        jnp.asarray(qp),
+        arrays.seg_first_key, arrays.seg_slope, arrays.seg_icept,
+        jnp.asarray(err_lo_by_seg, jnp.float32),
+        arrays.slot_key, arrays.payload, arrays.link_offsets,
+        arrays.link_keys, arrays.link_payloads,
+        q_tile=q_tile, w_tile=w_tile, seg_chunk=seg_chunk,
+        win_chunk=win_chunk, max_chain=arrays.max_chain,
+        n_slots=arrays.n_slots, interpret=interpret, use_kernel=use_kernel,
+    )
+    return out[:n_q], slot[:n_q], found[:n_q], fb

@@ -1,0 +1,71 @@
+"""Host prep + jit wrapper + jnp oracle for the gap-place kernel."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .gap_place import gap_place_call
+from .ops import _pad_pow
+
+
+def prepare_gap_tables(x: np.ndarray, y: np.ndarray, plm, rho: float,
+                       seg_chunk: int = 512):
+    """Fold Eq. 3 into per-segment (first_key, base, x0, scale) tables.
+
+    Mirrors core.gaps.gap_positions' segment anchoring (first/last present
+    key per segment), done once host-side in O(n).
+    """
+    seg = plm.segment_of(x)
+    K = plm.n_segments
+    n = x.shape[0]
+    idx = np.arange(n, dtype=np.int64)
+    first = np.full(K, n, np.int64)
+    last = np.full(K, -1, np.int64)
+    np.minimum.at(first, seg, idx)
+    np.maximum.at(last, seg, idx)
+    present = first < n
+    f = np.minimum(first, n - 1)
+    l = np.clip(last, 0, n - 1)
+    y_first = np.where(present, y[f], 0.0)
+    y_last = np.where(present, y[l], 0.0)
+    x_first = np.where(present, x[f], 0.0)
+    x_last = np.where(present, x[l], 1.0)
+    U = np.where(present, rho * (y_last - y_first), 0.0)
+    S = np.concatenate([[0.0], np.cumsum(U)[:-1]])
+    dx = np.where(x_last > x_first, x_last - x_first, 1.0)
+    scale = (y_last - y_first) * (1.0 + rho) / dx
+    base = y_first + S
+
+    pad = lambda a, fill: _pad_pow(np.asarray(a, np.float32), seg_chunk,
+                                   np.float32(fill))
+    return (pad(plm.seg_first_key, np.inf), pad(base, 0.0),
+            pad(x_first, 0.0), pad(scale, 0.0))
+
+
+def gap_positions_device(x: np.ndarray, plm, rho: float, *,
+                         key_tile: int = 1024, seg_chunk: int = 512,
+                         interpret: bool = True) -> np.ndarray:
+    """Device Eq. 3: returns monotone target positions for all keys."""
+    x = np.asarray(x, np.float64)
+    y = np.arange(x.shape[0], dtype=np.float64)
+    segk, base, x0, scale = prepare_gap_tables(x, y, plm, rho, seg_chunk)
+    xp = _pad_pow(x.astype(np.float32), key_tile, np.float32(np.inf))
+    out = gap_place_call(
+        jnp.asarray(xp), jnp.asarray(segk), jnp.asarray(base),
+        jnp.asarray(x0), jnp.asarray(scale),
+        key_tile=key_tile, seg_chunk=seg_chunk, interpret=interpret,
+    )
+    yg = np.asarray(out)[: x.shape[0]].astype(np.float64)
+    return np.maximum.accumulate(yg)  # same boundary-tie guard as core
+
+
+def gap_positions_oracle(x: np.ndarray, plm, rho: float) -> np.ndarray:
+    """Pure-jnp/numpy oracle — delegates to the core implementation."""
+    from ..core.gaps import gap_positions
+
+    x = np.asarray(x, np.float64)
+    return gap_positions(x, np.arange(x.shape[0], dtype=np.float64), plm,
+                         rho)

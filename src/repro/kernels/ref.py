@@ -1,0 +1,81 @@
+"""Pure-jnp oracle for the fused learned-index lookup kernel.
+
+Semantics (shared with the Pallas kernel in ``lookup.py``):
+
+Given a piecewise linear mechanism (segment tables) and the physical
+sorted slot-key array (gapped array G, or the raw sorted key array in the
+static case), for each query key q return
+
+  * ``slot``  — rightmost slot with slot_key <= q (-1 if q below all keys)
+  * ``found`` — slot_key[slot] == q (exact hit in the first-level array)
+
+Chain resolution (linking arrays) happens outside the search in
+``resolve_chains`` with a fixed-trip bounded scan over CSR link tables —
+identical for oracle and kernel paths.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["lookup_ref", "predict_ref", "resolve_chains"]
+
+
+def predict_ref(queries, seg_first_key, seg_slope, seg_icept):
+    """Segment routing + linear prediction (float32)."""
+    seg = jnp.clip(
+        jnp.searchsorted(seg_first_key, queries, side="right") - 1,
+        0,
+        seg_first_key.shape[0] - 1,
+    )
+    fk = jnp.take(seg_first_key, seg)
+    return jnp.take(seg_slope, seg) * (queries - fk) + jnp.take(seg_icept, seg), seg
+
+
+@functools.partial(jax.jit, static_argnames=())
+def lookup_ref(queries, seg_first_key, seg_slope, seg_icept, slot_key):
+    """Oracle: full-array searchsorted (ignores the mechanism's windows).
+
+    The mechanism tables are accepted (and routed through) so the oracle
+    has the same signature as the kernel wrapper; the ground-truth search
+    itself is position-prediction-independent.
+    """
+    del seg_slope, seg_icept, seg_first_key
+    slot = jnp.searchsorted(slot_key, queries, side="right").astype(jnp.int32) - 1
+    safe = jnp.maximum(slot, 0)
+    found = (slot >= 0) & (jnp.take(slot_key, safe) == queries)
+    return slot, found
+
+
+def resolve_chains(
+    queries,
+    slot,
+    found,
+    payload,
+    link_offsets,
+    link_keys,
+    link_payloads,
+    max_chain: int,
+):
+    """Payloads (i32) per query: G hit -> payload[slot]; miss -> chain scan.
+
+    Fixed-trip bounded scan (``max_chain`` iterations) over CSR link
+    tables; -1 when the key is absent.  Shared by oracle and kernel paths.
+    """
+    n_q = queries.shape[0]
+    safe_slot = jnp.clip(slot, 0, payload.shape[0] - 1)
+    out = jnp.where(found, jnp.take(payload, safe_slot), jnp.int32(-1))
+    valid = slot >= 0
+    start = jnp.take(link_offsets, safe_slot)
+    end = jnp.take(link_offsets, jnp.minimum(safe_slot + 1, link_offsets.shape[0] - 1))
+    if link_keys.shape[0] == 0:
+        return out
+    for t in range(max_chain):
+        idx = jnp.minimum(start + t, link_keys.shape[0] - 1)
+        in_chain = valid & ~found & (start + t < end)
+        hit = in_chain & (jnp.take(link_keys, idx) == queries)
+        out = jnp.where(hit, jnp.take(link_payloads, idx), out)
+    return out

@@ -1,0 +1,2 @@
+# Launchers: mesh construction, multi-pod dry-run, roofline analysis,
+# training and serving entry points.

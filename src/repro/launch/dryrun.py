@@ -1,0 +1,406 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers,
+compiles, and fits — without hardware.
+
+For each cell this script:
+  1. builds the mesh ((16,16) and/or (2,16,16)) of host placeholder devices,
+  2. builds abstract params/opt-state/caches (ShapeDtypeStruct — nothing
+     is allocated),
+  3. jits the train/prefill/serve step with in/out shardings,
+     ``.lower()``s and ``.compile()``s it,
+  4. records memory_analysis / cost_analysis / per-collective bytes
+     (parsed from the optimized HLO) into a JSON cell file consumed by
+     launch/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k --mesh both
+  python -m repro.launch.dryrun --all --mesh single [--out results/dryrun]
+"""
+
+import argparse
+import functools
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from repro.configs import ARCHS, SHAPES
+from repro.dist import (
+    activation_constrainer,
+    input_shardings,
+    param_pspecs,
+    param_shardings,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.optim import OPTIMIZERS
+from repro.optim.compress import residual_init
+
+# cells that are N/A by design (documented in DESIGN.md §4):
+# long_500k needs sub-quadratic attention.
+def applicable(cfg, shape) -> bool:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False
+    return True
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _bytes_of_shapes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str):
+    """Sum result bytes of every collective op in the optimized HLO.
+
+    Returns (total_bytes, per_kind dict, op_count).  HLO line form:
+      %x = bf16[2048,7168]{1,0} all-reduce(...), replica_groups=...
+    """
+    per_kind = {k: 0 for k in _COLLECTIVES}
+    count = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*(\(?.*?\)?)\s+(" + "|".join(_COLLECTIVES)
+                      + r")(-start|-done)?\(", stripped)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue  # counted at -start
+        shape_txt, kind = m.group(1), m.group(2)
+        b = _bytes_of_shapes(shape_txt)
+        per_kind[kind] += b
+        count += 1
+    return sum(per_kind.values()), per_kind, count
+
+
+def _constrain_factory(mesh, cfg, seq_axis=None):
+    return activation_constrainer(mesh, fsdp=cfg.fsdp, seq_axis=seq_axis)
+
+
+def build_step(model, shape, mesh, seq_axis=None, kv_shard="heads"):
+    """Returns (step_fn, abstract_args, in_shardings)."""
+    cfg = model.cfg
+    constrain = _constrain_factory(mesh, cfg, seq_axis)
+    laxes = model.logical_axes()
+    aparams = model.abstract_params()
+    pshard = param_shardings(laxes, mesh, fsdp=cfg.fsdp,
+                             abstract_tree=aparams)
+    repl = NamedSharding(mesh, PS())
+
+    if shape.kind == "train":
+        opt_init, opt_update = OPTIMIZERS[cfg.optimizer]
+        aopt = opt_init(aparams, abstract=True)
+        # opt-state sharding mirrors the param sharding (ZeRO falls out of
+        # FSDP param sharding); factored slots drop the reduced dim
+        pshard_flat = param_pspecs(laxes, mesh, fsdp=cfg.fsdp,
+                                   abstract_tree=aparams)
+        def mirror(tree):
+            return jax.tree.map(
+                lambda ps: NamedSharding(mesh, ps), tree,
+                is_leaf=lambda x: isinstance(x, PS))
+        if cfg.optimizer == "adamw":
+            oshard = {"m": mirror(pshard_flat), "v": mirror(pshard_flat),
+                      "step": repl}
+        else:
+            def slot_shard(ps, sds):
+                # factored slots (>=2-D params): vr drops the last dim,
+                # vc drops the second-to-last; 1-D/scalars keep full v
+                if len(sds.shape) >= 2:
+                    t = tuple(ps) + (None,) * (len(sds.shape) - len(tuple(ps)))
+                    return {
+                        "vr": NamedSharding(mesh, PS(*t[:-1])),
+                        "vc": NamedSharding(mesh, PS(*t[:-2], t[-1])),
+                        "m": NamedSharding(mesh, ps),
+                    }
+                return {"v": NamedSharding(mesh, ps),
+                        "m": NamedSharding(mesh, ps)}
+            oshard = {
+                "slots": jax.tree.map(slot_shard, pshard_flat, aparams,
+                                      is_leaf=lambda x: isinstance(x, PS)),
+                "step": repl,
+            }
+        binput = model.input_specs(shape)
+        bshard = input_shardings(binput, mesh)
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: model.loss_fn(p, batch, constrain))(params)
+            new_params, new_opt, gnorm = opt_update(
+                grads, opt_state, params, lr=3e-4)
+            return new_params, new_opt, {"loss": loss, "gnorm": gnorm}
+
+        jitted = jax.jit(
+            train_step,
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, repl),
+            donate_argnums=(0, 1),
+        )
+        return jitted, (aparams, aopt, binput)
+
+    if shape.kind == "prefill":
+        binput = model.input_specs(shape)
+        bshard = input_shardings(binput, mesh)
+        acache = model.cache_specs(shape.global_batch, _cache_len(cfg, shape))
+        cshard = _cache_shardings(acache, mesh, cfg, shape, kv_shard)
+
+        if model.prefill_fn is not None:
+            def prefill_step(params, batch, cache):
+                return model.prefill_fn(params, batch, cache, constrain)
+        else:  # enc-dec / recurrent: prefill == loss-less forward; reuse loss
+            def prefill_step(params, batch, cache):
+                batch = dict(batch)
+                batch["labels"] = batch["tokens"]
+                return model.loss_fn(params, batch, constrain), cache
+
+        jitted = jax.jit(
+            prefill_step,
+            in_shardings=(pshard, bshard, cshard),
+            out_shardings=(None, cshard),
+            donate_argnums=(2,),
+        )
+        return jitted, (aparams, binput, acache)
+
+    # decode: one new token against a seq_len KV cache
+    binput = model.input_specs(shape)
+    bshard = input_shardings(binput, mesh)
+    acache = model.cache_specs(shape.global_batch, _cache_len(cfg, shape))
+    cshard = _cache_shardings(acache, mesh, cfg, shape, kv_shard)
+
+    def serve_step(params, batch, cache, idx):
+        return model.decode_fn(params, batch, cache, idx, constrain)
+
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(pshard, bshard, cshard, repl),
+        out_shardings=(NamedSharding(mesh, PS()), cshard),
+        donate_argnums=(2,),
+    )
+    aidx = jax.ShapeDtypeStruct((), jnp.int32)
+    return jitted, (aparams, binput, acache, aidx)
+
+
+def _cache_len(cfg, shape) -> int:
+    """KV capacity: +frontend tokens for multimodal prefill (vlm)."""
+    extra = cfg.n_frontend_tokens if cfg.arch == "vlm" else 0
+    return shape.seq_len + extra
+
+
+def _cache_shardings(acache, mesh, cfg, shape, kv_shard: str = "heads"):
+    """KV/state caches: batch -> data axes, heads -> model.
+
+    long_500k (batch=1) shards the KV sequence over 'data' instead.
+    ``kv_shard='seq'`` (§Perf hillclimb) shards the cache's sequence dim
+    over the model axis instead of heads — context-parallel decode; fixes
+    the kv_heads<16 replication blow-up (GQA archs).
+    """
+    axes_avail = set(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data_axes = tuple(a for a in ("pod", "data") if a in axes_avail)
+    data_size = int(np.prod([sizes[a] for a in data_axes]))
+    model_size = sizes.get("model", 1)
+    long_ctx = shape.global_batch < len(jax.devices()) // 16
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        spec = [None] * nd
+        # batch dim: first dim equal to global_batch, if shardable
+        bdim = None
+        if shape.global_batch % data_size == 0:
+            try:
+                bdim = leaf.shape.index(shape.global_batch)
+                spec[bdim] = data_axes
+            except ValueError:
+                bdim = None
+        cache_len = _cache_len(cfg, shape)
+        if kv_shard == "seq" and cache_len in leaf.shape \
+                and "model" in axes_avail and cache_len % model_size == 0:
+            tdim = leaf.shape.index(cache_len)
+            spec[tdim] = "model"
+        else:
+            # heads dim: shard over model when divisible
+            for d in range(nd):
+                if spec[d] is None and d != bdim and leaf.shape[d] in (
+                        cfg.n_kv, cfg.n_heads) and "model" in axes_avail \
+                        and leaf.shape[d] % model_size == 0:
+                    spec[d] = "model"
+                    break
+        if long_ctx and cache_len in leaf.shape:
+            tdim = leaf.shape.index(cache_len)
+            if spec[tdim] is None and cache_len % data_size == 0:
+                spec[tdim] = data_axes
+        return NamedSharding(mesh, PS(*spec))
+
+    return jax.tree.map(one, acache)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             seq_axis=None, tag: str = "baseline", skip_existing: bool = False,
+             scan_layers: bool = False, layers: int = 0,
+             kv_shard: str = "heads", moe_impl: str = "gspmd",
+             no_fsdp: bool = False):
+    import dataclasses as _dc
+    cfg = ARCHS[arch]
+    # default: UNROLLED layer stacks — XLA cost analysis counts while-loop
+    # (scan) bodies only once, which silently undercounts flops/bytes/
+    # collectives by ~n_layers; the scan variant (tag "scan") proves the
+    # production compile path separately.
+    cfg = _dc.replace(cfg, scan_layers=scan_layers)
+    if layers:  # reduced-depth probe for per-layer cost extrapolation
+        cfg = _dc.replace(cfg, n_layers=layers)
+    cfg = _dc.replace(cfg, moe_impl=moe_impl)
+    if no_fsdp:
+        cfg = _dc.replace(cfg, fsdp=False)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (
+        f"__{tag}" if tag != "baseline" else "")
+    out_path = os.path.join(out_dir, cell_id + ".json")
+    os.makedirs(out_dir, exist_ok=True)
+    if skip_existing and os.path.exists(out_path):
+        with open(out_path) as f:
+            rec = json.load(f)
+        if rec.get("status") in ("ok", "n/a"):
+            print(f"[dryrun] {cell_id}: cached ({rec['status']})")
+            return rec
+
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+           "status": "n/a", "layers_used": layers or ARCHS[arch].n_layers,
+           "scan_layers": scan_layers}
+    if not applicable(cfg, shape):
+        rec["reason"] = "long_500k requires sub-quadratic attention (DESIGN.md §4)"
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[dryrun] {cell_id}: N/A by design")
+        return rec
+
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        with jax.set_mesh(mesh):
+            jitted, aargs = build_step(model, shape, mesh, seq_axis=seq_axis,
+                                       kv_shard=kv_shard)
+            lowered = jitted.lower(*aargs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            cbytes, per_kind, n_coll = collective_bytes(hlo)
+
+            rec.update(
+                status="ok",
+                lower_s=round(t_lower, 1),
+                compile_s=round(t_compile, 1),
+                n_devices=int(mesh.devices.size),
+                params=model.param_count(),
+                active_params=model.active_param_count(),
+                flops_per_device=float(cost.get("flops", -1.0)) if cost else -1.0,
+                bytes_per_device=float(cost.get("bytes accessed", -1.0))
+                if cost else -1.0,
+                collective_bytes_per_device=int(cbytes),
+                collective_ops=n_coll,
+                collectives=per_kind,
+            )
+            if mem is not None:
+                for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                          "output_size_in_bytes", "alias_size_in_bytes",
+                          "generated_code_size_in_bytes"):
+                    v = getattr(mem, k, None)
+                    if v is not None:
+                        rec[k] = int(v)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        print(f"[dryrun] {cell_id}: FAILED {type(e).__name__}: {e}")
+
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if rec["status"] == "ok":
+        print(f"[dryrun] {cell_id}: ok  flops/dev={rec['flops_per_device']:.3e}"
+              f" bytes/dev={rec['bytes_per_device']:.3e}"
+              f" coll/dev={rec['collective_bytes_per_device']:.3e}"
+              f" (lower {rec['lower_s']}s compile {rec['compile_s']}s)")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--seq-axis", default=None,
+                    help="mesh axis to shard activations' seq dim over")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--scan-layers", action="store_true",
+                    help="use lax.scan over layers (production compile "
+                         "path; undercounts cost analysis)")
+    ap.add_argument("--layers", type=int, default=0,
+                    help="override layer count (reduced-depth cost probe)")
+    ap.add_argument("--kv-shard", choices=["heads", "seq"], default="heads",
+                    help="decode cache sharding: heads (baseline) or seq "
+                         "(context-parallel; §Perf)")
+    ap.add_argument("--moe-impl", choices=["gspmd", "ep"], default="gspmd",
+                    help="MoE dispatch: GSPMD-derived (baseline) or "
+                         "explicit shard_map all_to_all EP (§Perf)")
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="disable FSDP param sharding (§Perf: trades "
+                         "memory for the weight-regather collectives)")
+    args = ap.parse_args()
+
+    cells = []
+    archs = sorted(ARCHS) if args.all or not args.arch else [args.arch]
+    shapes = sorted(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    failed = 0
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                rec = run_cell(a, s, mp, args.out, seq_axis=args.seq_axis,
+                               tag=args.tag,
+                               skip_existing=args.skip_existing,
+                               scan_layers=args.scan_layers,
+                               layers=args.layers, kv_shard=args.kv_shard,
+                               moe_impl=args.moe_impl, no_fsdp=args.no_fsdp)
+                cells.append(rec)
+                failed += rec["status"] == "error"
+    print(f"[dryrun] {len(cells)} cells, {failed} failures")
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Model substrate: the 10 assigned architectures in functional JAX.
+
+base.py      param specs + logical axes + shared layers (GQA, RoPE, MLP)
+moe.py       top-k capacity MoE (GSPMD baseline + shard_map EP variant)
+ssm.py       Mamba-2 / SSD chunked scan + O(1) decode
+xlstm.py     mLSTM (chunked) + sLSTM (sequential scan) cells
+lm.py        decoder-only LM (dense/MoE) with scan-over-layers + KV cache
+encdec.py    whisper-style encoder-decoder (stub audio frontend)
+zamba.py     Mamba2 backbone + shared attention block (hybrid)
+xlstm_lm.py  xLSTM block stack
+vlm.py       InternVL2 (stub ViT frontend) over the LM backbone
+api.py       unified Model facade used by launch/train/serve/dryrun
+"""
+
+from .api import Model, build_model
+
+__all__ = ["Model", "build_model"]

@@ -1,0 +1,194 @@
+"""Unified model API: one object per architecture family.
+
+``build_model(cfg)`` returns a :class:`Model` exposing:
+
+  param_specs / abstract_params / logical_axes / init_params
+  loss_fn(params, batch, constrain)           -> scalar
+  prefill_fn(params, batch, cache, constrain) -> (logits, cache)   [if any]
+  decode_fn(params, batch, cache, idx, constrain) -> (logits, cache)
+  cache_specs(batch, max_len) / init_caches(batch, max_len)
+  input_specs(shape)  -> ShapeDtypeStruct batch for the dry-run
+  input_sample(shape, key) -> real batch for smoke tests
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import base as _base
+from . import encdec as _encdec
+from . import lm as _lm
+from . import vlm as _vlm
+from . import xlstm_lm as _xlstm
+from . import zamba as _zamba
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    _specs: Any
+    loss_fn: Callable
+    decode_fn: Optional[Callable] = None
+    prefill_fn: Optional[Callable] = None
+    cache_specs: Optional[Callable] = None
+    init_caches: Optional[Callable] = None
+
+    def param_specs(self):
+        return self._specs
+
+    def abstract_params(self):
+        return _base.abstract_params(self._specs)
+
+    def logical_axes(self):
+        return _base.logical_axes(self._specs)
+
+    def init_params(self, key):
+        return _base.init_params(self._specs, key)
+
+    def param_count(self) -> int:
+        return sum(
+            int(np.prod(s.shape))
+            for s in jax.tree.leaves(self.abstract_params())
+        )
+
+    def active_param_count(self) -> int:
+        """6*N*D accounting for MoE: routed-expert share scaled by top_k/E."""
+        total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+            self.abstract_params()
+        )[0]:
+            n = int(np.prod(leaf.shape))
+            keys = "/".join(str(p) for p in path)
+            if self.cfg.moe and ("w_gate" in keys or "w_up" in keys
+                                 or "w_down" in keys) and "moe" in keys:
+                n = n * self.cfg.moe.top_k // self.cfg.moe.n_experts
+            total += n
+        return total
+
+    # ------------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """Dry-run stand-ins: weak-type-correct, shardable, no allocation."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        tok = lambda b, s: jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if shape.kind == "train":
+            batch = {"tokens": tok(B, S), "labels": tok(B, S)}
+            if cfg.arch == "encdec":
+                batch["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+            if cfg.arch == "vlm":
+                batch["patches"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_frontend_tokens, cfg.d_frontend), jnp.bfloat16)
+            return batch
+        if shape.kind == "prefill":
+            batch = {"tokens": tok(B, S)}
+            if cfg.arch == "encdec":
+                batch["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+            if cfg.arch == "vlm":
+                batch["patches"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_frontend_tokens, cfg.d_frontend), jnp.bfloat16)
+            return batch
+        if shape.kind == "decode":
+            return {"tokens": tok(B, 1)}
+        raise KeyError(shape.kind)
+
+    def input_sample(self, shape: ShapeConfig, key) -> Dict[str, Any]:
+        specs = self.input_specs(shape)
+        out = {}
+        for name, s in specs.items():
+            key, k = jax.random.split(key)
+            if jnp.issubdtype(s.dtype, jnp.integer):
+                out[name] = jax.random.randint(k, s.shape, 0, self.cfg.vocab,
+                                               dtype=s.dtype)
+            else:
+                out[name] = jax.random.normal(k, s.shape, jnp.float32).astype(
+                    s.dtype)
+        return out
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.arch == "lm":
+        return Model(
+            cfg=cfg,
+            _specs=_lm.param_specs(cfg),
+            loss_fn=lambda p, b, c=None: _lm.loss_fn(p, b, cfg, c),
+            prefill_fn=lambda p, b, cache, c=None: _lm.prefill(
+                p, b["tokens"], cache, cfg, c),
+            decode_fn=lambda p, b, cache, idx, c=None: _lm.decode_step(
+                p, b["tokens"], cache, idx, cfg, c),
+            cache_specs=lambda batch, max_len: _lm.kv_cache_specs(
+                cfg, batch, max_len),
+            init_caches=lambda batch, max_len: _lm.init_kv_cache(
+                cfg, batch, max_len),
+        )
+    if cfg.arch == "vlm":
+        return Model(
+            cfg=cfg,
+            _specs=_vlm.param_specs(cfg),
+            loss_fn=lambda p, b, c=None: _vlm.loss_fn(p, b, cfg, c),
+            prefill_fn=lambda p, b, cache, c=None: _vlm.prefill(
+                p, b, cache, cfg, c),
+            decode_fn=lambda p, b, cache, idx, c=None: _vlm.decode_step(
+                p, b["tokens"], cache, idx, cfg, c),
+            cache_specs=lambda batch, max_len: _vlm.kv_cache_specs(
+                cfg, batch, max_len),
+            init_caches=lambda batch, max_len: _vlm.init_kv_cache(
+                cfg, batch, max_len),
+        )
+    if cfg.arch == "encdec":
+        def enc_cache_specs(batch, max_len):
+            shape = (cfg.n_layers, batch, cfg.n_kv, max_len, cfg.head_dim_)
+            sds = jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+            F = cfg.n_frontend_tokens
+            cross = jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, cfg.n_kv, F, cfg.head_dim_),
+                jnp.bfloat16)
+            return {"k": sds, "v": sds, "ck": cross, "cv": cross}
+
+        def enc_init_caches(batch, max_len):
+            shape = (cfg.n_layers, batch, cfg.n_kv, max_len, cfg.head_dim_)
+            F = cfg.n_frontend_tokens
+            z = jnp.zeros((cfg.n_layers, batch, cfg.n_kv, F, cfg.head_dim_),
+                          jnp.bfloat16)
+            return {"k": jnp.zeros(shape, jnp.bfloat16),
+                    "v": jnp.zeros(shape, jnp.bfloat16), "ck": z, "cv": z}
+
+        return Model(
+            cfg=cfg,
+            _specs=_encdec.param_specs(cfg),
+            loss_fn=lambda p, b, c=None: _encdec.loss_fn(p, b, cfg, c),
+            decode_fn=lambda p, b, cache, idx, c=None: _encdec.decode_step(
+                p, b["tokens"], cache, idx, cfg, c),
+            cache_specs=enc_cache_specs,
+            init_caches=enc_init_caches,
+        )
+    if cfg.arch == "zamba":
+        return Model(
+            cfg=cfg,
+            _specs=_zamba.param_specs(cfg),
+            loss_fn=lambda p, b, c=None: _zamba.loss_fn(p, b, cfg, c),
+            decode_fn=lambda p, b, cache, idx, c=None: _zamba.decode_step(
+                p, b["tokens"], cache, idx, cfg, c),
+            cache_specs=lambda batch, max_len: _zamba.cache_specs(
+                cfg, batch, max_len),
+            init_caches=lambda batch, max_len: _zamba.init_caches(
+                cfg, batch, max_len),
+        )
+    if cfg.arch == "xlstm":
+        return Model(
+            cfg=cfg,
+            _specs=_xlstm.param_specs(cfg),
+            loss_fn=lambda p, b, c=None: _xlstm.loss_fn(p, b, cfg, c),
+            decode_fn=lambda p, b, cache, idx, c=None: _xlstm.decode_step(
+                p, b["tokens"], cache, idx, cfg, c),
+            cache_specs=lambda batch, max_len: _xlstm.cache_specs(cfg, batch),
+            init_caches=lambda batch, max_len: _xlstm.init_caches(cfg, batch),
+        )
+    raise KeyError(cfg.arch)

@@ -1,0 +1,250 @@
+"""Functional model substrate: param specs, logical axes, common layers.
+
+No flax — params are plain pytrees of jnp arrays.  Every parameter is
+declared as a :class:`P` spec carrying shape, dtype, init scale and
+*logical axis names*; ``repro.dist.partitioning`` maps logical names to
+mesh axes (the single place sharding policy lives).
+
+Logical axis vocabulary:
+  "batch"   tokens/batch dim            -> ("pod", "data")
+  "vocab"   vocabulary                  -> "model"
+  "embed"   d_model                     -> None (or "data" under FSDP)
+  "heads"   attention heads             -> "model"
+  "kv"      kv heads                    -> "model"
+  "ffn"     mlp hidden                  -> "model"
+  "experts" MoE experts                 -> "model"
+  "layers"  scan-stacked layer dim      -> None
+  everything else                       -> None
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Parameter spec: shape + logical axes (+dtype, init scale)."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: Any = jnp.bfloat16
+    scale: float = 1.0  # stddev multiplier over 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def abstract_params(spec_tree) -> Params:
+    """ShapeDtypeStruct tree (no allocation) from a spec tree."""
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def logical_axes(spec_tree):
+    """Tree of logical-axis tuples, same structure as the params."""
+    return jax.tree.map(
+        lambda p: p.axes, spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def init_params(spec_tree, key) -> Params:
+    """Real initialization (smoke tests / examples; dry-run never calls)."""
+    leaves, treedef = jax.tree.flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for p, k in zip(leaves, keys):
+        if len(p.shape) == 0:
+            out.append(jnp.zeros(p.shape, p.dtype))
+            continue
+        fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+        std = p.scale / np.sqrt(max(fan_in, 1))
+        out.append((jax.random.normal(k, p.shape, jnp.float32) * std).astype(p.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# layers (pure functions over param dicts)
+# ---------------------------------------------------------------------------
+
+
+VOCAB_PAD = 256
+
+
+def padded_vocab(vocab: int) -> int:
+    """Vocab rounded up so embedding/logits shard over the model axis;
+    padded logit columns are masked to -inf in logits_fn."""
+    return -(-vocab // VOCAB_PAD) * VOCAB_PAD
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Rotary embedding.  x: (..., S, H, Dh), positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    angles = angles[..., None, :]  # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def attention_specs(d_model, n_heads, n_kv, head_dim, qkv_bias=False):
+    s = {
+        "wq": P((d_model, n_heads, head_dim), ("embed", "heads", None)),
+        "wk": P((d_model, n_kv, head_dim), ("embed", "kv", None)),
+        "wv": P((d_model, n_kv, head_dim), ("embed", "kv", None)),
+        "wo": P((n_heads, head_dim, d_model), ("heads", None, "embed")),
+    }
+    if qkv_bias:
+        s["bq"] = P((n_heads, head_dim), ("heads", None))
+        s["bk"] = P((n_kv, head_dim), ("kv", None))
+        s["bv"] = P((n_kv, head_dim), ("kv", None))
+    return s
+
+
+def gqa_attention(
+    params,
+    x,                      # (B, S, D)
+    positions,              # (B, S)
+    *,
+    causal: bool = True,
+    rope_theta: float = 10_000.0,
+    kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # (B,KV,T,Dh) x2
+    cache_index: Optional[jax.Array] = None,  # scalar: #valid cache entries
+    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,  # cross-attn
+    attn_mask: Optional[jax.Array] = None,  # precomputed additive (B,S,T)
+):
+    """Grouped-query attention with optional KV cache / cross-attention.
+
+    Returns (out (B,S,D), new_kv or None).  Cache layout (B, KV, T, Dh).
+    """
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if "bq" in params:
+        q = q + params["bq"]
+    if kv_override is not None:
+        k, v = kv_override
+        new_kv = None
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+        if "bk" in params:
+            k = k + params["bk"]
+            v = v + params["bv"]
+        k = rope(k, positions, rope_theta)
+        k = jnp.swapaxes(k, 1, 2)  # (B, KV, S, Dh)
+        v = jnp.swapaxes(v, 1, 2)
+        if kv_cache is not None:
+            ck, cv = kv_cache
+            k = jax.lax.dynamic_update_slice(
+                ck, k.astype(ck.dtype), (0, 0, cache_index, 0)
+            )
+            v = jax.lax.dynamic_update_slice(
+                cv, v.astype(cv.dtype), (0, 0, cache_index, 0)
+            )
+        new_kv = (k, v)
+    q = rope(q, positions, rope_theta)
+
+    n_heads = q.shape[2]
+    n_kv = k.shape[1]
+    group = n_heads // n_kv
+    T = k.shape[2]
+    # fold the softmax scale into q: saves one full pass over the S x T
+    # score tensor per layer (bytes-visible in the roofline)
+    qh = (q * (1.0 / np.sqrt(q.shape[-1]))).astype(q.dtype)
+    qh = qh.reshape(B, S, n_kv, group, -1)
+    scores = jnp.einsum("bsngk,bntk->bngst", qh, k).astype(jnp.float32)
+
+    if attn_mask is not None:
+        # hoisted additive mask: built ONCE per forward, reused by every
+        # layer (the per-layer bool mask + where costs n_layers * S*T)
+        scores = scores + attn_mask[:, None, None, :, :]
+    else:
+        # mask[b, s_query, t_key]; positions are ABSOLUTE (shared w/ RoPE)
+        key_pos = jnp.arange(T)
+        if kv_cache is not None:
+            valid = key_pos[None, None, :] < (cache_index + S)
+            if causal:
+                mask = valid & (key_pos[None, None, :]
+                                <= positions[:, :, None])
+            else:
+                mask = jnp.broadcast_to(valid, (B, S, T))
+        elif causal:
+            mask = positions[:, None, :] <= positions[:, :, None]
+        else:
+            mask = None
+        if mask is not None:
+            scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bngst,bntk->bsngk", probs, v)
+    out = out.reshape(B, S, n_heads, -1)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return out, new_kv
+
+
+def mlp_specs(d_model, d_ff, gated=True):
+    if gated:
+        return {
+            "w_gate": P((d_model, d_ff), ("embed", "ffn")),
+            "w_up": P((d_model, d_ff), ("embed", "ffn")),
+            "w_down": P((d_ff, d_model), ("ffn", "embed")),
+        }
+    return {
+        "w_up": P((d_model, d_ff), ("embed", "ffn")),
+        "w_down": P((d_ff, d_model), ("ffn", "embed")),
+    }
+
+
+def mlp(params, x):
+    if "w_gate" in params:
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Mean CE over valid tokens; logits (..., V) f32-upcast."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def causal_additive_mask(positions, T: Optional[int] = None,
+                         cache_index=None, S: Optional[int] = None):
+    """Additive f32 mask built once per forward (hoisted out of layers)."""
+    if T is None:
+        mask = positions[:, None, :] <= positions[:, :, None]
+    else:
+        key_pos = jnp.arange(T)
+        valid = key_pos[None, None, :] < (cache_index + S)
+        mask = valid & (key_pos[None, None, :] <= positions[:, :, None])
+    return jnp.where(mask, 0.0, -1e30).astype(jnp.float32)

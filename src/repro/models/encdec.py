@@ -1,0 +1,171 @@
+"""Whisper-style encoder-decoder (audio frontend stubbed per assignment).
+
+Encoder: bidirectional self-attention over precomputed frame embeddings
+(the conv stem is a stub — ``input_specs`` supplies (B, F, D) frames).
+Decoder: causal self-attention + cross-attention to encoder output.
+Serving: decoder decode step with self-KV cache + precomputed cross-KV.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .base import (
+    P,
+    attention_specs,
+    padded_vocab,
+    gqa_attention,
+    mlp,
+    mlp_specs,
+    rms_norm,
+    softmax_xent,
+)
+from .lm import REMAT_POLICIES, _stack_specs, logits_fn
+
+
+def _enc_layer_specs(cfg):
+    return {
+        "ln_attn": P((cfg.d_model,), ("embed",)),
+        "ln_mlp": P((cfg.d_model,), ("embed",)),
+        "attn": attention_specs(cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                cfg.head_dim_),
+        "mlp": mlp_specs(cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def _dec_layer_specs(cfg):
+    s = _enc_layer_specs(cfg)
+    s["ln_cross"] = P((cfg.d_model,), ("embed",))
+    s["cross"] = attention_specs(cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                 cfg.head_dim_)
+    return s
+
+
+def param_specs(cfg):
+    vp = padded_vocab(cfg.vocab)
+    return {
+        "embed": P((vp, cfg.d_model), ("vocab", "embed")),
+        "pos_enc": P((cfg.n_frontend_tokens, cfg.d_model), (None, "embed")),
+        "ln_enc": P((cfg.d_model,), ("embed",)),
+        "ln_f": P((cfg.d_model,), ("embed",)),
+        "enc_layers": _stack_specs(_enc_layer_specs(cfg), cfg.n_enc_layers),
+        "dec_layers": _stack_specs(_dec_layer_specs(cfg), cfg.n_layers),
+        "lm_head": P((cfg.d_model, vp), ("embed", "vocab")),
+    }
+
+
+def encode(params, frames, cfg, constrain):
+    """frames: (B, F, D) stub frame embeddings -> encoder states."""
+    x = frames + params["pos_enc"][None, : frames.shape[1]]
+    x = constrain(x, ("batch", None, "embed"))
+    B, F = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(F)[None, :], (B, F))
+    policy = REMAT_POLICIES[cfg.remat]
+
+    def body(lp, h):
+        a, _ = gqa_attention(lp["attn"], rms_norm(h, lp["ln_attn"]),
+                             positions, causal=False,
+                             rope_theta=cfg.rope_theta)
+        h = constrain(h + a, ("batch", None, "embed"))
+        return h + mlp(lp["mlp"], rms_norm(h, lp["ln_mlp"]))
+
+    def scan_body(carry, lp):
+        fn = body if policy is None else jax.checkpoint(body, policy=policy)
+        return fn(lp, carry), ()
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(scan_body, x, params["enc_layers"])
+    else:
+        for i in range(cfg.n_enc_layers):
+            x, _ = scan_body(x, jax.tree.map(lambda t: t[i],
+                                             params["enc_layers"]))
+    return rms_norm(x, params["ln_enc"])
+
+
+def _cross_kv(lp, enc_out):
+    k = jnp.einsum("bfd,dhk->bhfk", enc_out, lp["cross"]["wk"])
+    v = jnp.einsum("bfd,dhk->bhfk", enc_out, lp["cross"]["wv"])
+    return k, v
+
+
+def _dec_layer(cfg, constrain, lp, x, positions, enc_out=None,
+               kv_cache=None, cache_index=None, cross_kv=None):
+    a, new_kv = gqa_attention(lp["attn"], rms_norm(x, lp["ln_attn"]),
+                              positions, causal=True,
+                              rope_theta=cfg.rope_theta,
+                              kv_cache=kv_cache, cache_index=cache_index)
+    x = constrain(x + a, ("batch", None, "embed"))
+    if cross_kv is None:
+        cross_kv = _cross_kv(lp, enc_out)
+    c, _ = gqa_attention(lp["cross"], rms_norm(x, lp["ln_cross"]), positions,
+                         causal=False, rope_theta=cfg.rope_theta,
+                         kv_override=cross_kv)
+    x = constrain(x + c, ("batch", None, "embed"))
+    h = mlp(lp["mlp"], rms_norm(x, lp["ln_mlp"]))
+    return constrain(x + h, ("batch", None, "embed")), new_kv
+
+
+def loss_fn(params, batch, cfg, constrain=None):
+    """batch: frames (B,F,D), tokens (B,S), labels (B,S) [, mask]."""
+    if constrain is None:
+        constrain = lambda t, axes: t
+    enc_out = encode(params, batch["frames"], cfg, constrain)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    x = constrain(x, ("batch", None, "embed"))
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    policy = REMAT_POLICIES[cfg.remat]
+    body = functools.partial(_dec_layer, cfg, constrain)
+
+    def scan_body(carry, lp):
+        fn = body if policy is None else jax.checkpoint(body, policy=policy)
+        y, _ = fn(lp, carry, positions, enc_out=enc_out)
+        return y, ()
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(scan_body, x, params["dec_layers"])
+    else:
+        for i in range(cfg.n_layers):
+            x, _ = scan_body(x, jax.tree.map(lambda t: t[i],
+                                             params["dec_layers"]))
+    hidden = rms_norm(x, params["ln_f"])
+    logits = logits_fn(params, hidden, cfg, constrain)
+    return softmax_xent(logits, batch["labels"], batch.get("mask"))
+
+
+def decode_step(params, tokens, caches, cache_index, cfg, constrain=None):
+    """One decoder step.  caches: {"k","v" (L,B,KV,T,Dh), "ck","cv"
+    (L,B,KV,F,Dh) precomputed cross-KV}."""
+    if constrain is None:
+        constrain = lambda t, axes: t
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, ("batch", None, "embed"))
+    B = x.shape[0]
+    positions = jnp.broadcast_to(cache_index[None, None], (B, 1))
+    body = functools.partial(_dec_layer, cfg, constrain)
+
+    def scan_body(carry, inp):
+        lp, ck, cv, xk, xv = inp
+        y, new_kv = body(lp, carry, positions, kv_cache=(ck, cv),
+                         cache_index=cache_index, cross_kv=(xk, xv))
+        return y, (new_kv[0].astype(ck.dtype), new_kv[1].astype(cv.dtype))
+
+    ins = (params["dec_layers"], caches["k"], caches["v"],
+           caches["ck"], caches["cv"])
+    if cfg.scan_layers:
+        x, (nk, nv) = jax.lax.scan(scan_body, x, ins)
+    else:
+        nks, nvs = [], []
+        for i in range(cfg.n_layers):
+            x, (nk1, nv1) = scan_body(
+                x, jax.tree.map(lambda t: t[i], ins))
+            nks.append(nk1)
+            nvs.append(nv1)
+        nk, nv = jnp.stack(nks), jnp.stack(nvs)
+    hidden = rms_norm(x, params["ln_f"])
+    logits = logits_fn(params, hidden, cfg, constrain)[:, 0]
+    return logits, {**caches, "k": nk, "v": nv}

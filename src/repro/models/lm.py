@@ -1,0 +1,228 @@
+"""Decoder-only LM: dense GQA or MoE FFN, scan-over-layers, KV-cache serving.
+
+Covers granite-moe-1b-a400m, kimi-k2-1t-a32b, yi-9b, internlm2-1.8b,
+minicpm-2b, qwen1.5-32b, and serves as the text backbone for
+internvl2-2b (vlm.py) and the decoder of whisper-base (encdec.py).
+
+Layer stack is a ``lax.scan`` over stacked layer params (hallmark of
+compile-time-sane big-model JAX) with a configurable remat policy.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import moe as _moe
+from .base import (
+    P,
+    attention_specs,
+    causal_additive_mask,
+    padded_vocab,
+    gqa_attention,
+    mlp,
+    mlp_specs,
+    rms_norm,
+    softmax_xent,
+)
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+def _stack_specs(layer_specs: Dict[str, Any], n_layers: int):
+    """Prefix every per-layer spec with a scan ('layers') axis."""
+    return jax.tree.map(
+        lambda p: P((n_layers, *p.shape), ("layers", *p.axes), p.dtype, p.scale),
+        layer_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def layer_specs(cfg):
+    head_dim = cfg.head_dim or cfg.d_model // cfg.n_heads
+    s = {
+        "ln_attn": P((cfg.d_model,), ("embed",)),
+        "ln_mlp": P((cfg.d_model,), ("embed",)),
+        "attn": attention_specs(cfg.d_model, cfg.n_heads, cfg.n_kv, head_dim,
+                                cfg.qkv_bias),
+    }
+    if cfg.moe is not None:
+        s["moe"] = _moe.moe_specs(cfg.d_model, cfg.moe.d_ff_expert,
+                                  cfg.moe.n_experts)
+    else:
+        s["mlp"] = mlp_specs(cfg.d_model, cfg.d_ff)
+    return s
+
+
+def param_specs(cfg):
+    vp = padded_vocab(cfg.vocab)
+    specs = {
+        "embed": P((vp, cfg.d_model), ("vocab", "embed"), scale=1.0),
+        "ln_f": P((cfg.d_model,), ("embed",)),
+        "layers": _stack_specs(layer_specs(cfg), cfg.n_layers),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P((cfg.d_model, vp), ("embed", "vocab"))
+    return specs
+
+
+def _layer_fwd(cfg, constrain, lp, x, positions, kv_cache=None,
+               cache_index=None, attn_mask=None):
+    """One transformer layer.  Returns (x, new_kv)."""
+    h, new_kv = gqa_attention(
+        lp["attn"], rms_norm(x, lp["ln_attn"]), positions,
+        causal=True, rope_theta=cfg.rope_theta,
+        kv_cache=kv_cache, cache_index=cache_index, attn_mask=attn_mask,
+    )
+    x = constrain(x + h, ("batch", None, "embed"))
+    h2 = rms_norm(x, lp["ln_mlp"])
+    if cfg.moe is not None:
+        mesh = getattr(constrain, "mesh", None)
+        if cfg.moe_impl == "ep" and mesh is not None:
+            h2 = _moe.moe_ep_shardmap(
+                lp["moe"], h2, top_k=cfg.moe.top_k, mesh=mesh,
+                capacity_factor=cfg.moe.capacity_factor)
+        else:
+            h2 = _moe.moe_gspmd(lp["moe"], h2, top_k=cfg.moe.top_k,
+                                capacity_factor=cfg.moe.capacity_factor,
+                                constrain=constrain)
+    else:
+        h2 = mlp(lp["mlp"], h2)
+    return constrain(x + h2, ("batch", None, "embed")), new_kv
+
+
+def forward(params, tokens, cfg, constrain=None, *, embedded=None):
+    """Training/prefill-style forward (no cache).  Returns hidden (B,S,D)."""
+    if constrain is None:
+        constrain = lambda t, axes: t
+    if embedded is None:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    else:
+        x = embedded
+    x = constrain(x, ("batch", None, "embed"))
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    attn_mask = causal_additive_mask(positions)  # hoisted out of layers
+
+    body = functools.partial(_layer_fwd, cfg, constrain)
+    policy = REMAT_POLICIES[cfg.remat]
+    if policy is not None or cfg.remat == "none":
+        def scan_body(carry, lp):
+            fn = body if policy is None else jax.checkpoint(body, policy=policy)
+            y, _ = fn(lp, carry, positions, attn_mask=attn_mask)
+            return y, ()
+    else:  # pragma: no cover
+        raise KeyError(cfg.remat)
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(scan_body, x, params["layers"])
+    else:
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda t: t[i], params["layers"])
+            x, _ = scan_body(x, lp)
+    return rms_norm(x, params["ln_f"])
+
+
+def logits_fn(params, hidden, cfg, constrain=None):
+    if constrain is None:
+        constrain = lambda t, axes: t
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", hidden, head)
+    vp = head.shape[-1]
+    if vp != cfg.vocab:  # mask padded vocab columns out of the softmax
+        pad_mask = jnp.where(jnp.arange(vp) < cfg.vocab, 0.0, -1e30)
+        logits = logits + pad_mask.astype(logits.dtype)
+    return constrain(logits, ("batch", None, "vocab"))
+
+
+def loss_fn(params, batch, cfg, constrain=None):
+    """Next-token CE.  batch: {tokens (B,S) i32, labels (B,S) i32, mask}."""
+    hidden = forward(params, batch["tokens"], cfg, constrain)
+    logits = logits_fn(params, hidden, cfg, constrain)
+    return softmax_xent(logits, batch["labels"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill builds the cache, decode appends one token
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Per-layer cache tuple: no (L, ...) stacking — avoids the giant
+    slice/stack ops a stacked layout costs in unrolled serving graphs."""
+    head_dim = cfg.head_dim or cfg.d_model // cfg.n_heads
+    shape = (batch, cfg.n_kv, max_len, head_dim)
+    return tuple({"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+                 for _ in range(cfg.n_layers))
+
+
+def kv_cache_specs(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    head_dim = cfg.head_dim or cfg.d_model // cfg.n_heads
+    shape = (batch, cfg.n_kv, max_len, head_dim)
+    sds = jax.ShapeDtypeStruct(shape, dtype)
+    return tuple({"k": sds, "v": sds} for _ in range(cfg.n_layers))
+
+
+def _cached_stack(params, cfg, constrain, x, positions, cache, cache_index):
+    """Layer stack threading per-layer KV caches (tuple of dicts).
+
+    Scan path stacks the per-layer caches (production compile path on
+    TPU); the unrolled path consumes them directly — zero slice/stack
+    traffic, which is what the dry-run accounting sees."""
+    body = functools.partial(_layer_fwd, cfg, constrain)
+
+    def scan_body(carry, inp):
+        lp, ck, cv = inp
+        y, new_kv = body(lp, carry, positions, kv_cache=(ck, cv),
+                         cache_index=cache_index)
+        return y, (new_kv[0].astype(ck.dtype), new_kv[1].astype(cv.dtype))
+
+    if cfg.scan_layers:
+        ks = jnp.stack([c["k"] for c in cache])
+        vs = jnp.stack([c["v"] for c in cache])
+        x, (nk, nv) = jax.lax.scan(scan_body, x, (params["layers"], ks, vs))
+        return x, tuple({"k": nk[i], "v": nv[i]}
+                        for i in range(cfg.n_layers))
+    out = []
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda t: t[i], params["layers"])
+        x, (nk, nv) = scan_body(x, (lp, cache[i]["k"], cache[i]["v"]))
+        out.append({"k": nk, "v": nv})
+    return x, tuple(out)
+
+
+def prefill(params, tokens, cache, cfg, constrain=None, *, embedded=None):
+    """Prefill: runs the full prompt, fills cache.  Returns (logits_last,
+    cache).  tokens: (B, S)."""
+    if constrain is None:
+        constrain = lambda t, axes: t
+    x = jnp.take(params["embed"], tokens, axis=0) if embedded is None else embedded
+    x = constrain(x, ("batch", None, "embed"))
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x, cache = _cached_stack(params, cfg, constrain, x, positions, cache,
+                             jnp.int32(0))
+    hidden = rms_norm(x[:, -1:], params["ln_f"])
+    return logits_fn(params, hidden, cfg, constrain)[:, 0], cache
+
+
+def decode_step(params, tokens, cache, cache_index, cfg, constrain=None):
+    """One decode step.  tokens: (B, 1); cache_index: scalar i32 (#valid).
+    Returns (logits (B, V), cache)."""
+    if constrain is None:
+        constrain = lambda t, axes: t
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, ("batch", None, "embed"))
+    B = x.shape[0]
+    positions = jnp.broadcast_to(cache_index[None, None], (B, 1))
+    x, cache = _cached_stack(params, cfg, constrain, x, positions, cache,
+                             cache_index)
+    hidden = rms_norm(x, params["ln_f"])
+    return logits_fn(params, hidden, cfg, constrain)[:, 0], cache

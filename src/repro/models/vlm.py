@@ -1,0 +1,60 @@
+"""InternVL2-2B: stub InternViT frontend + InternLM2-2B text backbone.
+
+Per the assignment, the vision tower is a STUB: ``input_specs`` provides
+precomputed patch embeddings (B, n_patches, d_frontend); only the MLP
+projector (2-layer, as in InternVL) and the LM backbone are real.
+Patch tokens are prepended to the text sequence; loss is computed on the
+text positions only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import lm as _lm
+from .base import P, rms_norm, softmax_xent
+
+
+def param_specs(cfg):
+    specs = _lm.param_specs(cfg)
+    specs["projector"] = {
+        "ln": P((cfg.d_frontend,), (None,)),
+        "w1": P((cfg.d_frontend, cfg.d_model), (None, "embed")),
+        "w2": P((cfg.d_model, cfg.d_model), ("embed", "embed")),
+    }
+    return specs
+
+
+def _project(params, patches):
+    p = params["projector"]
+    h = rms_norm(patches, p["ln"])
+    return jax.nn.gelu(h @ p["w1"]) @ p["w2"]
+
+
+def loss_fn(params, batch, cfg, constrain=None):
+    """batch: patches (B,P,Dv), tokens (B,S), labels (B,S)."""
+    if constrain is None:
+        constrain = lambda t, axes: t
+    vis = _project(params, batch["patches"]).astype(jnp.bfloat16)
+    txt = jnp.take(params["embed"], batch["tokens"], axis=0)
+    x = jnp.concatenate([vis, txt], axis=1)
+    hidden = _lm.forward(params, None, cfg, constrain, embedded=x)
+    n_p = vis.shape[1]
+    logits = _lm.logits_fn(params, hidden[:, n_p:], cfg, constrain)
+    return softmax_xent(logits, batch["labels"], batch.get("mask"))
+
+
+def prefill(params, batch, cache, cfg, constrain=None):
+    """Multimodal prefill: patches + prompt tokens fill the cache."""
+    if constrain is None:
+        constrain = lambda t, axes: t
+    vis = _project(params, batch["patches"]).astype(jnp.bfloat16)
+    txt = jnp.take(params["embed"], batch["tokens"], axis=0)
+    x = jnp.concatenate([vis, txt], axis=1)
+    return _lm.prefill(params, None, cache, cfg, constrain, embedded=x)
+
+
+decode_step = _lm.decode_step          # text-only decode after prefill
+init_kv_cache = _lm.init_kv_cache
+kv_cache_specs = _lm.kv_cache_specs

@@ -1,0 +1,262 @@
+"""xLSTM blocks (sLSTM + mLSTM) — arXiv:2405.04517.
+
+* mLSTM: matrix-memory cell with exponential input gate and stabilizer;
+  parallelizable — implemented in the same chunked form as SSD (the decay
+  is the cumulative forget gate), matching the paper's parallel training
+  formulation.
+* sLSTM: scalar-memory cell with *recurrent* weights — inherently
+  sequential; implemented as a ``lax.scan`` over time (the paper states
+  sLSTM is not parallelizable).  Decode is O(1) for both.
+
+Block layout follows the paper: mLSTM blocks use pre-up-projection
+(factor 2) with SiLU gating; sLSTM blocks post-project with a gated FFN
+(factor 4/3).  xLSTM-125M uses ratio 7:1 (mLSTM:sLSTM).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .base import P, rms_norm
+
+
+class MLSTMCache(NamedTuple):
+    c: jax.Array  # (B, H, N, N) matrix memory (keys N = values N = head dim)
+    n: jax.Array  # (B, H, N) normalizer
+    m: jax.Array  # (B, H) stabilizer
+
+
+class SLSTMCache(NamedTuple):
+    c: jax.Array  # (B, H, N) cell
+    n: jax.Array  # (B, H, N) normalizer
+    h: jax.Array  # (B, H, N) hidden (recurrent input)
+    m: jax.Array  # (B, H, N) stabilizer
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_specs(d_model: int, n_heads: int, expand: int = 2):
+    d_inner = d_model * expand
+    return {
+        "w_up": P((d_model, 2 * d_inner), ("embed", "ffn")),  # [x, gate]
+        "w_qkv": P((d_inner, 3 * d_inner), (None, "heads_x")),
+        "w_if": P((d_inner, 2 * n_heads), (None, None), dtype=jnp.float32),
+        "norm_w": P((d_inner,), (None,)),
+        "w_down": P((d_inner, d_model), ("ffn", "embed")),
+    }
+
+
+def _mlstm_cell_chunked(q, k, v, i_gate, f_gate, chunk: int):
+    """Chunked stabilized mLSTM.  q/k/v: (B,S,H,N); gates (B,S,H) raw.
+
+    Uses log-space cumulative forget gates; within-chunk quadratic form,
+    cross-chunk sequential scan (same skeleton as ssd_chunked).
+    """
+    B, S, H, N = q.shape
+    assert S % chunk == 0
+    G = S // chunk
+    rs = lambda t: t.reshape(B, G, chunk, *t.shape[2:])
+    q, k, v = rs(q), rs(k), rs(v)
+    logf = jax.nn.log_sigmoid(f_gate).reshape(B, G, chunk, H)
+    logi = i_gate.reshape(B, G, chunk, H).astype(jnp.float32)
+    cumf = jnp.cumsum(logf, axis=2)
+
+    # within-chunk unnormalized weights: D_ts = exp(cumf_t - cumf_s + i_s)
+    seg = cumf[:, :, :, None, :] - cumf[:, :, None, :, :] + logi[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    seg = jnp.where(tri, seg, -jnp.inf)
+    # stabilizer per (b,g,t,h): max over s and the carried chunk state
+    m_intra = jnp.max(seg, axis=3)                    # (B,G,t,H)
+
+    scores = jnp.einsum("bgthn,bgshn->bgtsh", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(N)
+
+    # chunk summaries for the inter-chunk recurrence
+    rem = cumf[:, :, -1:, :] - cumf + logi            # weight of step t in carry
+    chunk_c = jnp.einsum("bgthn,bgth,bgthm->bghnm", k.astype(jnp.float32),
+                         jnp.exp(rem), v.astype(jnp.float32))
+    chunk_n = jnp.einsum("bgthn,bgth->bghn", k.astype(jnp.float32), jnp.exp(rem))
+    chunk_f = jnp.exp(cumf[:, :, -1, :])              # (B,G,H)
+
+    def step(carry, inp):
+        c, n = carry
+        cc, cn, cf = inp
+        c_new = c * cf[:, :, None, None] + cc
+        n_new = n * cf[:, :, None] + cn
+        return (c_new, n_new), (c, n)
+
+    c0 = jnp.zeros((B, H, N, N), jnp.float32)
+    n0 = jnp.zeros((B, H, N), jnp.float32)
+    (_, _), (c_prev, n_prev) = jax.lax.scan(
+        step, (c0, n0),
+        (jnp.moveaxis(chunk_c, 1, 0), jnp.moveaxis(chunk_n, 1, 0),
+         jnp.moveaxis(chunk_f, 1, 0)),
+    )
+    c_prev = jnp.moveaxis(c_prev, 0, 1)               # (B,G,H,N,N)
+    n_prev = jnp.moveaxis(n_prev, 0, 1)               # (B,G,H,N)
+
+    # combine intra + inter with joint stabilization
+    m_tot = jnp.maximum(m_intra, cumf)                # inter weight is exp(cumf)
+    w_intra = jnp.exp(seg - m_tot[:, :, :, None, :])
+    num_intra = jnp.einsum("bgtsh,bgtsh,bgshn->bgthn", scores, w_intra,
+                           v.astype(jnp.float32))
+    den_intra = jnp.einsum("bgtsh,bgtsh->bgth", w_intra, scores)
+
+    w_inter = jnp.exp(cumf - m_tot)                   # (B,G,t,H)
+    num_inter = jnp.einsum("bgthn,bgth,bghnm->bgthm", q.astype(jnp.float32),
+                           w_inter, c_prev) / np.sqrt(N)
+    den_inter = jnp.einsum("bgthn,bgth,bghn->bgth", q.astype(jnp.float32),
+                           w_inter, n_prev) / np.sqrt(N)
+
+    num = num_intra + num_inter
+    den = den_intra + den_inter
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_tot))  # paper's max(|n|, e^-m)
+    return (num / den[..., None]).reshape(B, S, H, N)
+
+
+def mlstm_forward(params, x, *, n_heads, cache: Optional[MLSTMCache] = None,
+                  chunk: int = 64):
+    B, S, D = x.shape
+    up = x @ params["w_up"]
+    xi, gate = jnp.split(up, 2, axis=-1)
+    d_inner = xi.shape[-1]
+    N = d_inner // n_heads
+    qkv = xi @ params["w_qkv"]
+    q, k, v = [t.reshape(B, S, n_heads, N) for t in jnp.split(qkv, 3, axis=-1)]
+    gates = (xi @ params["w_if"]).astype(jnp.float32)
+    i_gate, f_gate = jnp.split(gates.reshape(B, S, n_heads, 2), 2, axis=-1)
+    i_gate, f_gate = i_gate[..., 0], f_gate[..., 0]
+
+    if cache is None:
+        ch = min(chunk, S)
+        if S % ch:
+            padlen = ch - S % ch
+            p3 = lambda t: jnp.pad(t, [(0, 0), (0, padlen), (0, 0), (0, 0)])
+            p2 = lambda t: jnp.pad(t, [(0, 0), (0, padlen), (0, 0)])
+            h = _mlstm_cell_chunked(p3(q), p3(k), p3(v), p2(i_gate),
+                                    p2(f_gate), ch)[:, :S]
+        else:
+            h = _mlstm_cell_chunked(q, k, v, i_gate, f_gate, ch)
+        new_cache = None
+    else:
+        def step(carry, inp):
+            c, n, m = carry
+            qt, kt, vt, it, ft = inp
+            logf = jax.nn.log_sigmoid(ft)
+            m_new = jnp.maximum(logf + m, it)
+            fi = jnp.exp(logf + m - m_new)
+            ii = jnp.exp(it - m_new)
+            c = c * fi[:, :, None, None] + ii[:, :, None, None] * jnp.einsum(
+                "bhn,bhm->bhnm", kt, vt) / np.sqrt(N)
+            n = n * fi[:, :, None] + ii[:, :, None] * kt / np.sqrt(N)
+            num = jnp.einsum("bhn,bhnm->bhm", qt, c)
+            den = jnp.maximum(
+                jnp.abs(jnp.einsum("bhn,bhn->bh", qt, n)), jnp.exp(-m_new)
+            )
+            return (c, n, m_new), num / den[..., None]
+
+        f32 = lambda t: jnp.moveaxis(t, 1, 0).astype(jnp.float32)
+        carry, hs = jax.lax.scan(
+            step,
+            (cache.c.astype(jnp.float32), cache.n.astype(jnp.float32),
+             cache.m.astype(jnp.float32)),
+            (f32(q), f32(k), f32(v), f32(i_gate), f32(f_gate)),
+        )
+        h = jnp.moveaxis(hs, 0, 1)
+        new_cache = MLSTMCache(
+            c=carry[0].astype(cache.c.dtype),
+            n=carry[1].astype(cache.n.dtype),
+            m=carry[2].astype(cache.m.dtype),
+        )
+
+    h = h.reshape(B, S, d_inner).astype(x.dtype)
+    h = rms_norm(h, params["norm_w"]) * jax.nn.silu(gate)
+    return h @ params["w_down"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_specs(d_model: int, n_heads: int):
+    N = d_model // n_heads
+    return {
+        "w_in": P((d_model, 4 * d_model), ("embed", "heads_x")),  # z i f o
+        "r_in": P((n_heads, N, 4 * N), ("heads", None, None)),    # recurrent
+        "norm_w": P((d_model,), (None,)),
+        # gated FFN (factor 4/3, GeGLU) per the paper's sLSTM block
+        "w_ff_gate": P((d_model, 4 * d_model // 3), ("embed", "ffn")),
+        "w_ff_up": P((d_model, 4 * d_model // 3), ("embed", "ffn")),
+        "w_ff_down": P((4 * d_model // 3, d_model), ("ffn", "embed")),
+    }
+
+
+def slstm_forward(params, x, *, n_heads, cache: Optional[SLSTMCache] = None):
+    """Sequential sLSTM with recurrent weights + post FFN.  x: (B,S,D)."""
+    B, S, D = x.shape
+    N = D // n_heads
+    zifo = (x @ params["w_in"]).reshape(B, S, n_heads, 4 * N)
+
+    if cache is None:
+        c0 = jnp.zeros((B, n_heads, N), jnp.float32)
+        h0 = jnp.zeros((B, n_heads, N), jnp.float32)
+        n0 = jnp.ones((B, n_heads, N), jnp.float32)
+        m0 = jnp.zeros((B, n_heads, N), jnp.float32)
+    else:
+        c0, n0, h0, m0 = (cache.c.astype(jnp.float32),
+                          cache.n.astype(jnp.float32),
+                          cache.h.astype(jnp.float32),
+                          cache.m.astype(jnp.float32))
+
+    r_w = params["r_in"].astype(jnp.float32)
+
+    def step(carry, inp):
+        c, n, h, m = carry
+        zifo_t = inp.astype(jnp.float32)  # (B, H, 4N)
+        rec = jnp.einsum("bhn,hnm->bhm", h, r_w)
+        z_r, i_r, f_r, o_r = jnp.split(zifo_t + rec, 4, axis=-1)
+        z = jnp.tanh(z_r)
+        o = jax.nn.sigmoid(o_r)
+        logf = jax.nn.log_sigmoid(f_r)
+        m_new = jnp.maximum(logf + m, i_r)
+        i = jnp.exp(i_r - m_new)
+        f = jnp.exp(logf + m - m_new)
+        c_new = f * c + i * z
+        n_new = f * n + i
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    carry, hs = jax.lax.scan(step, (c0, n0, h0, m0),
+                             jnp.moveaxis(zifo, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, D).astype(x.dtype)
+    h = rms_norm(h, params["norm_w"])
+    ff = jax.nn.gelu(h @ params["w_ff_gate"]) * (h @ params["w_ff_up"])
+    out = ff @ params["w_ff_down"]
+    new_cache = None
+    if cache is not None:
+        new_cache = SLSTMCache(
+            c=carry[0].astype(cache.c.dtype), n=carry[1].astype(cache.n.dtype),
+            h=carry[2].astype(cache.h.dtype), m=carry[3].astype(cache.m.dtype),
+        )
+    return out, new_cache
+
+
+def init_mlstm_cache(batch, n_heads, head_dim, dtype=jnp.float32):
+    return MLSTMCache(
+        c=jnp.zeros((batch, n_heads, head_dim, head_dim), dtype),
+        n=jnp.zeros((batch, n_heads, head_dim), dtype),
+        m=jnp.zeros((batch, n_heads), dtype),
+    )
+
+
+def init_slstm_cache(batch, n_heads, head_dim, dtype=jnp.float32):
+    z = jnp.zeros((batch, n_heads, head_dim), dtype)
+    return SLSTMCache(c=z, n=jnp.ones_like(z), h=z, m=z)

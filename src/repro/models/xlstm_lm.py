@@ -1,0 +1,127 @@
+"""xLSTM-125M language model: 12 residual blocks, mLSTM:sLSTM = 7:1
+(sLSTM at block 6; rest mLSTM), d_ff=0 per assignment (blocks carry their
+own projections)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .base import P, padded_vocab, rms_norm, softmax_xent
+from .lm import logits_fn
+from .xlstm import (
+    MLSTMCache,
+    SLSTMCache,
+    init_mlstm_cache,
+    init_slstm_cache,
+    mlstm_forward,
+    mlstm_specs,
+    slstm_forward,
+    slstm_specs,
+)
+
+SLSTM_EVERY = 8  # one sLSTM block per 8 (≈7:1 per the paper's 125M recipe)
+
+
+def block_kinds(cfg):
+    return ["slstm" if (i % SLSTM_EVERY) == SLSTM_EVERY - 1 else "mlstm"
+            for i in range(cfg.n_layers)]
+
+
+def param_specs(cfg):
+    blocks = {}
+    for i, kind in enumerate(block_kinds(cfg)):
+        if kind == "mlstm":
+            blocks[f"b{i}"] = {
+                "ln": P((cfg.d_model,), ("embed",)),
+                "cell": mlstm_specs(cfg.d_model, cfg.n_heads),
+            }
+        else:
+            blocks[f"b{i}"] = {
+                "ln": P((cfg.d_model,), ("embed",)),
+                "cell": slstm_specs(cfg.d_model, cfg.n_heads),
+            }
+    vp = padded_vocab(cfg.vocab)
+    return {
+        "embed": P((vp, cfg.d_model), ("vocab", "embed")),
+        "ln_f": P((cfg.d_model,), ("embed",)),
+        "blocks": blocks,
+        "lm_head": P((cfg.d_model, vp), ("embed", "vocab")),
+    }
+
+
+def forward(params, tokens, cfg, constrain=None, *, caches=None):
+    if constrain is None:
+        constrain = lambda t, axes: t
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, ("batch", None, "embed"))
+    new_caches = {}
+    for i, kind in enumerate(block_kinds(cfg)):
+        bp = params["blocks"][f"b{i}"]
+        h = rms_norm(x, bp["ln"])
+        cache = None if caches is None else caches[f"b{i}"]
+        if kind == "mlstm":
+            o, nc = mlstm_forward(bp["cell"], h, n_heads=cfg.n_heads,
+                                  cache=cache)
+        else:
+            o, nc = slstm_forward(bp["cell"], h, n_heads=cfg.n_heads,
+                                  cache=cache)
+        x = constrain(x + o, ("batch", None, "embed"))
+        if nc is not None:
+            new_caches[f"b{i}"] = nc
+    hidden = rms_norm(x, params["ln_f"])
+    return hidden, (new_caches if caches is not None else None)
+
+
+def loss_fn(params, batch, cfg, constrain=None):
+    hidden, _ = forward(params, batch["tokens"], cfg, constrain)
+    logits = logits_fn(params, hidden, cfg, constrain)
+    return softmax_xent(logits, batch["labels"], batch.get("mask"))
+
+
+def decode_step(params, tokens, caches, cache_index, cfg, constrain=None):
+    del cache_index  # recurrent state carries position implicitly
+    hidden, caches = forward(params, tokens, cfg, constrain, caches=caches)
+    logits = logits_fn(params, hidden, cfg, constrain)[:, 0]
+    return logits, caches
+
+
+def _cache_template(cfg, batch: int, abstract: bool):
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else (
+        lambda s, d: jnp.zeros(s, d))
+    caches = {}
+    d_inner = cfg.d_model * 2
+    n_m = d_inner // cfg.n_heads  # mLSTM head dim (post up-projection)
+    n_s = cfg.d_model // cfg.n_heads
+    for i, kind in enumerate(block_kinds(cfg)):
+        if kind == "mlstm":
+            caches[f"b{i}"] = MLSTMCache(
+                c=mk((batch, cfg.n_heads, n_m, n_m), jnp.float32),
+                n=mk((batch, cfg.n_heads, n_m), jnp.float32),
+                m=mk((batch, cfg.n_heads), jnp.float32),
+            )
+        else:
+            z = (batch, cfg.n_heads, n_s)
+            caches[f"b{i}"] = SLSTMCache(
+                c=mk(z, jnp.float32), n=mk(z, jnp.float32),
+                h=mk(z, jnp.float32), m=mk(z, jnp.float32),
+            )
+    return caches
+
+
+def cache_specs(cfg, batch: int, max_len: int = 0, dtype=None):
+    """Recurrent caches are O(1) in sequence length (max_len unused)."""
+    return _cache_template(cfg, batch, abstract=True)
+
+
+def init_caches(cfg, batch: int, max_len: int = 0, dtype=None):
+    caches = _cache_template(cfg, batch, abstract=False)
+    # sLSTM normalizer starts at 1
+    for i, kind in enumerate(block_kinds(cfg)):
+        if kind == "slstm":
+            c = caches[f"b{i}"]
+            caches[f"b{i}"] = SLSTMCache(c=c.c, n=jnp.ones_like(c.n), h=c.h,
+                                         m=c.m)
+    return caches

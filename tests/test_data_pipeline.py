@@ -1,0 +1,73 @@
+"""Data substrate: packed store, learned-index lookup, pipeline resume."""
+
+import numpy as np
+import pytest
+
+from repro.data import IndexedTokenDataset, PackedTokenStore, ShardedLoader
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    store = PackedTokenStore.synthetic(600, mean_len=64, vocab=1000, seed=0)
+    return IndexedTokenDataset.build(store, method="pgm", eps=16,
+                                     sample_rate=0.5, gap_rho=0.2)
+
+
+def test_store_roundtrip(tmp_path):
+    store = PackedTokenStore.synthetic(50, mean_len=32, seed=1)
+    store.save(str(tmp_path / "st"))
+    loaded = PackedTokenStore.load(str(tmp_path / "st"))
+    assert np.array_equal(loaded.sample_keys, store.sample_keys)
+    assert np.array_equal(loaded.doc(7), store.doc(7))
+
+
+def test_ordinal_resolution(dataset):
+    keys = dataset.store.sample_keys[::7].astype(np.float64)
+    ords = dataset.ordinals(keys)
+    assert np.array_equal(ords, np.arange(dataset.store.n_docs)[::7])
+
+
+def test_missing_key_raises(dataset):
+    with pytest.raises(KeyError):
+        dataset.ordinals(np.array([3.5]))
+
+
+def test_batch_shapes(dataset):
+    keys = dataset.store.sample_keys[:8].astype(np.float64)
+    b = dataset.batch(keys, seq_len=32)
+    assert b.shape == (8, 32)
+    assert np.array_equal(b[0, :16], dataset.store.doc(0)[:16])
+
+
+def test_streamed_ingest(dataset):
+    new_key = int(dataset.store.sample_keys[10]) + 1  # interleaves
+    doc = np.arange(20, dtype=np.uint32)
+    dataset.ingest(doc, new_key)
+    o = dataset.ordinals(np.array([float(new_key)]))
+    assert np.array_equal(dataset.store.doc(int(o[0])), doc)
+
+
+def test_loader_determinism_and_seek():
+    store = PackedTokenStore.synthetic(256, mean_len=40, vocab=500, seed=2)
+    ds = IndexedTokenDataset.build(store, method="fiting", eps=8)
+    l1 = ShardedLoader(ds, global_batch=16, seq_len=32, seed=7)
+    batches = [l1.next_batch() for _ in range(5)]
+    # fresh loader seeked to step 3 reproduces batch 3 exactly
+    l2 = ShardedLoader(ds, global_batch=16, seq_len=32, seed=7)
+    l2.seek(3)
+    b3 = l2.next_batch()
+    assert np.array_equal(b3["tokens"], batches[3]["tokens"])
+
+
+def test_loader_sharding_partitions_batch():
+    store = PackedTokenStore.synthetic(128, mean_len=24, vocab=500, seed=3)
+    ds = IndexedTokenDataset.build(store, method="rmi", n_leaf=32)
+    shards = [
+        ShardedLoader(ds, global_batch=16, seq_len=16, seed=1,
+                      shard_id=i, n_shards=4).next_batch()["tokens"]
+        for i in range(4)
+    ]
+    full = ShardedLoader(ds, global_batch=16, seq_len=16, seed=1).next_batch()
+    stacked = np.stack(shards)  # (4, 4, 16) strided partitions
+    for i in range(4):
+        assert np.array_equal(stacked[i], full["tokens"][i::4])

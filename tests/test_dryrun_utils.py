@@ -1,0 +1,89 @@
+"""Dry-run utilities tested in-process (no 512-device flags here):
+collective-bytes HLO parser, roofline math, extrapolation algebra."""
+
+import json
+
+import pytest
+
+
+def _import_dryrun(monkeypatch):
+    # importing dryrun sets XLA_FLAGS before jax init; jax is already
+    # initialized in this process, so guard the env var side effect.
+    import os
+    prev = os.environ.get("XLA_FLAGS")
+    import repro.launch.dryrun as dr
+    if prev is None:
+        os.environ.pop("XLA_FLAGS", None)
+    else:
+        os.environ["XLA_FLAGS"] = prev
+    return dr
+
+
+HLO = """
+HloModule jit_step
+%x1 = bf16[2048,7168]{1,0} all-reduce(%a), replica_groups={{0,1}}
+%x2 = (f32[128]{0}, f32[64]{0}) all-gather-start(%b, %c)
+%x3 = f32[1024]{0} reduce-scatter(%d)
+%y = bf16[8,16]{1,0} add(%e, %f)
+%x4 = bf16[4,2,8]{2,1,0} all-to-all(%g)
+%x5 = f32[32]{0} collective-permute-start(%h)
+%x6 = f32[32]{0} collective-permute-done(%x5)
+"""
+
+
+def test_collective_bytes_parser(monkeypatch):
+    dr = _import_dryrun(monkeypatch)
+    total, per_kind, count = dr.collective_bytes(HLO)
+    assert per_kind["all-reduce"] == 2048 * 7168 * 2
+    assert per_kind["all-gather"] == 128 * 4 + 64 * 4
+    assert per_kind["reduce-scatter"] == 1024 * 4
+    assert per_kind["all-to-all"] == 4 * 2 * 8 * 2
+    assert per_kind["collective-permute"] == 32 * 4  # start only, not done
+    assert count == 5
+    assert total == sum(per_kind.values())
+
+
+def test_roofline_terms():
+    from repro.launch.roofline import analyze_cell
+    rec = {
+        "arch": "yi-9b", "shape": "train_4k", "mesh": "pod16x16",
+        "tag": "baseline", "status": "ok", "n_devices": 256,
+        "flops_per_device": 1.97e14,       # exactly 1s of compute
+        "bytes_per_device": 8.19e11,       # exactly 1s of HBM
+        "collective_bytes_per_device": 5e10,  # 1s of ICI
+        "params": 8.8e9, "active_params": 8.8e9,
+    }
+    c = analyze_cell(rec)
+    assert c["t_compute_s"] == pytest.approx(1.0)
+    assert c["t_memory_s"] == pytest.approx(1.0)
+    assert c["t_collective_s"] == pytest.approx(1.0)
+    assert c["dominant"] in ("compute", "memory", "collective")
+    # useful flops: 6*N*D/devices over reported flops
+    want = 6 * 8.8e9 * (4096 * 256) / 256 / 1.97e14
+    assert c["useful_compute_ratio"] == pytest.approx(want, rel=1e-6)
+
+
+def test_extrapolation_algebra(tmp_path):
+    from repro.launch.extrapolate import LINEAR_FIELDS, extrapolate
+    # synthetic probes: cost(L) = 100 + 10*L
+    for tag, L in (("L4", 4), ("L8", 8)):
+        rec = {"arch": "internlm2-1.8b", "shape": "train_4k",
+               "mesh": "pod16x16", "tag": tag, "status": "ok",
+               "layers_used": L, "n_devices": 256,
+               "flops_per_device": 100 + 10 * L,
+               "bytes_per_device": 7 + 3 * L,
+               "collective_bytes_per_device": 5 * L,
+               "collective_ops": 2 * L,
+               "collectives": {"all-reduce": 5 * L},
+               }
+        with open(tmp_path / f"internlm2-1.8b__train_4k__pod16x16__{tag}.json",
+                  "w") as f:
+            json.dump(rec, f)
+    out = extrapolate(str(tmp_path), "internlm2-1.8b", "train_4k",
+                      "pod16x16", 4, 8)
+    L = 24  # internlm2 layers
+    assert out["flops_per_device"] == pytest.approx(100 + 10 * L)
+    assert out["bytes_per_device"] == pytest.approx(7 + 3 * L)
+    assert out["collective_bytes_per_device"] == pytest.approx(5 * L)
+    assert out["collectives"]["all-reduce"] == pytest.approx(5 * L)
+    assert out["extrapolated"] is True

@@ -1,0 +1,121 @@
+"""Dynamic scenario (§5.3): randomized + property-based oracle testing."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import make_keys
+from repro.core import LearnedIndex
+
+
+def _fresh(n=8000, rho=0.25, seed=0):
+    x = make_keys("iot", n, seed=seed)
+    return x, LearnedIndex.build(x, method="pgm", eps=64, gap_rho=rho)
+
+
+def test_insert_then_lookup():
+    x, idx = _fresh()
+    rng = np.random.default_rng(1)
+    mids = x[:-1] + np.diff(x) * rng.random(len(x) - 1)
+    new = np.setdiff1d(mids, x)[:1500]
+    for i, k in enumerate(new):
+        idx.insert(float(k), 1_000_000 + i)
+    got = idx.lookup(new)
+    assert np.array_equal(got, 1_000_000 + np.arange(len(new)))
+    # original keys unaffected
+    q = rng.choice(x, 2000)
+    assert np.array_equal(idx.lookup(q), np.searchsorted(x, q))
+
+
+def test_insert_no_retrain_keeps_preciseness():
+    """Inserted keys follow the learned distribution: MAE stays bounded."""
+    x, idx = _fresh(n=12_000)
+    before = idx.mdl().mae
+    rng = np.random.default_rng(2)
+    mids = x[:-1] + np.diff(x) * rng.random(len(x) - 1)
+    new = np.setdiff1d(mids, x)[:3000]
+    for i, k in enumerate(new):
+        idx.insert(float(k), 2_000_000 + i)
+    after = idx.mdl().mae
+    assert after <= max(4.0 * before, 8.0)  # no blow-up without retraining
+
+
+def test_delete_semantics():
+    x, idx = _fresh()
+    rng = np.random.default_rng(3)
+    victims = rng.choice(x, 800, replace=False)
+    for k in victims:
+        assert idx.delete(float(k))
+    assert np.all(idx.lookup(victims) == -1)
+    survivors = np.setdiff1d(x, victims)
+    q = rng.choice(survivors, 1500)
+    assert np.array_equal(idx.lookup(q), np.searchsorted(x, q))
+    # double delete fails
+    assert not idx.delete(float(victims[0]))
+
+
+def test_update_payload():
+    x, idx = _fresh(n=4000)
+    k = float(x[123])
+    assert idx.update(k, 777)
+    assert idx.lookup(np.array([k]))[0] == 777
+    assert not idx.update(float(x[0] - 1.0), 1)  # absent key
+
+
+def test_mixed_workload_against_dict_oracle():
+    """Random interleaved insert/delete/update/lookup vs a dict oracle."""
+    x, idx = _fresh(n=5000, seed=4)
+    oracle = {float(k): int(p) for k, p in zip(x, np.searchsorted(x, x))}
+    rng = np.random.default_rng(5)
+    domain_lo, domain_hi = float(x[0]), float(x[-1])
+    for step in range(3000):
+        op = rng.random()
+        if op < 0.4:  # insert fresh key
+            k = float(rng.uniform(domain_lo, domain_hi))
+            if k in oracle or k in (domain_lo, domain_hi):
+                continue
+            p = 5_000_000 + step
+            idx.insert(k, p)
+            oracle[k] = p
+        elif op < 0.6 and oracle:  # delete existing
+            k = float(rng.choice(list(oracle)))
+            assert idx.delete(k)
+            del oracle[k]
+        elif op < 0.7 and oracle:  # update
+            k = float(rng.choice(list(oracle)))
+            oracle[k] = 9_000_000 + step
+            assert idx.update(k, oracle[k])
+        else:  # lookup a mix of present/absent keys
+            keys = list(oracle)
+            present = [float(rng.choice(keys)) for _ in range(3)]
+            absent = [float(rng.uniform(domain_lo, domain_hi)) for _ in range(2)]
+            absent = [a for a in absent if a not in oracle]
+            got = idx.lookup(np.array(present + absent))
+            want = [oracle[k] for k in present] + [-1] * len(absent)
+            assert list(got) == want
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(64, 600),
+    rho=st.floats(0.05, 0.5),
+)
+def test_property_insert_all_lookups_hold(seed, n, rho):
+    """Property: after arbitrary inserts, every stored key is retrievable
+    and key-position monotonicity of the first-level array holds."""
+    rng = np.random.default_rng(seed)
+    x = np.unique(rng.integers(0, 10 * n, n)).astype(np.float64)
+    if len(x) < 8:
+        return
+    idx = LearnedIndex.build(x, method="fiting", eps=8, gap_rho=rho)
+    extra = np.setdiff1d(
+        np.unique(rng.integers(0, 10 * n, n // 2)).astype(np.float64) + 0.5, x
+    )
+    for i, k in enumerate(extra):
+        idx.insert(float(k), 100_000 + i)
+    g = idx.gapped
+    finite = g.slot_key[np.isfinite(g.slot_key)]
+    assert np.all(np.diff(finite) >= 0)
+    assert np.array_equal(idx.lookup(x), np.searchsorted(x, x))
+    assert np.array_equal(idx.lookup(extra), 100_000 + np.arange(len(extra)))

@@ -1,0 +1,88 @@
+"""Gap insertion (§5): Eq.3 positions, placement invariants, lookup, MDL."""
+
+import numpy as np
+import pytest
+
+from conftest import make_keys
+from repro.core import LearnedIndex, build_gapped, gap_positions
+from repro.core.mechanisms import PGMMechanism
+
+
+def test_gap_positions_monotone_and_budget():
+    x = make_keys("weblogs", 20_000, seed=0)
+    y = np.arange(len(x), dtype=np.float64)
+    plm = PGMMechanism(eps=128, recursive=False).fit(x, y).plm
+    for rho in (0.05, 0.2, 0.5):
+        yg = gap_positions(x, y, plm, rho)
+        assert np.all(np.diff(yg) > 0)  # strict monotonicity preserved
+        # budget: total inserted gaps <= rho * n (Eq. 2 constraint)
+        assert yg[-1] - y[-1] <= rho * len(x) + 1
+
+
+@pytest.mark.parametrize("kind", ["weblogs", "iot", "longitude"])
+def test_gapped_improves_mae(kind):
+    x = make_keys(kind, 30_000, seed=1)
+    base = LearnedIndex.build(x, method="pgm", eps=128)
+    gapped = LearnedIndex.build(x, method="pgm", eps=128, gap_rho=0.2)
+    assert gapped.mdl().mae < base.mdl().mae  # §6.4: preciseness improves
+
+
+def test_gapped_layout_invariants():
+    x = make_keys("iot", 20_000, seed=2)
+    g = LearnedIndex.build(x, method="pgm", eps=64, gap_rho=0.25).gapped
+    # total order of the first-level array
+    assert np.all(np.diff(g.slot_key[np.isfinite(g.slot_key)]) >= 0)
+    # occupied slots carry exactly the stored minima; key count conserved
+    chained, max_chain = g.link_stats()
+    assert int(g.occupied.sum()) + chained == len(x)
+    # every unoccupied slot's key equals the next occupied slot's key
+    occ_idx = np.flatnonzero(g.occupied)
+    for i in np.flatnonzero(~g.occupied)[:200]:
+        nxt = occ_idx[np.searchsorted(occ_idx, i)] if i < occ_idx[-1] else None
+        expect = g.slot_key[nxt] if nxt is not None else np.inf
+        assert g.slot_key[i] == expect
+
+
+def test_gapped_lookup_all_keys():
+    x = make_keys("longitude", 15_000, seed=3)
+    idx = LearnedIndex.build(x, method="fiting", eps=64, gap_rho=0.15)
+    rng = np.random.default_rng(4)
+    q = rng.choice(x, 4000)
+    out = idx.lookup(q)
+    truth = np.searchsorted(x, q)  # payloads were arange(n)
+    assert np.array_equal(out, truth)
+    # misses return -1
+    miss = x[:-1] + np.diff(x) * 0.5
+    miss = np.setdiff1d(miss, x)[:500]
+    assert np.all(idx.lookup(miss) == -1)
+
+
+def test_gapped_with_sampling_combo():
+    """§5.4: sampling + gaps — still exact lookups, cheaper build."""
+    x = make_keys("iot", 40_000, seed=5)
+    idx = LearnedIndex.build(
+        x, method="pgm", eps=64, gap_rho=0.2, sample_rate=0.02,
+        rng=np.random.default_rng(5),
+    )
+    q = np.random.default_rng(6).choice(x, 3000)
+    assert np.array_equal(idx.lookup(q), np.searchsorted(x, q))
+
+
+def test_gap_fraction_tracks_rho():
+    x = make_keys("weblogs", 20_000, seed=7)
+    fracs = []
+    for rho in (0.05, 0.2, 0.4):
+        g = LearnedIndex.build(x, method="pgm", eps=128, gap_rho=rho).gapped
+        fracs.append(g.gap_fraction)
+    assert fracs[0] < fracs[1] < fracs[2]
+
+
+def test_csr_link_export_roundtrip():
+    x = make_keys("iot", 10_000, seed=8)
+    g = LearnedIndex.build(x, method="pgm", eps=64, gap_rho=0.1).gapped
+    offsets, keys, payloads = g.export_csr_links()
+    assert offsets[-1] == g.link_stats()[0]
+    for slot, chain in list(g.links.items())[:50]:
+        o = offsets[slot]
+        for t, (k, p) in enumerate(chain):
+            assert keys[o + t] == k and payloads[o + t] == p

@@ -1,0 +1,54 @@
+"""Gap-place Pallas kernel vs the core numpy oracle (Eq. 3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import make_keys
+from repro.core.mechanisms import FITingMechanism, PGMMechanism
+from repro.kernels.ops_gap import gap_positions_device, gap_positions_oracle
+
+
+@pytest.mark.parametrize("mech_cls,kw", [
+    (PGMMechanism, dict(eps=64, recursive=False)),
+    (FITingMechanism, dict(eps=64)),
+])
+@pytest.mark.parametrize("rho", [0.05, 0.3])
+def test_gap_place_matches_oracle(mech_cls, kw, rho):
+    x = make_keys("uniform_int", 20_000, seed=1)
+    y = np.arange(len(x), dtype=np.float64)
+    plm = mech_cls(**kw).fit(x, y).plm
+    dev = gap_positions_device(x, plm, rho, interpret=True)
+    ora = gap_positions_oracle(x, plm, rho)
+    # f32 kernel vs f64 oracle: relative tolerance on positions
+    np.testing.assert_allclose(dev, ora, rtol=2e-5, atol=0.5)
+    assert np.all(np.diff(dev) >= 0)
+
+
+@pytest.mark.parametrize("key_tile,seg_chunk", [(256, 128), (2048, 1024)])
+def test_gap_place_tile_sweep(key_tile, seg_chunk):
+    x = make_keys("uniform_int", 9_000, seed=2)
+    y = np.arange(len(x), dtype=np.float64)
+    plm = PGMMechanism(eps=32, recursive=False).fit(x, y).plm
+    dev = gap_positions_device(x, plm, 0.2, key_tile=key_tile,
+                               seg_chunk=seg_chunk, interpret=True)
+    ora = gap_positions_oracle(x, plm, 0.2)
+    np.testing.assert_allclose(dev, ora, rtol=2e-5, atol=0.5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(300, 2000),
+       rho=st.floats(0.01, 0.5))
+def test_property_gap_place(seed, n, rho):
+    rng = np.random.default_rng(seed)
+    x = np.unique(rng.choice(2 ** 20, n, replace=False)).astype(np.float64)
+    if len(x) < 16:
+        return
+    y = np.arange(len(x), dtype=np.float64)
+    plm = FITingMechanism(eps=16).fit(x, y).plm
+    dev = gap_positions_device(x, plm, rho, key_tile=256, seg_chunk=128,
+                               interpret=True)
+    ora = gap_positions_oracle(x, plm, rho)
+    np.testing.assert_allclose(dev, ora, rtol=5e-5, atol=0.5)
+    # budget: total inserted gaps <= rho*n (+rounding)
+    assert dev[-1] - y[-1] <= rho * len(x) + 1.0

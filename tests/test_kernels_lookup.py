@@ -1,0 +1,118 @@
+"""Pallas lookup kernel vs pure-jnp oracle: shape/dtype/method sweeps
+(interpret=True executes the kernel body on CPU; TPU is the target)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import make_keys
+from repro.core import LearnedIndex
+from repro.kernels import batched_lookup, from_learned_index, lookup_ref
+import jax.numpy as jnp
+
+
+def _truth(idx, q):
+    if idx.gapped is not None:
+        return idx.gapped.lookup_batch(q)
+    return np.searchsorted(idx.keys, q)
+
+
+@pytest.mark.parametrize("method,kw", [
+    ("pgm", dict(eps=64)),
+    ("fiting", dict(eps=64)),
+    ("rmi", dict(n_leaf=512)),
+])
+@pytest.mark.parametrize("rho", [0.0, 0.2])
+def test_kernel_matches_truth_methods(method, kw, rho):
+    keys = make_keys("uniform_int", 30_000, seed=1)
+    idx = LearnedIndex.build(keys, method=method, gap_rho=rho, **kw)
+    arrs = from_learned_index(idx)
+    q = np.random.default_rng(2).choice(keys, 2048)
+    out, slot, found, fb = batched_lookup(arrs, idx.mech.plm.err_lo, q,
+                                          interpret=True)
+    assert np.array_equal(np.asarray(out), _truth(idx, q))
+
+
+@pytest.mark.parametrize("q_tile,w_tile,win_chunk", [
+    (128, 512, 128),
+    (256, 2048, 512),
+    (512, 4096, 1024),
+])
+def test_kernel_tile_shape_sweep(q_tile, w_tile, win_chunk):
+    keys = make_keys("uniform_int", 20_000, seed=3)
+    idx = LearnedIndex.build(keys, method="pgm", eps=32)
+    arrs = from_learned_index(idx, w_tile=w_tile)
+    q = np.random.default_rng(4).choice(keys, 1000)  # non-multiple of tile
+    out, *_ = batched_lookup(arrs, idx.mech.plm.err_lo, q, q_tile=q_tile,
+                             w_tile=w_tile, win_chunk=win_chunk,
+                             interpret=True)
+    assert np.array_equal(np.asarray(out), np.searchsorted(keys, q))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_kernel_key_dtypes(dtype):
+    """f32-exact integer keys, presented as float or int inputs."""
+    keys = make_keys("uniform_int", 15_000, seed=5)
+    idx = LearnedIndex.build(keys, method="fiting", eps=64, gap_rho=0.1)
+    arrs = from_learned_index(idx)
+    q_raw = np.random.default_rng(6).choice(keys, 1536).astype(dtype)
+    out, *_ = batched_lookup(arrs, idx.mech.plm.err_lo, q_raw, interpret=True)
+    assert np.array_equal(np.asarray(out), _truth(idx, q_raw.astype(np.float64)))
+
+
+def test_kernel_misses_and_out_of_range():
+    keys = make_keys("uniform_int", 10_000, seed=7)
+    idx = LearnedIndex.build(keys, method="pgm", eps=64, gap_rho=0.15)
+    arrs = from_learned_index(idx)
+    rng = np.random.default_rng(8)
+    miss = np.setdiff1d(rng.choice(2 ** 22, 2000), keys.astype(np.int64))
+    q = np.concatenate([
+        miss[:500].astype(np.float64),
+        [keys[0] - 10.0, keys[-1] + 10.0],          # out of range both sides
+        rng.choice(keys, 500),                      # hits
+    ])
+    out, *_ = batched_lookup(arrs, idx.mech.plm.err_lo, q, interpret=True)
+    truth = _truth(idx, q)
+    assert np.array_equal(np.asarray(out), truth)
+    assert np.all(np.asarray(out)[:502] == -1)
+
+
+def test_oracle_only_path():
+    """use_kernel=False exercises the jnp oracle end to end."""
+    keys = make_keys("uniform_int", 8_000, seed=9)
+    idx = LearnedIndex.build(keys, method="pgm", eps=64)
+    arrs = from_learned_index(idx)
+    q = np.random.default_rng(10).choice(keys, 1024)
+    out_k, *_ = batched_lookup(arrs, idx.mech.plm.err_lo, q, interpret=True)
+    out_o, *_ = batched_lookup(arrs, idx.mech.plm.err_lo, q, use_kernel=False)
+    assert np.array_equal(np.asarray(out_k), np.asarray(out_o))
+
+
+def test_lookup_ref_semantics():
+    keys = jnp.asarray(np.array([1.0, 3.0, 3.0, 5.0, 9.0], np.float32))
+    seg = jnp.zeros(1, jnp.float32)
+    slot, found = lookup_ref(jnp.asarray([0.0, 3.0, 6.0, 9.0], jnp.float32),
+                             seg, seg, seg, keys)
+    assert list(np.asarray(slot)) == [-1, 2, 3, 4]
+    assert list(np.asarray(found)) == [False, True, False, True]
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(300, 3000),
+       rho=st.sampled_from([0.0, 0.1, 0.3]))
+def test_property_kernel_equals_oracle(seed, n, rho):
+    """Property: kernel+fallback path == oracle for random key sets."""
+    rng = np.random.default_rng(seed)
+    keys = np.unique(rng.choice(2 ** 20, n, replace=False)).astype(np.float64)
+    if len(keys) < 16:
+        return
+    idx = LearnedIndex.build(keys, method="fiting", eps=16, gap_rho=rho)
+    arrs = from_learned_index(idx)
+    q = np.concatenate([
+        rng.choice(keys, min(len(keys), 256)),
+        rng.uniform(keys[0] - 5, keys[-1] + 5, 64),
+    ])
+    out_k, *_ = batched_lookup(arrs, idx.mech.plm.err_lo, q, q_tile=128,
+                               w_tile=512, win_chunk=128, interpret=True)
+    out_o, *_ = batched_lookup(arrs, idx.mech.plm.err_lo, q, use_kernel=False)
+    assert np.array_equal(np.asarray(out_k), np.asarray(out_o))

@@ -1,0 +1,57 @@
+"""MDL framework (§3): objective terms and reports."""
+
+import numpy as np
+import pytest
+
+from conftest import make_keys
+from repro.core import LearnedIndex
+from repro.core.mdl import correction_cost, mae, mdl_report
+from repro.core.mechanisms import BTreeMechanism, PGMMechanism
+
+
+def test_correction_cost_binary_search_form():
+    y = np.array([0.0, 0.0, 0.0])
+    assert correction_cost(y, y) == 1.0  # log2(1)+1 with max(err,1)
+    y_hat = y + 16.0
+    assert correction_cost(y, y_hat) == pytest.approx(np.log2(16) + 1)
+
+
+def test_mdl_tradeoff_across_eps():
+    """Smaller eps => larger L(M) (params), smaller L(D|M) (paper §6.2)."""
+    x = make_keys("iot", 30_000, seed=0)
+    y = np.arange(len(x), dtype=np.float64)
+    reports = []
+    for eps in (512.0, 64.0, 8.0):
+        m = PGMMechanism(eps=eps, recursive=False).fit(x, y)
+        reports.append(mdl_report(f"pgm{eps}", m, x, y))
+    params = [r.l_model_params for r in reports]
+    costs = [r.l_data_given_model for r in reports]
+    assert params[0] < params[1] < params[2]
+    assert costs[0] > costs[1] > costs[2]
+
+
+def test_alpha_weighs_correction_term():
+    x = make_keys("weblogs", 10_000, seed=1)
+    y = np.arange(len(x), dtype=np.float64)
+    m = PGMMechanism(eps=128, recursive=False).fit(x, y)
+    r1 = mdl_report("a1", m, x, y, alpha=1.0)
+    r10 = mdl_report("a10", m, x, y, alpha=10.0)
+    assert r10.mdl > r1.mdl
+    assert r10.mdl - r1.mdl == pytest.approx(9.0 * r1.l_data_given_model)
+
+
+def test_btree_vs_learned_size(small_keys):
+    y = np.arange(len(small_keys), dtype=np.float64)
+    bt = mdl_report("btree", BTreeMechanism(page_size=256).fit(small_keys, y),
+                    small_keys, y)
+    pg = mdl_report("pgm", PGMMechanism(eps=128).fit(small_keys, y),
+                    small_keys, y)
+    # learned index stores far fewer parameters than dense-page B+Tree
+    assert pg.l_model_bytes < bt.l_model_bytes
+
+
+def test_learned_index_facade_mdl(small_keys):
+    idx = LearnedIndex.build(small_keys, method="pgm", eps=128)
+    rep = idx.mdl(alpha=2.0)
+    assert rep.mae >= 0 and rep.l_data_given_model >= 1.0
+    assert rep.max_abs_err <= 128 + 1e-6

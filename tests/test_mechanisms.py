@@ -1,0 +1,121 @@
+"""Mechanism-level guarantees: error bounds, optimality, PLM export."""
+
+import numpy as np
+import pytest
+
+from conftest import make_keys
+from repro.core.mechanisms import (
+    BTreeMechanism,
+    FITingMechanism,
+    PGMMechanism,
+    RMIMechanism,
+    _optimal_pla,
+    _shrinking_cone,
+)
+
+KINDS = ["weblogs", "iot", "longitude", "uniform_int"]
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("eps", [16.0, 128.0])
+def test_pgm_error_bound(kind, eps):
+    x = make_keys(kind, 8000, seed=3)
+    y = np.arange(len(x), dtype=np.float64)
+    m = PGMMechanism(eps=eps, recursive=False).fit(x, y)
+    err = np.abs(m.predict(x) - y)
+    assert err.max() <= eps + 1e-6
+    assert m.plm.max_abs_error() <= eps + 1e-6
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("eps", [16.0, 128.0])
+def test_fiting_error_bound(kind, eps):
+    x = make_keys(kind, 8000, seed=4)
+    y = np.arange(len(x), dtype=np.float64)
+    m = FITingMechanism(eps=eps).fit(x, y)
+    err = np.abs(m.predict(x) - y)
+    assert err.max() <= eps + 1e-6
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_pgm_no_more_segments_than_fiting(kind):
+    """Optimal PLA (free intercept) <= greedy shrinking cone (Table 1)."""
+    x = make_keys(kind, 8000, seed=5)
+    y = np.arange(len(x), dtype=np.float64)
+    pgm = PGMMechanism(eps=64, recursive=False).fit(x, y)
+    fit = FITingMechanism(eps=64).fit(x, y)
+    assert pgm.plm.n_segments <= fit.plm.n_segments
+
+
+def _dp_min_segments(x, y, eps):
+    """Quadratic DP: ground-truth minimum #segments covering all points."""
+    n = len(x)
+    # feas[i][j]: points i..j fit one line within eps (via optimal PLA on
+    # the subrange returning a single segment)
+    best = [0] * (n + 1)
+    for i in range(n - 1, -1, -1):
+        best[i] = 1 + best[i + 1]
+        for j in range(n - 1, i, -1):
+            segs = _optimal_pla(x[i : j + 1], y[i : j + 1], eps)
+            if len(segs) == 1:
+                best[i] = min(best[i], 1 + best[j + 1])
+                break  # greedy-longest is optimal for interval covers
+    return best[0]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_pgm_optimality_small(seed):
+    rng = np.random.default_rng(seed)
+    x = np.unique(rng.integers(0, 4000, 60)).astype(np.float64)
+    y = np.arange(len(x), dtype=np.float64)
+    segs = _optimal_pla(x, y, 2.0)
+    assert len(segs) == _dp_min_segments(x, y, 2.0)
+
+
+def test_cone_anchor_midpoint_within_eps():
+    x = make_keys("iot", 4000, seed=6)
+    y = np.arange(len(x), dtype=np.float64)
+    for i, j, slope, icept in _shrinking_cone(x, y, 32.0):
+        seg_err = np.abs(slope * (x[i : j + 1] - x[i]) + icept - y[i : j + 1])
+        assert seg_err.max() <= 32.0 + 1e-6
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_rmi_predicts_and_exports_plm(kind):
+    x = make_keys(kind, 9000, seed=7)
+    y = np.arange(len(x), dtype=np.float64)
+    m = RMIMechanism(n_leaf=256).fit(x, y)
+    direct = m.predict(x)
+    via_plm = m.plm.predict(x)
+    # root-routing and searchsorted-routing agree (up to fp at boundaries)
+    assert np.mean(np.abs(direct - via_plm) > 1e-6) < 0.01
+    # exported error bounds are sound for the searchsorted routing
+    y_hat, lo, hi = m.plm.predict_with_bounds(x)
+    assert np.all(y >= lo - 1e-9) and np.all(y <= hi + 1e-9)
+
+
+def test_btree_pages_and_height():
+    x = make_keys("uniform_int", 10_000, seed=8)
+    y = np.arange(len(x), dtype=np.float64)
+    b = BTreeMechanism(page_size=128, fanout=16).fit(x, y)
+    pred = b.predict(x)
+    assert np.abs(pred - y).max() <= 128  # within one page
+    assert b.height >= 2
+    assert b.size_bytes() > 16 * len(x)  # dense leaves dominate
+
+
+def test_recursive_pgm_levels():
+    x = make_keys("iot", 30_000, seed=9)
+    y = np.arange(len(x), dtype=np.float64)
+    m = PGMMechanism(eps=4, recursive=True).fit(x, y)
+    assert m.plm.levels >= 1
+    assert m.param_count() >= m.plm.param_count()
+
+
+def test_duplicate_keys_rejected():
+    x = np.array([1.0, 2.0, 2.0, 3.0])
+    y = np.arange(4, dtype=np.float64)
+    with pytest.raises(ValueError):
+        PGMMechanism(eps=1).fit(x, y)
+    with pytest.raises(ValueError):
+        FITingMechanism(eps=1).fit(x, y)

@@ -1,0 +1,103 @@
+"""Sampling technique (§4): patches, theory bounds, end-to-end lookup."""
+
+import numpy as np
+import pytest
+
+from conftest import make_keys
+from repro.core import LearnedIndex
+from repro.core.mechanisms import FITingMechanism, PGMMechanism, RMIMechanism
+from repro.core.sampling import (
+    exponential_search,
+    fit_sampled,
+    hoeffding_bound,
+    sample_pairs,
+    sample_size_bound,
+)
+from repro.core.mdl import correction_cost, mae
+
+
+def test_sample_pairs_endpoints_and_size():
+    x = make_keys("iot", 10_000, seed=0)
+    y = np.arange(len(x), dtype=np.float64)
+    xs, ys = sample_pairs(x, y, rate=0.01, rng=np.random.default_rng(0))
+    assert xs[0] == x[0] and xs[-1] == x[-1]
+    assert abs(len(xs) - 0.01 * len(x)) <= 3
+    # positions are FULL-data positions
+    assert np.all(ys == np.searchsorted(x, xs))
+
+
+@pytest.mark.parametrize("factory", [
+    lambda: PGMMechanism(eps=64, recursive=False),
+    lambda: FITingMechanism(eps=64),
+    lambda: RMIMechanism(n_leaf=200),
+])
+@pytest.mark.parametrize("rate", [0.1, 0.01])
+def test_sampled_index_near_full_quality(factory, rate):
+    """Sampling keeps MAE within a small multiple of the full build (§6.3)."""
+    x = make_keys("weblogs", 40_000, seed=1)
+    y = np.arange(len(x), dtype=np.float64)
+    full = factory().fit(x, y)
+    samp = fit_sampled(factory, x, y, rate=rate, rng=np.random.default_rng(1))
+    mae_full = mae(y, full.predict(x))
+    mae_samp = mae(y, samp.predict(x))
+    # paper: non-degraded == same order of magnitude; generous factor here
+    assert mae_samp <= max(8.0 * mae_full, 64.0 * 4)
+
+
+@pytest.mark.parametrize("rate", [0.05, 0.01])
+def test_sampled_lookup_exact(rate):
+    """Every key still found after sampling + patch + refinalized bounds."""
+    x = make_keys("iot", 30_000, seed=2)
+    idx = LearnedIndex.build(x, method="pgm", eps=64, sample_rate=rate)
+    q = np.random.default_rng(3).choice(x, 5000)
+    pos = idx.lookup(q)
+    assert np.all(x[pos] == q)
+
+
+def test_exponential_search_matches_searchsorted():
+    x = make_keys("longitude", 20_000, seed=4)
+    rng = np.random.default_rng(5)
+    q = rng.choice(x, 2000)
+    # deliberately bad predictions to exercise the doubling phase
+    y_hat = np.clip(np.searchsorted(x, q) + rng.integers(-5000, 5000, len(q)), 0, len(x) - 1)
+    pos = exponential_search(x, q, y_hat.astype(np.float64))
+    assert np.all(x[pos] == q)
+
+
+def test_hoeffding_bound_monotone():
+    assert hoeffding_bound(128, 100) > hoeffding_bound(128, 10_000)
+    assert hoeffding_bound(1024, 100) > hoeffding_bound(16, 100)
+
+
+def test_sample_size_bound_scaling():
+    # O(alpha^2 log^2 E): quadratic in alpha, polylog in E
+    assert sample_size_bound(2.0, 128) == pytest.approx(4 * sample_size_bound(1.0, 128))
+    assert sample_size_bound(1.0, 2 ** 20) < 1000
+
+
+def test_sampling_estimates_correction_cost():
+    """Prop. 1 empirically: |L(D_s|M) - L(D|M)| within the bound."""
+    x = make_keys("iot", 50_000, seed=6)
+    y = np.arange(len(x), dtype=np.float64)
+    m = PGMMechanism(eps=256, recursive=False).fit(x, y)
+    full_cost = correction_cost(y, m.predict(x))
+    rng = np.random.default_rng(7)
+    fails = 0
+    for _ in range(10):
+        pick = rng.choice(len(x), 2000, replace=False)
+        samp_cost = correction_cost(y[pick], m.predict(x[pick]))
+        bound = hoeffding_bound(m.plm.max_abs_error(), 2000, delta=0.05)
+        fails += abs(samp_cost - full_cost) > bound
+    assert fails <= 2  # 5% failure prob per trial; allow slack
+
+
+def test_fewer_segments_with_sampling():
+    """Generalization improvement (§6.3 Fig. 7): fewer segments at lower s."""
+    x = make_keys("iot", 60_000, seed=8)
+    y = np.arange(len(x), dtype=np.float64)
+    full = PGMMechanism(eps=64, recursive=False).fit(x, y)
+    samp = fit_sampled(
+        lambda: PGMMechanism(eps=64, recursive=False), x, y,
+        rate=0.01, rng=np.random.default_rng(9), refinalize=False,
+    )
+    assert samp.plm.n_segments <= full.plm.n_segments
