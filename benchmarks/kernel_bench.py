@@ -1,58 +1,129 @@
-"""Pallas lookup kernel benchmark: kernel(interpret) vs jnp-oracle vs
-numpy reference, plus the roofline-relevant bytes/query accounting.
+"""Single-pass query engine benchmark: engine (windowed search +
+compacted fallback) vs the full-searchsorted oracle path, plus the
+roofline-relevant bytes/query accounting.
 
-interpret=True timing is NOT TPU wall-time (the body runs in Python);
-the comparable numbers are (a) jnp-oracle XLA-CPU time and (b) the
-per-query bytes/ops the kernel's tiling contracts to, reported as
-derived columns.
+The engine's CPU backend is the XLA windowed bisect (the Pallas kernel
+is the TPU deploy target; ``interpret=True`` runs its body in Python and
+is validated for correctness, not timed).  Before this PR the kernel
+path ran the full-array oracle over EVERY query as an unconditional
+fallback pass, so it was strictly slower than the oracle it wrapped;
+the "before" column is therefore the oracle path itself (a lower bound
+on the old cost).
+
+Also writes ``BENCH_kernel.json`` at the repo root — the perf
+trajectory file tracked across PRs.
 """
 
 from __future__ import annotations
 
+import json
+import os
+import pathlib
 import time
+
+# this container is 2-core: XLA's per-op thread handoff costs more than
+# the parallelism returns on these op sizes (no effect if jax is already
+# initialized, e.g. under the test suite)
+os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
 
 import numpy as np
 
 from repro.core import LearnedIndex
-from repro.kernels import batched_lookup, from_learned_index
+from repro.kernels import QueryEngine, batched_lookup, from_learned_index
 
 from .datasets import iot
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _best_ns(fn, n_q, reps=9):
+    fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter_ns()
+        fn()
+        best = min(best, time.perf_counter_ns() - t0)
+    return best / n_q
+
+
+def _best_ns_pair(fn_a, fn_b, n_q, reps=15):
+    """Interleaved best-of timing: alternating the two arms cancels the
+    container's load drift out of the comparison."""
+    fn_a(), fn_b()
+    best_a = best_b = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter_ns()
+        fn_a()
+        best_a = min(best_a, time.perf_counter_ns() - t0)
+        t0 = time.perf_counter_ns()
+        fn_b()
+        best_b = min(best_b, time.perf_counter_ns() - t0)
+    return best_a / n_q, best_b / n_q
 
 
 def run(n=None, seed=0):
     keys = iot(n)[:200_000]
-    # f32-exact grid for the kernel path
+    # f32-exact grid for the device path
     keys = np.unique(np.round(keys * 64.0))
     idx = LearnedIndex.build(keys, method="pgm", eps=64, gap_rho=0.15)
+    engine = QueryEngine.from_index(idx)          # xla windowed on CPU
+    oracle = QueryEngine.from_index(idx, backend="oracle")
     arrs = from_learned_index(idx)
     err_lo = idx.mech.plm.err_lo
     rng = np.random.default_rng(seed)
     rows = []
+    w_tile = 2048
     for n_q in (4096, 32768):
         q = rng.choice(keys, n_q)
-        # warm + time oracle path (XLA CPU)
-        out_o, *_ = batched_lookup(arrs, err_lo, q, use_kernel=False)
-        t0 = time.perf_counter_ns()
-        out_o, *_ = batched_lookup(arrs, err_lo, q, use_kernel=False)
-        t_oracle = (time.perf_counter_ns() - t0) / n_q
-        # kernel (interpret) — correctness + fallback-rate measurement
-        out_k, slot, found, fb = batched_lookup(arrs, err_lo, q,
-                                                interpret=True)
-        assert np.array_equal(np.asarray(out_k), np.asarray(out_o))
+        escapes_before = engine.stats["oracle_escapes"]
+        t_oracle, t_engine = _best_ns_pair(
+            lambda: np.asarray(oracle.lookup(q)[0]),
+            lambda: np.asarray(engine.lookup(q)[0]), n_q)
+        out_o = np.asarray(oracle.lookup(q)[0])
+        out_e, _, _, fb = engine.lookup(q)
+        assert np.array_equal(np.asarray(out_e), out_o)
+        # Pallas kernel (interpret): correctness + fallback-rate only
+        out_k, _, _, fb_k = batched_lookup(arrs, err_lo, q, interpret=True)
+        assert np.array_equal(np.asarray(out_k), out_o)
         # numpy reference
-        t0 = time.perf_counter_ns()
-        idx.gapped.lookup_batch(q)
-        t_numpy = (time.perf_counter_ns() - t0) / n_q
-        w_tile = 2048
+        t_numpy = _best_ns(lambda: idx.gapped.lookup_batch(q), n_q, reps=3)
         rows.append({
             "name": f"lookup.q{n_q}",
-            "overall_ns": t_oracle,
+            "overall_ns": t_engine,
+            "oracle_ns": t_oracle,
             "numpy_ns": t_numpy,
+            "speedup_vs_oracle": t_oracle / t_engine,
             "fallback_rate": float(fb) / n_q,
+            "kernel_fallback_rate": float(fb_k) / n_q,
+            "oracle_escapes": engine.stats["oracle_escapes"]
+            - escapes_before,
             "hbm_bytes_per_query": 2 * w_tile * 4 / 256.0,  # window/q_tile
             "match_oracle": 1.0,
         })
+    _write_trajectory(rows)
     return rows
+
+
+def _write_trajectory(rows):
+    """BENCH_kernel.json at the repo root: before (oracle ns/query — a
+    lower bound on the old always-double-resolve kernel path) vs after
+    (single-pass compacted path) per batch size."""
+    payload = {
+        "benchmark": "kernel.single_pass_engine",
+        "dataset": "iot",
+        "rows": [
+            {
+                "batch": r["name"],
+                "before_ns_per_query": r["oracle_ns"],
+                "after_ns_per_query": r["overall_ns"],
+                "speedup": r["speedup_vs_oracle"],
+                "fallback_rate": r["fallback_rate"],
+                "oracle_escapes": r["oracle_escapes"],
+            }
+            for r in rows
+        ],
+    }
+    (_ROOT / "BENCH_kernel.json").write_text(json.dumps(payload, indent=2))
 
 
 if __name__ == "__main__":

@@ -2,6 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV.  BENCH_N scales dataset size
 (default 400k keys); BENCH_FAST=1 runs a reduced sweep for CI.
+
+The kernel module additionally writes ``BENCH_kernel.json`` at the repo
+root (before/after ns-per-query + fallback rate of the single-pass
+compacted query path) — the perf trajectory tracked across PRs.
 """
 
 from __future__ import annotations
@@ -10,6 +14,10 @@ import os
 import sys
 import time
 import traceback
+
+# must precede the first jax import (see kernel_bench): per-op thread
+# handoff costs more than it returns on this container's 2 cores
+os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
 
 from . import (fig4_tradeoff, fig6_sampling, fig7_segments, fig8_nsafe,
                fig9_gaps, fig11_dynamic, kernel_bench, table1)

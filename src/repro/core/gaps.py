@@ -31,6 +31,7 @@ jnp reference and the Pallas lookup kernel consume (``repro.kernels``).
 from __future__ import annotations
 
 import dataclasses
+from bisect import bisect_left
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -196,6 +197,26 @@ class GappedArray:
                 t += 1
         return out
 
+    def contains_batch(self, qs: np.ndarray) -> np.ndarray:
+        """Vectorized membership test (present even when the stored
+        payload is a sentinel like -1, which ``lookup_batch`` conflates
+        with a miss)."""
+        qs = np.asarray(qs, np.float64)
+        j = np.searchsorted(self.slot_key, qs, side="right") - 1
+        ok = j >= 0
+        found = ok & (self.slot_key[np.maximum(j, 0)] == qs)
+        miss = np.flatnonzero(ok & ~found)
+        if miss.size:
+            offsets, lkeys, _ = self._csr()
+            start = offsets[j[miss]]
+            end = offsets[j[miss] + 1]
+            for t in range(int(np.max(end - start))):
+                idx = np.minimum(start + t, max(len(lkeys) - 1, 0))
+                hit = (start + t < end) & (lkeys[idx] == qs[miss])
+                found[miss[hit]] = True
+            # (bounded by the longest chain; chains are short by §5.2)
+        return found
+
     # ------------------------------------------------------------------
     # dynamic path (paper §5.3) — host-side mutation, no retraining
     # ------------------------------------------------------------------
@@ -217,6 +238,11 @@ class GappedArray:
         self._invalidate()
         m = self.n_slots
         p = int(np.clip(np.rint(self.mech.predict(np.array([key]))[0]), 0, m - 1))
+        return self._insert_at(key, payload, p)
+
+    def _insert_at(self, key: float, payload: int, p: int) -> str:
+        """insert() body with the predicted slot already computed."""
+        m = self.n_slots
         if not self.occupied[p]:
             prev = self._prev_occupied(p)
             nxt = self._next_occupied(p)
@@ -316,6 +342,310 @@ class GappedArray:
                 chain[t] = (key, payload)
                 return True
         return False
+
+    # ------------------------------------------------------------------
+    # batched dynamic path — state-identical to sequential insert()
+    # ------------------------------------------------------------------
+    def _repair_carried(self):
+        """One-shot carried-key repair: every unoccupied slot gets the key
+        of the first occupied slot to its right (+inf past the last).
+        Occupied keys are ascending, so the suffix minimum IS the nearest
+        occupied key to the right — one O(m) reverse cummin."""
+        x = np.where(self.occupied, self.slot_key, np.inf)
+        self.slot_key = np.minimum.accumulate(x[::-1])[::-1]
+
+    def insert_batch(self, keys: np.ndarray, payloads: np.ndarray) -> dict:
+        """Batched §5.3 inserts; final state is bit-identical to calling
+        ``insert()`` per key in order (slot_key/occupied/payload/links).
+
+        Three classes, partitioned by an order-equivalence argument on
+        pre-batch *gap runs* (the free-slot run between two occupied
+        slots — every check and write of ``insert()`` touches only the
+        runs of a key's predicted slot and of its key value):
+
+        A. **slot-easy** — predicted slot free and unique, keys
+           co-monotone with slots within their run, order-checks pass
+           against pre-batch neighbors, and no other class touches the
+           run: every arrival order occupies the same slots, so they are
+           applied vectorized, with ONE carried-key repair at the end
+           (replacing the per-insert slice writes and ``while`` scans).
+           A *collision group* (several keys predicting the same free
+           slot) joins this class through its first arrival — the
+           winner, which takes the slot under every interleaving; the
+           later arrivals always find the slot occupied and become
+           order-commuting chain appends (onto the winner's slot above
+           the winner's key, onto the run's left boundary below it),
+           provided the group has the run to itself and every member is
+           bracketed by the run's boundary keys.
+        B. **chain-certain** — predicted slot occupied pre-batch (it can
+           only stay occupied) and the key's run is untouched by class
+           C: the chain target is the single run boundary, and chains
+           are sorted sets, so appends commute; applied grouped per
+           target with one sort per chain (replacing per-insert
+           ``chain.sort()``).
+        C. **contested** — everything else (shared runs, failed or
+           flappable order checks, global-min displacement): re-run
+           through the same partition against the updated state (the
+           argument applies recursively), with a scalar arrival-order
+           replay for small or non-shrinking remainders.
+
+        A run touched by any hard key demotes its class-A candidates,
+        iterated to a fixed point, so classes A/B/C provably cannot
+        observe each other's intermediate states.  Duplicate keys raise
+        ``KeyError`` just like ``insert()`` (state of the current batch
+        is unspecified on raise, as with a partial sequential loop).
+
+        Returns ``{"slot": n, "chain": n}`` path counts.
+        """
+        keys = np.asarray(keys, np.float64)
+        payloads = np.asarray(payloads, np.int64)
+        n_b = keys.shape[0]
+        if n_b == 0:
+            return {"slot": 0, "chain": 0}
+        if n_b == 1:
+            path = self.insert(float(keys[0]), int(payloads[0]))
+            return {"slot": int(path == "slot"),
+                    "chain": int(path == "chain")}
+        # chunk large batches: cross-key run contention grows
+        # ~quadratically with batch size while the per-chunk vectorized
+        # cost is only ~O(m); sequential equality composes over chunks
+        chunk = max(4096, min(16384,
+                              int(np.count_nonzero(self.occupied)) // 8))
+        if n_b > chunk:
+            counts = {"slot": 0, "chain": 0}
+            for s in range(0, n_b, chunk):
+                c = self.insert_batch(keys[s:s + chunk],
+                                      payloads[s:s + chunk])
+                counts["slot"] += c["slot"]
+                counts["chain"] += c["chain"]
+            return counts
+        self._invalidate()
+        m = self.n_slots
+        p = np.clip(np.rint(self.mech.predict(keys)), 0, m - 1).astype(
+            np.int64)
+        occ_idx = np.flatnonzero(self.occupied)
+        if occ_idx.size == 0:  # degenerate: empty structure
+            counts = {"slot": 0, "chain": 0}
+            for i in range(n_b):
+                counts[self._insert_at(float(keys[i]), int(payloads[i]),
+                                       int(p[i]))] += 1
+            return counts
+        occ_keys = self.slot_key[occ_idx]
+        # run ids: index (into occ arrays) of the next occupied slot
+        run_p = np.searchsorted(occ_idx, p, side="left")
+        run_k = np.searchsorted(occ_keys, keys, side="right")
+        free = ~self.occupied[p]
+
+        # --- initial class-A candidates + collision groups -------------
+        order = np.argsort(p, kind="stable")  # stable: arrival order
+        po = p[order]
+        dup_adj = np.r_[False, po[1:] == po[:-1]]
+        is_dup = np.zeros(n_b, bool)
+        is_dup[order] = dup_adj | np.r_[dup_adj[1:], False]
+        # collision groups: free keys sharing a predicted slot; the first
+        # arrival (stable sort order) is the slot winner
+        is_winner = np.zeros(n_b, bool)
+        is_loser = np.zeros(n_b, bool)
+        w_of = np.arange(n_b)
+        gsel_o = is_dup[order] & free[order]
+        if np.any(gsel_o):
+            gpos = np.flatnonzero(gsel_o)
+            gstart = np.r_[True, po[gpos][1:] != po[gpos][:-1]]
+            winners = order[gpos[gstart]]
+            is_winner[winners] = True
+            w_of[order[gpos]] = np.repeat(winners,
+                                          np.diff(np.r_[
+                                              np.flatnonzero(gstart),
+                                              gpos.size]))
+            is_loser[order[gpos]] = ~is_winner[order[gpos]]
+        cand = free & (~is_dup | is_winner)
+        # co-monotone with slots inside the run + bracketed by the run's
+        # pre-batch boundary keys (incl. the left boundary's chain max)
+        ko, run_o, co = keys[order], run_p[order], cand[order]
+        same_run = run_o[1:] == run_o[:-1]
+        mono_bad = same_run & (ko[1:] <= ko[:-1]) & co[1:] & co[:-1]
+        bad_runs = set(run_o[1:][mono_bad].tolist())
+        pv = np.where(run_p > 0, occ_idx[np.maximum(run_p - 1, 0)], -1)
+        nx_key = np.where(run_p < occ_idx.size,
+                          occ_keys[np.minimum(run_p, occ_keys.size - 1)],
+                          np.inf)
+        prev_max = np.where(pv >= 0, self.slot_key[np.maximum(pv, 0)],
+                            -np.inf)
+        if self.links:
+            links_get = self.links.get
+            for i in np.flatnonzero((cand | is_loser)
+                                    & (pv >= 0)).tolist():
+                chain = links_get(int(pv[i]))
+                if chain and chain[-1][0] > prev_max[i]:
+                    prev_max[i] = chain[-1][0]
+        bracket = (prev_max < keys) & (keys < nx_key)
+        cand &= bracket
+
+        # group validity: every member bracketed in the winner's run,
+        # no duplicate keys inside the group, no members below the
+        # winner in the leftmost run (that is the global-min path), and
+        # the run exclusively theirs (no singleton candidates, no other
+        # groups) — under those conditions the winner takes the slot and
+        # every loser's chain target is fixed under all interleavings
+        group_ok = np.ones(n_b, bool)  # indexed by winner
+        if np.any(is_winner):
+            member = is_winner | is_loser
+            bad_w = np.unique(w_of[member & (
+                ~bracket | (run_p != run_p[w_of])
+                | ((run_p == 0) & (keys < keys[w_of]))
+            )])
+            group_ok[bad_w] = False
+            mo = np.lexsort((keys, p))
+            msel = member[mo]
+            mp, mk = p[mo][msel], keys[mo][msel]
+            kdup = np.r_[False, (mp[1:] == mp[:-1]) & (mk[1:] == mk[:-1])]
+            group_ok[w_of[mo[msel][kdup]]] = False
+            runs_w = run_p[is_winner]
+            n_runs0 = occ_idx.size + 1
+            groups_per_run = np.bincount(runs_w, minlength=n_runs0)
+            singles_per_run = np.bincount(
+                run_p[cand & ~is_winner], minlength=n_runs0)
+            crowded = (groups_per_run[run_p] > 1) | \
+                (singles_per_run[run_p] > 0)
+            group_ok &= ~(is_winner & crowded)
+            cand &= ~(is_winner & ~group_ok)
+
+        # --- demotion closure ------------------------------------------
+        # Predicted-occupied keys (class-B shaped) may COEXIST with
+        # candidates in a run when every such chain key sits below every
+        # candidate key: the chain target stays the run's left boundary
+        # and the candidates' order checks are unchanged by the appends,
+        # so all interleavings commute.  Otherwise the run is demoted.
+        n_runs = occ_idx.size + 1
+
+        def group_extreme(runs, vals, fill, reducer):
+            out = np.full(n_runs, fill)
+            if runs.size:
+                o = np.argsort(runs, kind="stable")
+                r, v = runs[o], vals[o]
+                starts = np.flatnonzero(np.r_[True, r[1:] != r[:-1]])
+                out[r[starts]] = reducer.reduceat(v, starts)
+            return out
+
+        bsel = ~free & (run_k > 0)
+        max_b = group_extreme(run_k[bsel], keys[bsel], -np.inf, np.maximum)
+        glob_min = ~free & (run_k == 0)  # global-min displacement: run 0
+        while True:
+            loser_alive = is_loser & group_ok[w_of] & cand[w_of]
+            # contested: flappable slot checks (alive-group losers are
+            # accounted for — they commute with their winner)
+            c0 = ~cand & free & ~loser_alive
+            touched = np.zeros(n_runs, bool)
+            touched[run_k[c0]] = True
+            touched[run_p[c0]] = True
+            if np.any(glob_min):
+                touched[0] = True
+            if bad_runs:
+                touched[list(bad_runs)] = True
+                bad_runs = set()
+            min_a = group_extreme(run_p[cand], keys[cand], np.inf,
+                                  np.minimum)
+            touched |= max_b >= min_a
+            demote = cand & touched[run_p]
+            if not np.any(demote):
+                break
+            cand &= ~demote
+
+        # --- class B / C partition -------------------------------------
+        hard = ~cand
+        loser_alive = is_loser & group_ok[w_of] & cand[w_of]
+        c0 = hard & free & ~loser_alive
+        contested = np.zeros(n_runs, bool)
+        contested[run_p[c0]] = True
+        contested[run_k[c0]] = True
+        b_mask = hard & ~free & (run_k > 0) & ~contested[run_k]
+        # duplicate of an occupied slot's own key -> KeyError (as insert)
+        b_dup = b_mask & (occ_keys[np.maximum(run_k - 1, 0)] == keys)
+        if np.any(b_dup):
+            raise KeyError(f"duplicate key {keys[np.flatnonzero(b_dup)[0]]!r}")
+        c_mask = hard & ~b_mask & ~loser_alive
+
+        # --- apply A: vectorized occupation + one carried repair -------
+        pe = p[cand]
+        n_slot = int(pe.size)
+        if n_slot:
+            self.occupied[pe] = True
+            self.payload[pe] = payloads[cand]
+            self.slot_key[pe] = keys[cand]
+            self._repair_carried()
+
+        # --- apply B (+ alive-group losers): grouped chain appends -----
+        n_chain = 0
+        bi = np.flatnonzero(b_mask)
+        li = np.flatnonzero(loser_alive)
+        targets = occ_idx[run_k[bi] - 1]
+        if li.size:  # losers chain on the winner's slot or the boundary
+            l_t = np.where(keys[li] > keys[w_of[li]], p[li], pv[li])
+            bi = np.concatenate([bi, li])
+            targets = np.concatenate([targets, l_t])
+        if bi.size:
+            torder = np.argsort(targets, kind="stable")
+            bt = targets[torder].tolist()
+            bk = keys[bi][torder].tolist()
+            bp = payloads[bi][torder].tolist()
+            starts = np.flatnonzero(
+                np.r_[True, np.diff(targets[torder]) != 0]).tolist()
+            starts.append(len(bt))
+            links = self.links
+            for gi in range(len(starts) - 1):
+                s, e = starts[gi], starts[gi + 1]
+                t = bt[s]
+                if e - s == 1:  # singleton: positioned insert, O(1) dup check
+                    chain = links.get(t)
+                    if chain is None:
+                        links[t] = [(bk[s], bp[s])]
+                    else:
+                        k1 = bk[s]
+                        j = bisect_left(chain, (k1,))
+                        if j < len(chain) and chain[j][0] == k1:
+                            raise KeyError(f"duplicate key {k1!r}")
+                        chain.insert(j, (k1, bp[s]))
+                    continue
+                chain = links.setdefault(t, [])
+                chain.extend(zip(bk[s:e], bp[s:e]))
+                chain.sort()
+                prev = None
+                for k1, _ in chain:
+                    if k1 == prev:
+                        raise KeyError(f"duplicate key {k1!r}")
+                    prev = k1
+            n_chain += int(bi.size)
+        self.n_keys += n_slot + n_chain
+
+        # --- apply C -----------------------------------------------------
+        # Re-partition the contested keys against the updated state: the
+        # equivalence argument applies recursively, and contention shrinks
+        # geometrically per round.  Sequential replay only when a round
+        # makes no progress (pathological all-contested batches).
+        counts = {"slot": n_slot, "chain": n_chain}
+        ci = np.flatnonzero(c_mask)
+        if ci.size == n_b or ci.size <= 1024:
+            # no progress (pathological all-contested batch) or a small
+            # tail: scalar replay in arrival order beats another round
+            ins_at = self._insert_at
+            for k, pl, pp in zip(keys[ci].tolist(), payloads[ci].tolist(),
+                                 p[ci].tolist()):
+                counts[ins_at(k, pl, pp)] += 1
+        elif ci.size:
+            sub = self.insert_batch(keys[ci], payloads[ci])
+            counts["slot"] += sub["slot"]
+            counts["chain"] += sub["chain"]
+        return counts
+
+    def delete_batch(self, keys: np.ndarray) -> int:
+        """Batched §5.3 deletes — a host-side sweep over ``delete()``
+        (deletes are the rare arm of dynamic workloads; a vectorized
+        sweep is a ROADMAP follow-up alongside the CSR links refactor).
+        Returns the number of keys actually removed."""
+        removed = 0
+        for k in np.asarray(keys, np.float64):
+            removed += bool(self.delete(float(k)))
+        return removed
 
     # ------------------------------------------------------------------
     # frozen export for the jnp/Pallas query path

@@ -115,12 +115,28 @@ class LearnedIndex:
             )
         return self.gapped.insert(key, payload)
 
+    def insert_batch(self, keys: np.ndarray, payloads: np.ndarray) -> dict:
+        """Vectorized bulk insert; state-identical to sequential insert()."""
+        if self.gapped is None:
+            raise NotImplementedError(
+                "dynamic ops need gap insertion (build with gap_rho > 0)"
+            )
+        return self.gapped.insert_batch(keys, payloads)
+
     def delete(self, key: float) -> bool:
         if self.gapped is None:
             raise NotImplementedError(
                 "dynamic ops need gap insertion (build with gap_rho > 0)"
             )
         return self.gapped.delete(key)
+
+    def delete_batch(self, keys: np.ndarray) -> int:
+        """Bulk delete; returns the number of keys removed."""
+        if self.gapped is None:
+            raise NotImplementedError(
+                "dynamic ops need gap insertion (build with gap_rho > 0)"
+            )
+        return self.gapped.delete_batch(keys)
 
     def update(self, key: float, payload: int) -> bool:
         if self.gapped is None:

@@ -48,18 +48,15 @@ class IndexedTokenDataset:
         return ds
 
     def _refresh_device(self):
-        from ..kernels import from_learned_index
-        arrays = from_learned_index(self.index)
-        self._device_state = (arrays, self.index.mech.plm.err_lo.copy())
+        from ..kernels import QueryEngine
+        self._device_state = QueryEngine.from_index(self.index)
 
     # ------------------------------------------------------------------
     def ordinals(self, sample_keys: np.ndarray) -> np.ndarray:
         """Batched key -> document ordinal (payload) resolution."""
         q = np.asarray(sample_keys, np.float64)
         if self.use_device and self._device_state is not None:
-            from ..kernels import batched_lookup
-            arrays, err_lo = self._device_state
-            out, *_ = batched_lookup(arrays, err_lo, q)
+            out, *_ = self._device_state.lookup(q)
             out = np.asarray(out)
         else:
             out = self.index.lookup(q)
@@ -85,3 +82,14 @@ class IndexedTokenDataset:
         if self.use_device:
             self._refresh_device()  # device arrays are immutable snapshots
         return path
+
+    def ingest_batch(self, docs, sample_keys) -> dict:
+        """Batched streamed append: one vectorized §5.3 ``insert_batch``
+        (and at most ONE device refreeze) for a whole shipment of
+        documents.  Returns the {'slot': n, 'chain': n} path counts."""
+        ordinals = self.store.append_batch(docs, sample_keys)
+        counts = self.index.insert_batch(
+            np.asarray(sample_keys, np.float64), ordinals)
+        if self.use_device:
+            self._refresh_device()
+        return counts

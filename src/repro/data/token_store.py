@@ -92,3 +92,17 @@ class PackedTokenStore:
         self.sample_keys = np.concatenate(
             [self.sample_keys, [np.uint64(sample_key)]])
         return self.n_docs - 1
+
+    def append_batch(self, docs, sample_keys) -> np.ndarray:
+        """Append many documents with ONE buffer reallocation (the
+        per-doc ``append`` copies the whole token buffer every call).
+        Returns the new document ordinals."""
+        first = self.n_docs
+        lens = np.array([len(d) for d in docs], np.int64)
+        self.tokens = np.concatenate(
+            [self.tokens] + [np.asarray(d, np.uint32) for d in docs])
+        self.doc_offsets = np.concatenate(
+            [self.doc_offsets, self.doc_offsets[-1] + np.cumsum(lens)])
+        self.sample_keys = np.concatenate(
+            [self.sample_keys, np.asarray(sample_keys, np.uint64)])
+        return np.arange(first, first + len(lens), dtype=np.int64)

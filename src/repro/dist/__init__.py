@@ -1,0 +1,18 @@
+# Sharding policy: logical axis names -> mesh PartitionSpecs.
+# partitioning.py is the only module that spells a mesh axis name.
+
+from .partitioning import (
+    activation_constrainer,
+    input_shardings,
+    param_pspecs,
+    param_shardings,
+    pspec_for_axes,
+)
+
+__all__ = [
+    "activation_constrainer",
+    "input_shardings",
+    "param_pspecs",
+    "param_shardings",
+    "pspec_for_axes",
+]

@@ -1,0 +1,164 @@
+"""Rule-based logical-axis -> mesh-axis partitioning (the single place
+sharding policy lives; see models/base.py for the logical vocabulary).
+
+Every parameter / activation carries a tuple of logical axis names;
+``pspec_for_axes`` maps that tuple onto whatever mesh is alive by three
+rules, applied left to right:
+
+1. **Vocabulary**: "vocab"/"heads"/"kv"/"ffn"/"experts" want the "model"
+   axis; "batch" wants ("pod", "data"); "embed" wants nothing (or "data"
+   under FSDP — ZeRO-3 falls out of the param sharding); everything else
+   (including None) is replicated.
+2. **Claim once**: each mesh axis is assigned to at most one tensor dim
+   (first claimant wins), so e.g. ("experts", "embed", "ffn") shards only
+   the expert dim over "model".
+3. **Divisibility guard**: a dim is only sharded if its size divides by
+   the product of the claimed mesh axis sizes; otherwise it is
+   replicated (elastic meshes never produce invalid shardings).
+
+``param_pspecs`` / ``param_shardings`` lift the rule over a whole
+logical-axes tree; ``input_shardings`` shard batch dims of input specs;
+``activation_constrainer`` closes over a mesh and returns the
+``constrain(x, axes)`` function threaded through every model forward.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+__all__ = [
+    "pspec_for_axes",
+    "param_pspecs",
+    "param_shardings",
+    "input_shardings",
+    "activation_constrainer",
+]
+
+# logical axis -> preferred mesh axes, in priority order
+_RULES = {
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv": ("model",),
+    "ffn": ("model",),
+    "experts": ("model",),
+    "batch": ("pod", "data"),
+}
+_FSDP_RULES = {"embed": ("data",)}
+
+
+def _mesh_sizes(mesh) -> dict:
+    """axis name -> size; works for jax.sharding.Mesh and duck-typed
+    stand-ins exposing ``axis_names`` + ``devices.shape`` (tests)."""
+    return dict(zip(tuple(mesh.axis_names), tuple(mesh.devices.shape)))
+
+
+def pspec_for_axes(
+    axes: Tuple[Optional[str], ...],
+    mesh,
+    *,
+    fsdp: bool = False,
+    shape: Optional[Tuple[int, ...]] = None,
+    seq_axis: Optional[str] = None,
+) -> PS:
+    """Map one logical-axes tuple to a PartitionSpec under ``mesh``.
+
+    ``shape`` (optional) enables the divisibility guard per dim.
+    ``seq_axis`` names a mesh axis for sequence parallelism: a None
+    logical entry directly after "batch" is sharded over it.
+    """
+    sizes = _mesh_sizes(mesh)
+    claimed = set()
+    out = []
+    for d, name in enumerate(axes):
+        want = _RULES.get(name, ())
+        if fsdp and not want:
+            want = _FSDP_RULES.get(name, ())
+        if (name is None and seq_axis is not None and d > 0
+                and axes[d - 1] == "batch"):
+            want = (seq_axis,)
+        picked = tuple(
+            a for a in want if a in sizes and a not in claimed
+        )
+        if picked and shape is not None:
+            total = 1
+            for a in picked:
+                total *= sizes[a]
+            if total > 1 and shape[d] % total:
+                picked = ()
+        claimed.update(picked)
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(picked)
+    return PS(*out)
+
+
+def _map_axes_tree(laxes_tree, fn):
+    """tree-map over a logical-axes tree whose leaves are tuples."""
+    return jax.tree.map(
+        fn, laxes_tree, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def param_pspecs(laxes_tree, mesh, *, fsdp: bool = False,
+                 abstract_tree=None):
+    """Tree of PartitionSpecs mirroring a logical-axes tree.
+
+    ``abstract_tree`` (ShapeDtypeStructs, same structure) turns on the
+    divisibility guard.
+    """
+    if abstract_tree is None:
+        return _map_axes_tree(
+            laxes_tree, lambda ax: pspec_for_axes(ax, mesh, fsdp=fsdp)
+        )
+    return jax.tree.map(
+        lambda ax, sds: pspec_for_axes(ax, mesh, fsdp=fsdp,
+                                       shape=tuple(sds.shape)),
+        laxes_tree,
+        abstract_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def param_shardings(laxes_tree, mesh, *, fsdp: bool = False,
+                    abstract_tree=None):
+    """Like param_pspecs but wrapped into device-placeable NamedShardings."""
+    specs = param_pspecs(laxes_tree, mesh, fsdp=fsdp,
+                         abstract_tree=abstract_tree)
+    return jax.tree.map(
+        lambda ps: NamedSharding(mesh, ps), specs,
+        is_leaf=lambda x: isinstance(x, PS),
+    )
+
+
+def input_shardings(abstract_inputs, mesh):
+    """Batch-shard input specs: dim 0 over ("pod","data") when divisible,
+    everything else replicated."""
+    def one(sds):
+        axes = ("batch",) + (None,) * (len(sds.shape) - 1)
+        ps = pspec_for_axes(axes, mesh, shape=tuple(sds.shape))
+        return NamedSharding(mesh, ps)
+
+    return jax.tree.map(one, abstract_inputs)
+
+
+def activation_constrainer(mesh, *, fsdp: bool = False,
+                           seq_axis: Optional[str] = None):
+    """Returns ``constrain(x, logical_axes)`` for use inside jit.
+
+    The constraint is derived per call from the *static* activation shape,
+    so the divisibility guard composes with elastic meshes for free.
+    """
+    def constrain(x, axes):
+        ps = pspec_for_axes(tuple(axes), mesh, fsdp=fsdp,
+                            shape=tuple(x.shape), seq_axis=seq_axis)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, ps)
+        )
+
+    return constrain

@@ -1,16 +1,55 @@
-# Pallas TPU kernels for the paper's compute hot-spot: fused batched
-# learned-index lookup (predict + bounded rank-search over VMEM tiles).
-# lookup.py: pl.pallas_call + BlockSpec (+scalar-prefetch dynamic windows)
-# ops.py:    jitted end-to-end wrapper (sort, schedule, fallback, chains)
-# ref.py:    pure-jnp oracle the kernel is validated against.
+"""Device kernels for the paper's compute hot-spot: fused batched
+learned-index lookup (predict + bounded rank-search over VMEM tiles).
 
-from .ops import IndexArrays, batched_lookup, from_learned_index
+Modules
+-------
+lookup.py: pl.pallas_call + BlockSpec (+scalar-prefetch dynamic windows)
+ops.py:    the single-pass ``QueryEngine`` pipeline (sort-aware
+           scheduling, compacted fallback, fused CSR epilogue)
+ref.py:    pure-jnp oracle the kernel is validated against + the shared
+           ``chain_hit_index`` fori_loop CSR scan.
+
+QueryEngine API and the single-pass pipeline contract
+-----------------------------------------------------
+``QueryEngine(arrays, err_lo, err_hi)`` (or ``QueryEngine.from_index``)
+wraps a frozen ``IndexArrays`` and serves ``engine.lookup(queries,
+queries_sorted=...)`` -> ``(payloads, slot, found, fb_count)``.
+
+1. **Single pass**: each query is resolved by exactly one bounded window
+   search (Pallas kernel on TPU; XLA fixed-trip windowed bisect
+   elsewhere).  The full-array oracle is evaluated ONLY over the
+   compacted fallback buffer — capacity ``max(q_tile, ~2% of Q)``,
+   shape-static — never over the whole batch.  If the buffer overflows
+   (more flagged queries than capacity), a host-side escape hatch
+   re-dispatches the batch to the oracle backend; this is counted in
+   ``engine.stats["oracle_escapes"]`` and is rare by construction.
+2. **Sort-aware scheduling**: the Pallas path needs ascending queries
+   for its tile windows; callers that already issue sorted batches
+   (e.g. serving page lookups) pass ``queries_sorted=True`` and skip the
+   argsort + inverse-permutation round trip.  The XLA and oracle
+   backends are permutation-free.
+3. **Shape buckets**: query batches are padded (+inf tail — sorted stays
+   sorted) up to power-of-two buckets so each bucket compiles once; the
+   serving engine stops re-tracing per batch.
+4. **Fused epilogue**: slot->payload gather and the CSR linking-array
+   scan run in one stage (in the sorted domain on the Pallas path, so a
+   single unsort gather finishes the batch).  The chain scan is a rolled
+   ``lax.fori_loop`` — one graph copy regardless of ``max_chain``.
+5. **Wide payloads**: int64 payloads are carried as an i32 hi/lo pair
+   and reconstructed in the epilogue (``IndexArrays.wide``); narrow
+   payloads pay nothing.
+"""
+
+from .ops import (IndexArrays, QueryEngine, batched_lookup,
+                  from_learned_index)
 from .ops_gap import gap_positions_device, gap_positions_oracle
-from .ref import lookup_ref, predict_ref, resolve_chains
+from .ref import chain_hit_index, lookup_ref, predict_ref, resolve_chains
 
 __all__ = [
     "IndexArrays",
+    "QueryEngine",
     "batched_lookup",
+    "chain_hit_index",
     "from_learned_index",
     "gap_positions_device",
     "gap_positions_oracle",

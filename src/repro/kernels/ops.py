@@ -1,15 +1,30 @@
-"""Jitted wrapper around the fused lookup kernel — the public device API.
+"""Single-pass device query engine — the public device API.
 
 ``IndexArrays`` freezes a host-side ``LearnedIndex`` / ``GappedArray``
-into f32/i32 device arrays; ``batched_lookup`` runs the full pipeline:
+into f32/i32 device arrays; ``batched_lookup`` / ``QueryEngine`` run the
+full pipeline:
 
-    sort queries -> tile window scheduling -> Pallas kernel
-    -> unsort -> fallback re-resolve (jnp oracle, rare)
-    -> payload + linking-array (CSR) resolution
+    [sort queries]* -> bounded window search (Pallas kernel on TPU,
+    XLA fixed-trip windowed bisect on CPU/GPU)
+    -> COMPACTED fallback re-resolution (gather the rare fb-flagged
+       queries into a fixed-capacity buffer, searchsorted only those)
+    -> fused payload + linking-array (CSR) epilogue -> [unsort]*
 
-Everything is shape-static and jit-friendly; ``interpret=True`` runs the
-kernel body in Python on CPU (how this container validates it — the TPU
-is the deploy target).
+(* only on the Pallas path with unsorted queries — the XLA backend is
+permutation-free, and ``queries_sorted=True`` skips the argsort round
+trip for callers that already issue sorted batches.)
+
+The fallback contract is the engine's single-pass guarantee: the
+full-array oracle is NEVER evaluated over the whole batch unless the
+compaction buffer (capacity ``max(q_tile, ~2% of Q)``) overflows, in
+which case a host-side escape hatch re-dispatches the batch to the
+oracle backend (rare by construction; counted in ``QueryEngine.stats``
+and asserted in tests/test_query_engine.py).
+
+Everything is shape-static and jit-friendly; ``QueryEngine`` buckets
+query shapes so the serving path stops re-tracing per batch.
+``interpret=True`` runs the Pallas kernel body in Python on CPU (how
+this container validates it — the TPU is the deploy target).
 """
 
 from __future__ import annotations
@@ -25,7 +40,12 @@ import numpy as np
 from . import ref as _ref
 from .lookup import lookup_kernel_call
 
-__all__ = ["IndexArrays", "batched_lookup", "from_learned_index"]
+__all__ = ["IndexArrays", "QueryEngine", "batched_lookup",
+           "from_learned_index"]
+
+_I32_MIN = np.iinfo(np.int32).min
+_I32_MAX = np.iinfo(np.int32).max
+FB_FRAC = 0.02  # compaction buffer sizing: ~2% of the batch
 
 
 def _pad_pow(a: np.ndarray, multiple: int, fill) -> np.ndarray:
@@ -38,23 +58,42 @@ def _pad_pow(a: np.ndarray, multiple: int, fill) -> np.ndarray:
 
 @dataclasses.dataclass(frozen=True)
 class IndexArrays:
-    """Frozen device-side index state (all f32/i32/i64, shape-static)."""
+    """Frozen device-side index state (all f32/i32, shape-static).
+
+    64-bit payloads are carried as a hi/lo i32 pair (``wide=True``);
+    narrow payloads keep the hi arrays zero-length.
+    """
 
     seg_first_key: jax.Array   # (Kpad,) f32, +inf padded
     seg_slope: jax.Array       # (Kpad,) f32
     seg_icept: jax.Array       # (Kpad,) f32
     slot_key: jax.Array        # (Mpad,) f32, +inf padded
-    payload: jax.Array         # (Mpad,) i32 (row ids; 64-bit payloads pair two arrays)
+    payload: jax.Array         # (Mpad,) i32 — low 32 payload bits
+    payload_hi: jax.Array      # (Mpad,) i32 when wide else (0,)
     link_offsets: jax.Array    # (Mpad+1,) i32
     link_keys: jax.Array       # (Lpad,) f32
-    link_payloads: jax.Array   # (Lpad,) i32
+    link_payloads: jax.Array   # (Lpad,) i32 — low 32 payload bits
+    link_payload_hi: jax.Array  # (Lpad,) i32 when wide else (0,)
     n_slots: int               # true (unpadded) slot count
     max_chain: int
+    wide: bool                 # payloads need the hi/lo i64 reconstruction
+
+
+def _split_i64(a: np.ndarray):
+    """(lo32, hi32) two's-complement split of an int64 array."""
+    a = np.asarray(a, np.int64)
+    return a.astype(np.int32), (a >> 32).astype(np.int32)
 
 
 def from_learned_index(index, *, w_tile: int = 2048, seg_chunk: int = 512,
                        max_chain: Optional[int] = None) -> IndexArrays:
-    """Freeze a ``repro.core.LearnedIndex`` for the device query path."""
+    """Freeze a ``repro.core.LearnedIndex`` for the device query path.
+
+    Payloads wider than int32 are carried as a hi/lo i32 pair and
+    reconstructed to i64 in the epilogue (live payloads only — the
+    unoccupied-slot marker is never read because carried keys route
+    equal-key runs to their occupied tail slot).
+    """
     plm = getattr(index.mech, "plm", None)
     if plm is None:
         raise ValueError("mechanism does not export a piecewise linear model")
@@ -64,6 +103,7 @@ def from_learned_index(index, *, w_tile: int = 2048, seg_chunk: int = 512,
         payload = ga.payload
         offsets, lkeys, lpay = ga.export_csr_links()
         chain = max((len(v) for v in ga.links.values()), default=0)
+        live = np.asarray(ga.payload)[np.asarray(ga.occupied, bool)]
     else:
         slot_key = index.keys
         payload = np.arange(index.keys.shape[0], dtype=np.int64)
@@ -71,20 +111,28 @@ def from_learned_index(index, *, w_tile: int = 2048, seg_chunk: int = 512,
         lkeys = np.zeros(0, np.float64)
         lpay = np.zeros(0, np.int64)
         chain = 0
+        live = payload
     if max_chain is None:
         max_chain = int(chain)
+
+    wide = bool(
+        (live.size and (live.min() < _I32_MIN or live.max() > _I32_MAX))
+        or (lpay.size and (lpay.min() < _I32_MIN or lpay.max() > _I32_MAX))
+    )
 
     n_slots = slot_key.shape[0]
     skp = _pad_pow(np.asarray(slot_key, np.float32), w_tile, np.float32(np.inf))
     # one extra +inf block so index_map's (b, b+1) pair is always valid
     skp = np.concatenate([skp, np.full(w_tile, np.inf, np.float32)])
-    payp = _pad_pow(np.asarray(payload, np.int32), 1, np.int32(-1))
-    payp = np.concatenate(
-        [payp, np.full(skp.shape[0] - payp.shape[0], -1, np.int32)]
-    )
+    pay_lo, pay_hi = _split_i64(payload)
+    m_extra = skp.shape[0] - pay_lo.shape[0]
+    pay_lo = np.concatenate([pay_lo, np.full(m_extra, -1, np.int32)])
+    pay_hi = np.concatenate([pay_hi, np.full(m_extra, -1, np.int32)])
+    lpay_lo, lpay_hi = _split_i64(lpay)
     offp = np.concatenate(
         [offsets, np.full(skp.shape[0] + 1 - offsets.shape[0], offsets[-1])]
     ).astype(np.int32)
+    none32 = np.zeros(0, np.int32)
 
     return IndexArrays(
         seg_first_key=jnp.asarray(
@@ -99,71 +147,333 @@ def from_learned_index(index, *, w_tile: int = 2048, seg_chunk: int = 512,
                      np.float32(n_slots - 1))
         ),
         slot_key=jnp.asarray(skp),
-        payload=jnp.asarray(payp),
+        payload=jnp.asarray(pay_lo),
+        payload_hi=jnp.asarray(pay_hi if wide else none32),
         link_offsets=jnp.asarray(offp),
         link_keys=jnp.asarray(lkeys.astype(np.float32)),
-        link_payloads=jnp.asarray(lpay.astype(np.int32)),
+        link_payloads=jnp.asarray(lpay_lo),
+        link_payload_hi=jnp.asarray(lpay_hi if wide else none32),
         n_slots=n_slots,
         max_chain=max_chain,
+        wide=wide,
     )
+
+
+# ---------------------------------------------------------------------------
+# pipeline stages (all shape-static, called under one jit)
+# ---------------------------------------------------------------------------
+
+
+def _epilogue(queries, slot, found, payload, payload_hi,
+              link_offsets, link_keys, link_payloads, link_payload_hi,
+              max_chain, wide):
+    """Fused slot->payload gather + CSR chain scan (hi/lo aware).
+
+    Returns ``(lo32, hi32)``; ``hi32`` is zero-length when narrow.  The
+    i64 reconstruction happens on the host (x64 may be disabled in jax).
+    """
+    safe_slot = jnp.clip(slot, 0, payload.shape[0] - 1)
+    hit = _ref.chain_hit_index(queries, slot, found, link_offsets,
+                               link_keys, max_chain)
+    has_links = link_keys.shape[0] > 0 and max_chain > 0
+    out = jnp.where(found, jnp.take(payload, safe_slot), jnp.int32(-1))
+    if has_links:
+        out = jnp.where(hit >= 0,
+                        jnp.take(link_payloads, jnp.maximum(hit, 0)), out)
+    if not wide:
+        return out, jnp.zeros((0,), jnp.int32)
+    out_hi = jnp.where(found, jnp.take(payload_hi, safe_slot), jnp.int32(-1))
+    if has_links:
+        out_hi = jnp.where(
+            hit >= 0, jnp.take(link_payload_hi, jnp.maximum(hit, 0)), out_hi)
+    return out, out_hi
+
+
+def _xla_window_lookup(queries, seg_first_key, seg_slope, seg_icept,
+                       err_lo_by_seg, err_hi_by_seg, slot_key, n_slots,
+                       trips, flat_w, radix_table=None, radix_scale=None):
+    """XLA analog of the Pallas kernel: per-query bounded window search.
+
+    The mechanism's error bounds give each query a slot window.  Narrow
+    typical windows (``flat_w > 0``) use a loop-free rank count — one
+    (Q, W) gather + compare + sum, mirroring the kernel's masked-count
+    search.  Wide-window indexes (``flat_w == 0``) use a fixed-trip
+    branchless bisect instead.  Queries whose true bracket escapes the
+    window raise the same fallback flag as the kernel — no oracle pass
+    here.  Cost: O(W) clustered reads or O(trips) clustered gathers vs
+    the oracle's O(log Mpad) full-array probes.
+
+    ``radix_table``/``radix_scale`` (engine-built) replace the exact
+    segment-routing searchsorted with one multiply + one table gather.
+    The routing may be off by a segment near bucket boundaries — that is
+    SOUND: a mid-window rank is globally correct whatever the window
+    placement (slot_key is totally ordered), and edge ranks raise the
+    fallback flag.
+    """
+    m_pad = slot_key.shape[0]
+    # fold the error bounds into per-segment intercepts (K-sized ops are
+    # free; saves two full-batch gathers)
+    icept_lo = seg_icept + err_lo_by_seg - 1.0
+    icept_hi = seg_icept + err_hi_by_seg + 1.0
+    if radix_table is not None:
+        r = radix_table.shape[0]
+        b = jnp.clip((queries - radix_scale[0]) * radix_scale[1],
+                     0.0, float(r - 1)).astype(jnp.int32)
+        seg = jnp.take(radix_table, b, mode="clip")
+    else:
+        seg = jnp.clip(
+            jnp.searchsorted(seg_first_key, queries, side="right") - 1,
+            0, seg_first_key.shape[0] - 1,
+        )
+    dx = queries - jnp.take(seg_first_key, seg)
+    sl = jnp.take(seg_slope, seg)
+    lo0 = jnp.clip(jnp.floor(sl * dx + jnp.take(icept_lo, seg)),
+                   0.0, float(n_slots - 1)).astype(jnp.int32)
+    hi0 = jnp.clip(jnp.ceil(sl * dx + jnp.take(icept_hi, seg)),
+                   0.0, float(n_slots - 1)).astype(jnp.int32)
+    hi0 = jnp.maximum(hi0, lo0)
+
+    if flat_w:
+        # flat masked rank count (loop-free).  ``flat_w`` covers the p95
+        # segment window, NOT the widest: a query whose bracket escapes
+        # [lo0, lo0+W) hits the rank==0/rank==W edge flags below and is
+        # re-resolved by the compacted fallback — still single-pass.
+        width = flat_w
+        offs = jnp.arange(width, dtype=jnp.int32)
+        idx = jnp.minimum(lo0[:, None] + offs[None, :], m_pad - 1)
+        ks = jnp.take(slot_key, idx)
+        le = ks <= queries[:, None]
+        rank = jnp.sum(le.astype(jnp.int32), axis=1)
+        slot = lo0 - 1 + rank
+        found = (slot >= 0) & jnp.any(ks == queries[:, None], axis=1)
+        fb_lo = (rank == 0) & (lo0 > 0)
+        fb_hi = (rank == width) & (
+            jnp.take(slot_key, jnp.minimum(lo0 + width, m_pad - 1))
+            <= queries
+        )
+        fb = (fb_lo | fb_hi) & jnp.isfinite(queries)
+        return slot, found, fb
+
+    def body(_, carry):
+        lo, hi = carry
+        upd = lo < hi
+        mid = (lo + hi + 1) >> 1
+        go = jnp.take(slot_key, jnp.clip(mid, 0, m_pad - 1)) <= queries
+        lo = jnp.where(upd & go, mid, lo)
+        hi = jnp.where(upd, jnp.where(go, hi, mid - 1), hi)
+        return lo, hi
+
+    slot, _ = jax.lax.fori_loop(0, trips, body, (lo0 - 1, hi0))
+    safe = jnp.clip(slot, 0, m_pad - 1)
+    found = (slot >= 0) & (jnp.take(slot_key, safe) == queries)
+    fb_lo = (slot == lo0 - 1) & (lo0 > 0)
+    fb_hi = (slot == hi0) & (
+        jnp.take(slot_key, jnp.minimum(hi0 + 1, m_pad - 1)) <= queries
+    )
+    fb = (fb_lo | fb_hi) & jnp.isfinite(queries)
+    return slot, found, fb
+
+
+def _compact_fallback(queries, slot, found, fb, slot_key, fb_cap):
+    """Re-resolve ONLY the fb-flagged queries via a fixed-capacity buffer.
+
+    Gathers the flagged queries into a (fb_cap,)-shaped compacted batch
+    (one cumsum + one scatter), binary-searches just those, and scatters
+    the corrections back (out-of-range fill indices are dropped).  The
+    whole stage sits behind a ``lax.cond`` so the hit-heavy common case
+    (zero flags) pays one reduction and nothing else.  Returns the
+    overflow flag the host uses for the full-oracle escape hatch.
+    """
+    n_q = queries.shape[0]
+    pos = jnp.cumsum(fb.astype(jnp.int32)) - 1
+    fb_count = pos[-1] + 1
+    overflow = fb_count > fb_cap
+
+    def compact(args):
+        slot, found = args
+        dst = jnp.where(fb & (pos < fb_cap), pos, fb_cap)
+        idx = jnp.full((fb_cap + 1,), n_q, jnp.int32).at[dst].set(
+            jnp.arange(n_q, dtype=jnp.int32))[:fb_cap]
+        q_fb = jnp.take(queries, idx, mode="clip")
+        slot_fb = jnp.searchsorted(slot_key, q_fb, side="right").astype(
+            jnp.int32) - 1
+        found_fb = (slot_fb >= 0) & (
+            jnp.take(slot_key, jnp.maximum(slot_fb, 0)) == q_fb)
+        return (slot.at[idx].set(slot_fb, mode="drop"),
+                found.at[idx].set(found_fb, mode="drop"))
+
+    slot, found = jax.lax.cond(fb_count > 0, compact, lambda a: a,
+                               (slot, found))
+    return slot, found, fb_count, overflow
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("q_tile", "w_tile", "seg_chunk", "win_chunk",
-                     "max_chain", "n_slots", "interpret", "use_kernel"),
+                     "max_chain", "n_slots", "interpret", "backend",
+                     "assume_sorted", "fb_cap", "trips", "flat_w",
+                     "radix", "wide"),
 )
 def _pipeline(
     queries,
-    seg_first_key, seg_slope, seg_icept, err_lo_by_seg,
-    slot_key, payload, link_offsets, link_keys, link_payloads,
+    seg_first_key, seg_slope, seg_icept, err_lo_by_seg, err_hi_by_seg,
+    slot_key, payload, payload_hi, link_offsets, link_keys, link_payloads,
+    link_payload_hi, radix_table, radix_scale,
     *,
     q_tile, w_tile, seg_chunk, win_chunk, max_chain, n_slots,
-    interpret, use_kernel,
+    interpret, backend, assume_sorted, fb_cap, trips, flat_w, radix, wide,
 ):
     n_q = queries.shape[0]
     m_pad = slot_key.shape[0]
-    order = jnp.argsort(queries)
-    qs = jnp.take(queries, order)
 
-    if use_kernel:
-        # --- tile window scheduling (host-side XLA, cheap) -------------
-        y_hat, seg = _ref.predict_ref(qs, seg_first_key, seg_slope, seg_icept)
-        lo = y_hat + jnp.take(err_lo_by_seg, seg) - 1.0
-        lo = jnp.clip(lo, 0.0, float(n_slots - 1))
-        tile_lo = jnp.min(lo.reshape(-1, q_tile), axis=1)
-        tile_block = jnp.clip(
-            (tile_lo // w_tile).astype(jnp.int32), 0, m_pad // w_tile - 2
+    if backend == "oracle":
+        # permutation-free: searchsorted needs no sorted queries
+        slot, found = _ref.lookup_ref(
+            queries, seg_first_key, seg_slope, seg_icept, slot_key
         )
-        slot_s, found_s, fb_s, _pred = lookup_kernel_call(
-            qs, tile_block, seg_first_key, seg_slope, seg_icept, slot_key,
-            q_tile=q_tile, w_tile=w_tile, seg_chunk=seg_chunk,
-            win_chunk=win_chunk, interpret=interpret,
+        out, out_hi = _epilogue(queries, slot, found, payload, payload_hi,
+                                link_offsets, link_keys, link_payloads,
+                                link_payload_hi, max_chain, wide)
+        zero = jnp.int32(0)
+        return out, out_hi, slot, found, zero, zero > 0
+
+    if backend == "xla":
+        # permutation-free single pass: windowed bisect + compaction
+        slot, found, fb = _xla_window_lookup(
+            queries, seg_first_key, seg_slope, seg_icept,
+            err_lo_by_seg, err_hi_by_seg, slot_key, n_slots, trips,
+            flat_w,
+            radix_table=radix_table if radix else None,
+            radix_scale=radix_scale if radix else None,
         )
-        # --- fallback: re-resolve flagged queries with the oracle ------
-        slot_o, found_o = _ref.lookup_ref(
-            qs, seg_first_key, seg_slope, seg_icept, slot_key
+        slot, found, fb_count, overflow = _compact_fallback(
+            queries, slot, found, fb, slot_key, fb_cap
         )
-        slot_s = jnp.where(fb_s, slot_o, slot_s)
-        found_s = jnp.where(fb_s, found_o, found_s)
-        fb_count = jnp.sum(fb_s.astype(jnp.int32))
+        out, out_hi = _epilogue(queries, slot, found, payload, payload_hi,
+                                link_offsets, link_keys, link_payloads,
+                                link_payload_hi, max_chain, wide)
+        return out, out_hi, slot, found, fb_count, overflow
+
+    # --- Pallas backend -------------------------------------------------
+    if assume_sorted:
+        qs = queries
     else:
-        slot_s, found_s = _ref.lookup_ref(
-            qs, seg_first_key, seg_slope, seg_icept, slot_key
-        )
-        fb_count = jnp.int32(0)
+        order = jnp.argsort(queries)
+        qs = jnp.take(queries, order)
 
-    # --- unsort ---------------------------------------------------------
-    inv = jnp.argsort(order)
-    slot = jnp.take(slot_s, inv)
-    found = jnp.take(found_s, inv)
-
-    # --- payload + linking arrays ---------------------------------------
-    out = _ref.resolve_chains(
-        queries, slot, found, payload,
-        link_offsets, link_keys, link_payloads, max_chain,
+    # tile window scheduling (host-side XLA, cheap)
+    y_hat, seg = _ref.predict_ref(qs, seg_first_key, seg_slope, seg_icept)
+    lo = y_hat + jnp.take(err_lo_by_seg, seg) - 1.0
+    lo = jnp.clip(lo, 0.0, float(n_slots - 1))
+    tile_lo = jnp.min(lo.reshape(-1, q_tile), axis=1)
+    tile_block = jnp.clip(
+        (tile_lo // w_tile).astype(jnp.int32), 0, m_pad // w_tile - 2
     )
-    return out, slot, found, fb_count
+    slot_s, found_s, fb_s, _pred = lookup_kernel_call(
+        qs, tile_block, seg_first_key, seg_slope, seg_icept, slot_key,
+        q_tile=q_tile, w_tile=w_tile, seg_chunk=seg_chunk,
+        win_chunk=win_chunk, interpret=interpret,
+    )
+    # compacted fallback: ONLY flagged queries are re-searched (padding
+    # +inf queries flag the window edge — mask them out, they are sliced
+    # away by the caller)
+    fb_s = fb_s & jnp.isfinite(qs)
+    slot_s, found_s, fb_count, overflow = _compact_fallback(
+        qs, slot_s, found_s, fb_s, slot_key, fb_cap
+    )
+    # fused epilogue in the sorted domain, then ONE unsort gather per out
+    out_s, out_hi_s = _epilogue(qs, slot_s, found_s, payload, payload_hi,
+                                link_offsets, link_keys, link_payloads,
+                                link_payload_hi, max_chain, wide)
+    if assume_sorted:
+        return out_s, out_hi_s, slot_s, found_s, fb_count, overflow
+    inv = jnp.argsort(order)
+    out_hi = jnp.take(out_hi_s, inv) if wide else out_hi_s
+    return (jnp.take(out_s, inv), out_hi, jnp.take(slot_s, inv),
+            jnp.take(found_s, inv), fb_count, overflow)
+
+
+def query_window_bounds(index, max_widen: float = 32.0):
+    """Per-segment error bounds valid for ABSENT queries too.
+
+    The plm's finalized (err_lo, err_hi) only bound present keys; a query
+    q between keys can fall outside [y_hat(q)+err_lo, y_hat(q)+err_hi]
+    because its predecessor's slot was bounded against a *different*
+    y_hat.  For monotone segment lines the exact correction is:
+
+      * pairs (x_i, x_{i+1}) in segment s: q in (x_i, x_{i+1}) has
+        pred slot_i and y_hat(q) < y_hat(x_{i+1}), so the lower bound
+        needs min(slot_i - y_hat(x_{i+1}));
+      * queries in s below its first key (pred = last key of the
+        previous segment, slot_p): lower term slot_p - y_hat_s(first
+        key), upper term slot_p - y_hat_s(segment start boundary);
+      * queries in s above its last key: lower term
+        slot_last - y_hat_s(next segment boundary);
+      * empty segments: both boundary terms with pred slot_p.
+
+    Windows stay CORRECT without this (escaped queries fall back), just
+    larger: this tightens the miss-heavy case.  Segments with negative
+    slope (non-monotone line) keep a widened conservative bound.
+    ``max_widen`` clamps the per-segment widening: queries landing in
+    extreme key gaps (which would force huge static windows) are left to
+    the compacted fallback instead — rare by construction, and the clamp
+    keeps the common-case window narrow enough for the loop-free flat
+    search.  Returns (err_lo_q, err_hi_q) float64 (K,).
+    """
+    plm = index.mech.plm
+    x = np.asarray(index.keys, np.float64)
+    if index.gapped is not None:
+        slot = (np.searchsorted(index.gapped.slot_key, x, side="right")
+                - 1).astype(np.float64)
+    else:
+        slot = np.arange(x.shape[0], dtype=np.float64)
+    y_hat = np.asarray(index.mech.predict(x), np.float64)
+    seg = np.asarray(plm.segment_of(x), np.int64)
+    K = int(plm.n_segments)
+    first_key = np.asarray(plm.seg_first_key, np.float64)
+    slope = np.asarray(plm.slope, np.float64)
+    icept = np.asarray(plm.icept, np.float64)
+    err_lo = np.array(plm.err_lo, np.float64).copy()
+    err_hi = np.array(plm.err_hi, np.float64).copy()
+
+    def yhat_at(s, v):  # segment s's line evaluated at key value v
+        return slope[s] * (v - first_key[s]) + icept[s]
+
+    # consecutive-pair terms within one segment
+    same = seg[1:] == seg[:-1]
+    if np.any(same):
+        np.minimum.at(err_lo, seg[1:][same],
+                      (slot[:-1] - y_hat[1:])[same])
+
+    first_idx = np.searchsorted(seg, np.arange(K), side="left")
+    last_idx = np.searchsorted(seg, np.arange(K), side="right") - 1
+    n = x.shape[0]
+    for s in range(K):
+        has_keys = first_idx[s] <= last_idx[s] and first_idx[s] < n
+        p = first_idx[s] - 1  # last key strictly before segment s
+        b_lo = first_key[s]
+        b_hi = first_key[s + 1] if s + 1 < K else np.inf
+        if slope[s] < 0:  # non-monotone line: conservative widening
+            span = abs(slope[s]) * (
+                (b_hi - b_lo) if np.isfinite(b_hi) else 0.0)
+            err_lo[s] -= span
+            err_hi[s] += span
+            continue
+        if has_keys:
+            i0, i1 = first_idx[s], last_idx[s]
+            if p >= 0:
+                err_lo[s] = min(err_lo[s], slot[p] - y_hat[i0])
+                err_hi[s] = max(err_hi[s], slot[p] - yhat_at(s, b_lo))
+            if np.isfinite(b_hi):
+                err_lo[s] = min(err_lo[s], slot[i1] - yhat_at(s, b_hi))
+        elif p >= 0:
+            if np.isfinite(b_hi):
+                err_lo[s] = min(err_lo[s], slot[p] - yhat_at(s, b_hi))
+            err_hi[s] = max(err_hi[s], slot[p] - yhat_at(s, b_lo))
+    if max_widen is not None:
+        err_lo = np.maximum(err_lo, np.asarray(plm.err_lo) - max_widen)
+        err_hi = np.minimum(err_hi, np.asarray(plm.err_hi) + max_widen)
+    return err_lo, err_hi
 
 
 def auto_q_tile(n_q: int, n_slots: int, w_tile: int) -> int:
@@ -171,6 +481,58 @@ def auto_q_tile(n_q: int, n_slots: int, w_tile: int) -> int:
     window: span ~= n_slots * q_tile / n_q.  Clamped to [32, 512]."""
     t = max(32, min(512, int(n_q * w_tile / max(n_slots, 1))))
     return 1 << (t.bit_length() - 1)  # floor to a power of two
+
+
+def _bisect_trips(err_lo: np.ndarray, err_hi: np.ndarray) -> int:
+    """Static trip count covering the widest per-segment search window."""
+    lo = np.asarray(err_lo, np.float64)
+    hi = np.asarray(err_hi, np.float64)
+    w = hi - lo
+    w = w[np.isfinite(w)]
+    widest = float(np.max(w)) if w.size else 0.0
+    return int(min(32, max(1, np.ceil(np.log2(widest + 4.0)) + 1)))
+
+
+def _flat_width(err_lo: np.ndarray, err_hi: np.ndarray) -> int:
+    """Power-of-two flat-search width covering the p95 segment window,
+    or 0 when typical windows are too wide for the loop-free mode."""
+    w = np.asarray(err_hi, np.float64) - np.asarray(err_lo, np.float64)
+    w = w[np.isfinite(w)]
+    if w.size == 0:
+        return 16
+    p95 = float(np.percentile(w, 95))
+    fw = 1 << max(3, int(np.ceil(np.log2(p95 + 6.0))))
+    return fw if fw <= 32 else 0
+
+
+class _EscapeCounter:
+    count = 0
+
+
+_ESCAPES = _EscapeCounter()
+
+
+_NO_RADIX_TABLE = np.zeros(1, np.int32)
+_NO_RADIX_SCALE = np.zeros(2, np.float32)
+
+
+def _recombine_i64(out, out_hi, n_q, wide):
+    """hi/lo pair -> i64 payloads on host (x64 may be disabled in jax)."""
+    if not wide:
+        return out[:n_q]
+    lo = np.asarray(out[:n_q]).astype(np.int64) & 0xFFFFFFFF
+    hi = np.asarray(out_hi[:n_q]).astype(np.int64)
+    return (hi << 32) | lo
+
+
+def _oracle_escape(arrays, err_lo_by_seg, queries, **kwargs):
+    """Full-oracle widening — ONLY reached when the compaction buffer
+    overflows (module-level so tests can count invocations)."""
+    _ESCAPES.count += 1
+    kwargs.pop("backend", None)
+    kwargs.pop("use_kernel", None)
+    return batched_lookup(arrays, err_lo_by_seg, queries,
+                          backend="oracle", **kwargs)
 
 
 def batched_lookup(
@@ -184,30 +546,208 @@ def batched_lookup(
     win_chunk: int = 512,
     interpret: bool = True,
     use_kernel: bool = True,
+    backend: Optional[str] = None,
+    err_hi_by_seg=None,
+    queries_sorted: bool = False,
+    fb_frac: float = FB_FRAC,
 ):
-    """Full device lookup: payloads (i64, -1 = miss), slots, found, #fallbacks.
+    """Full device lookup: payloads (-1 = miss), slots, found, #fallbacks.
 
-    ``err_lo_by_seg`` is the (Kpad,) f32 lower error bound per segment
-    (finalized on the full data — see sampling.refinalize_bounds).
+    ``backend`` selects the search stage: "pallas" (TPU kernel;
+    ``interpret=True`` on CPU), "xla" (windowed bisect, permutation-free)
+    or "oracle" (full searchsorted).  Default: "pallas" when
+    ``use_kernel`` else "oracle".  ``err_lo_by_seg``/``err_hi_by_seg``
+    are the (K,) per-segment error bounds (finalized on the full data —
+    see sampling.refinalize_bounds); err_hi defaults to zeros, which only
+    costs extra (compacted) fallbacks.  ``queries_sorted=True`` skips the
+    argsort/inverse round trip on the Pallas path.
     """
+    backend = backend or ("pallas" if use_kernel else "oracle")
+    if backend not in ("pallas", "xla", "oracle"):
+        raise ValueError(f"unknown backend {backend!r}")
     queries = np.asarray(queries, np.float32)
     n_q = queries.shape[0]
     if q_tile <= 0:  # density-aware default (fallbacks stay rare)
         q_tile = auto_q_tile(n_q, arrays.n_slots, w_tile)
-    qp = _pad_pow(queries, q_tile, np.float32(np.inf))
-    err_lo_by_seg = _pad_pow(
-        np.asarray(err_lo_by_seg, np.float32),
-        int(arrays.seg_first_key.shape[0]),
-        np.float32(0),
-    )[: arrays.seg_first_key.shape[0]]
-    out, slot, found, fb = _pipeline(
+    if backend == "pallas":
+        qp = _pad_pow(queries, q_tile, np.float32(np.inf))
+    else:
+        qp = queries
+    k_pad = int(arrays.seg_first_key.shape[0])
+    err_lo_np = np.asarray(err_lo_by_seg, np.float32)
+    err_hi_np = (np.zeros_like(err_lo_np) if err_hi_by_seg is None
+                 else np.asarray(err_hi_by_seg, np.float32))
+    trips = _bisect_trips(err_lo_np, err_hi_np)
+    flat_w = _flat_width(err_lo_np, err_hi_np)
+    err_lo_p = _pad_pow(err_lo_np, k_pad, np.float32(0))[:k_pad]
+    err_hi_p = _pad_pow(err_hi_np, k_pad, np.float32(0))[:k_pad]
+    fb_cap = int(min(
+        qp.shape[0],
+        max(q_tile if backend == "pallas" else 64,
+            int(np.ceil(fb_frac * qp.shape[0]))),
+    ))
+    out, out_hi, slot, found, fb, overflow = _pipeline(
         jnp.asarray(qp),
         arrays.seg_first_key, arrays.seg_slope, arrays.seg_icept,
-        jnp.asarray(err_lo_by_seg, jnp.float32),
-        arrays.slot_key, arrays.payload, arrays.link_offsets,
-        arrays.link_keys, arrays.link_payloads,
+        jnp.asarray(err_lo_p), jnp.asarray(err_hi_p),
+        arrays.slot_key, arrays.payload, arrays.payload_hi,
+        arrays.link_offsets, arrays.link_keys, arrays.link_payloads,
+        arrays.link_payload_hi, _NO_RADIX_TABLE, _NO_RADIX_SCALE,
         q_tile=q_tile, w_tile=w_tile, seg_chunk=seg_chunk,
         win_chunk=win_chunk, max_chain=arrays.max_chain,
-        n_slots=arrays.n_slots, interpret=interpret, use_kernel=use_kernel,
+        n_slots=arrays.n_slots, interpret=interpret, backend=backend,
+        assume_sorted=bool(queries_sorted), fb_cap=fb_cap, trips=trips,
+        flat_w=flat_w, radix=False, wide=arrays.wide,
     )
-    return out[:n_q], slot[:n_q], found[:n_q], fb
+    if backend != "oracle" and bool(overflow):
+        return _oracle_escape(
+            arrays, err_lo_by_seg, queries,
+            q_tile=q_tile, w_tile=w_tile, seg_chunk=seg_chunk,
+            win_chunk=win_chunk, interpret=interpret,
+            err_hi_by_seg=err_hi_by_seg, queries_sorted=queries_sorted,
+            fb_frac=fb_frac,
+        )
+    out = _recombine_i64(out, out_hi, n_q, arrays.wide)
+    return out, slot[:n_q], found[:n_q], fb
+
+
+# ---------------------------------------------------------------------------
+# persistent engine: shape buckets + cached executables + sorted fast path
+# ---------------------------------------------------------------------------
+
+
+class QueryEngine:
+    """Persistent single-pass query engine over a frozen ``IndexArrays``.
+
+    Pads query batches up to power-of-two shape buckets so XLA compiles
+    one executable per bucket instead of re-tracing every batch size, and
+    keeps the padded error-bound arrays resident on device.  Serving
+    callers that issue sorted batches pass ``queries_sorted=True`` to
+    skip the argsort/inverse-permutation round trip on the Pallas path.
+
+    ``stats`` tracks calls, per-call fallback totals, and how often the
+    compaction buffer overflowed into the full-oracle escape hatch.
+    """
+
+    def __init__(self, arrays: IndexArrays, err_lo_by_seg,
+                 err_hi_by_seg=None, *, backend: Optional[str] = None,
+                 interpret: Optional[bool] = None, q_tile: int = 0,
+                 w_tile: int = 2048, seg_chunk: int = 512,
+                 win_chunk: int = 512, fb_frac: float = FB_FRAC,
+                 min_bucket: int = 256, xla_min_bucket: int = 8192):
+        on_tpu = jax.default_backend() == "tpu"
+        self.arrays = arrays
+        self.backend = backend or ("pallas" if on_tpu else "xla")
+        self.interpret = (not on_tpu) if interpret is None else interpret
+        self.q_tile = q_tile
+        self.w_tile = w_tile
+        self.seg_chunk = seg_chunk
+        self.win_chunk = win_chunk
+        self.fb_frac = fb_frac
+        self.min_bucket = max(32, int(min_bucket))
+        # below this bucket the windowed path's extra ops cost more than
+        # the full searchsorted they avoid — scheduling is size-aware
+        self.xla_min_bucket = int(xla_min_bucket)
+        self.err_lo = np.asarray(err_lo_by_seg, np.float32)
+        self.err_hi = (None if err_hi_by_seg is None
+                       else np.asarray(err_hi_by_seg, np.float32))
+        # device-resident padded error bounds + static trip count, so the
+        # hot path does zero host-side array prep per call
+        k_pad = int(arrays.seg_first_key.shape[0])
+        err_hi_np = (np.zeros_like(self.err_lo) if self.err_hi is None
+                     else self.err_hi)
+        self._elo = jnp.asarray(
+            _pad_pow(self.err_lo, k_pad, np.float32(0))[:k_pad])
+        self._ehi = jnp.asarray(
+            _pad_pow(err_hi_np, k_pad, np.float32(0))[:k_pad])
+        self._trips = _bisect_trips(self.err_lo, err_hi_np)
+        self._flat_w = _flat_width(self.err_lo, err_hi_np)
+        # approximate radix router: one multiply + one 64 KiB table gather
+        # instead of the exact segment searchsorted (mis-routes near
+        # bucket boundaries are sound — see _xla_window_lookup)
+        segk = np.asarray(arrays.seg_first_key)
+        finite = segk[np.isfinite(segk)]
+        sk = np.asarray(arrays.slot_key)
+        sk_fin = sk[np.isfinite(sk)]
+        kmin = float(finite[0]) if finite.size else 0.0
+        kmax = float(sk_fin[-1]) if sk_fin.size else kmin + 1.0
+        r_size = 1 << 14
+        scale = (r_size - 1) / max(kmax - kmin, 1e-9)
+        buckets = kmin + np.arange(r_size, dtype=np.float64) / scale
+        table = np.clip(
+            np.searchsorted(segk, buckets, side="right") - 1,
+            0, segk.shape[0] - 1,
+        ).astype(np.int32)
+        self._radix_table = jnp.asarray(table)
+        self._radix_scale = jnp.asarray(
+            np.array([kmin, scale], np.float32))
+        # sticky per-bucket fallback-capacity boost: a workload that once
+        # overflowed gets a larger compaction buffer next time instead of
+        # paying the oracle escape on every call
+        self._cap_boost: dict = {}
+        self.stats = {"calls": 0, "fallbacks": 0, "oracle_escapes": 0,
+                      "buckets": set()}
+
+    @classmethod
+    def from_index(cls, index, *, w_tile: int = 2048, seg_chunk: int = 512,
+                   max_chain: Optional[int] = None, **kwargs):
+        """Freeze a ``LearnedIndex`` with query-safe window bounds."""
+        arrays = from_learned_index(index, w_tile=w_tile,
+                                    seg_chunk=seg_chunk, max_chain=max_chain)
+        err_lo, err_hi = query_window_bounds(index)
+        return cls(arrays, err_lo, err_hi, w_tile=w_tile,
+                   seg_chunk=seg_chunk, **kwargs)
+
+    def bucket(self, n: int) -> int:
+        b = self.min_bucket
+        while b < n:
+            b <<= 1
+        return b
+
+    def _dispatch(self, qj, backend, q_tile, fb_cap, queries_sorted):
+        a = self.arrays
+        return _pipeline(
+            qj, a.seg_first_key, a.seg_slope, a.seg_icept,
+            self._elo, self._ehi, a.slot_key, a.payload, a.payload_hi,
+            a.link_offsets, a.link_keys, a.link_payloads,
+            a.link_payload_hi, self._radix_table, self._radix_scale,
+            q_tile=q_tile, w_tile=self.w_tile, seg_chunk=self.seg_chunk,
+            win_chunk=self.win_chunk, max_chain=a.max_chain,
+            n_slots=a.n_slots, interpret=self.interpret, backend=backend,
+            assume_sorted=queries_sorted, fb_cap=fb_cap,
+            trips=self._trips, flat_w=self._flat_w,
+            radix=(backend == "xla"), wide=a.wide,
+        )
+
+    def lookup(self, queries, *, queries_sorted: bool = False):
+        """Returns (payloads, slot, found, fb_count) sliced to len(queries)."""
+        queries = np.asarray(queries, np.float32)
+        n_q = queries.shape[0]
+        b = self.bucket(n_q)
+        if b == n_q:
+            qp = queries
+        else:
+            qp = np.full(b, np.inf, np.float32)
+            qp[:n_q] = queries  # +inf tail keeps sorted batches sorted
+        q_tile = min(b, self.q_tile or auto_q_tile(b, self.arrays.n_slots,
+                                                   self.w_tile))
+        backend = self.backend
+        if backend == "xla" and b < self.xla_min_bucket:
+            backend = "oracle"  # size-aware scheduling (see __init__)
+        boost = self._cap_boost.get(b, 1)
+        fb_cap = int(min(b, boost * max(
+            q_tile if backend == "pallas" else 64,
+            int(np.ceil(self.fb_frac * b)))))
+        qj = jnp.asarray(qp)
+        out, out_hi, slot, found, fb, overflow = self._dispatch(
+            qj, backend, q_tile, fb_cap, bool(queries_sorted))
+        if backend != "oracle" and fb_cap < b and bool(overflow):
+            self.stats["oracle_escapes"] += 1
+            self._cap_boost[b] = min(boost * 4, 64)  # sticky escalation
+            out, out_hi, slot, found, fb, _ = self._dispatch(
+                qj, "oracle", q_tile, fb_cap, bool(queries_sorted))
+        self.stats["calls"] += 1
+        self.stats["fallbacks"] += int(fb)
+        self.stats["buckets"].add(b)
+        out = _recombine_i64(out, out_hi, n_q, self.arrays.wide)
+        return out, slot[:n_q], found[:n_q], fb

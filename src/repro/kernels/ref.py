@@ -1,6 +1,7 @@
-"""Pure-jnp oracle for the fused learned-index lookup kernel.
+"""Pure-jnp oracle + shared epilogue for the fused lookup kernel.
 
-Semantics (shared with the Pallas kernel in ``lookup.py``):
+Semantics (shared with the Pallas kernel in ``lookup.py`` and the XLA
+windowed backend in ``ops.py``):
 
 Given a piecewise linear mechanism (segment tables) and the physical
 sorted slot-key array (gapped array G, or the raw sorted key array in the
@@ -10,8 +11,9 @@ static case), for each query key q return
   * ``found`` — slot_key[slot] == q (exact hit in the first-level array)
 
 Chain resolution (linking arrays) happens outside the search in
-``resolve_chains`` with a fixed-trip bounded scan over CSR link tables —
-identical for oracle and kernel paths.
+``chain_hit_index`` / ``resolve_chains`` — a rolled ``lax.fori_loop``
+scan over the CSR link tables (``max_chain`` trips, ONE copy of the scan
+body in the graph), identical for oracle and kernel paths.
 """
 
 from __future__ import annotations
@@ -21,7 +23,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-__all__ = ["lookup_ref", "predict_ref", "resolve_chains"]
+__all__ = ["lookup_ref", "predict_ref", "chain_hit_index", "resolve_chains"]
 
 
 def predict_ref(queries, seg_first_key, seg_slope, seg_icept):
@@ -50,6 +52,48 @@ def lookup_ref(queries, seg_first_key, seg_slope, seg_icept, slot_key):
     return slot, found
 
 
+def chain_hit_index(
+    queries,
+    slot,
+    found,
+    link_offsets,
+    link_keys,
+    max_chain: int,
+):
+    """Index into the CSR link tables of the entry matching q, else -1.
+
+    Per-slot chains are key-sorted, so the scan is a branchless bisect
+    over each query's ``[start, end)`` CSR range — ``ceil(log2(max_chain
+    + 1))`` rolled ``lax.fori_loop`` trips (ONE copy of the body in the
+    graph; the old Python loop unrolled ``max_chain`` linear
+    gather/compare/select stages).
+    """
+    n_q = queries.shape[0]
+    miss = jnp.full((n_q,), -1, jnp.int32)
+    if link_keys.shape[0] == 0 or max_chain <= 0:
+        return miss
+    l_max = link_keys.shape[0] - 1
+    safe_slot = jnp.clip(slot, 0, link_offsets.shape[0] - 2)
+    start = jnp.take(link_offsets, safe_slot)
+    end = jnp.take(link_offsets, safe_slot + 1)
+    scan = (slot >= 0) & ~found & (end > start)
+    trips = int(max_chain).bit_length()  # == ceil(log2(max_chain + 1))
+
+    def body(_, carry):
+        lo, hi = carry
+        upd = lo < hi
+        mid = (lo + hi + 1) >> 1
+        go = jnp.take(link_keys, jnp.clip(mid, 0, l_max)) <= queries
+        lo = jnp.where(upd & go, mid, lo)
+        hi = jnp.where(upd, jnp.where(go, hi, mid - 1), hi)
+        return lo, hi
+
+    lo, _ = jax.lax.fori_loop(0, trips, body, (start - 1, end - 1))
+    hit = (scan & (lo >= start)
+           & (jnp.take(link_keys, jnp.clip(lo, 0, l_max)) == queries))
+    return jnp.where(hit, lo, miss)
+
+
 def resolve_chains(
     queries,
     slot,
@@ -60,22 +104,21 @@ def resolve_chains(
     link_payloads,
     max_chain: int,
 ):
-    """Payloads (i32) per query: G hit -> payload[slot]; miss -> chain scan.
+    """Payloads per query: G hit -> payload[slot]; miss -> chain scan.
 
-    Fixed-trip bounded scan (``max_chain`` iterations) over CSR link
-    tables; -1 when the key is absent.  Shared by oracle and kernel paths.
+    -1 when the key is absent.  Shared by oracle and kernel paths; kept
+    for API compatibility — the engine epilogue in ops.py uses
+    ``chain_hit_index`` directly so the payload gather can be fused (and
+    doubled for hi/lo 64-bit payload pairs).
     """
-    n_q = queries.shape[0]
     safe_slot = jnp.clip(slot, 0, payload.shape[0] - 1)
-    out = jnp.where(found, jnp.take(payload, safe_slot), jnp.int32(-1))
-    valid = slot >= 0
-    start = jnp.take(link_offsets, safe_slot)
-    end = jnp.take(link_offsets, jnp.minimum(safe_slot + 1, link_offsets.shape[0] - 1))
-    if link_keys.shape[0] == 0:
+    out = jnp.where(
+        found, jnp.take(payload, safe_slot), jnp.asarray(-1, payload.dtype)
+    )
+    if link_keys.shape[0] == 0 or max_chain <= 0:
         return out
-    for t in range(max_chain):
-        idx = jnp.minimum(start + t, link_keys.shape[0] - 1)
-        in_chain = valid & ~found & (start + t < end)
-        hit = in_chain & (jnp.take(link_keys, idx) == queries)
-        out = jnp.where(hit, jnp.take(link_payloads, idx), out)
-    return out
+    hit = chain_hit_index(queries, slot, found, link_offsets, link_keys,
+                          max_chain)
+    return jnp.where(
+        hit >= 0, jnp.take(link_payloads, jnp.maximum(hit, 0)), out
+    )

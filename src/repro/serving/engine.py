@@ -70,9 +70,11 @@ class ServingEngine:
             req.slot = free_slots.pop(0)
             self.active[req.request_id] = req
             # allocate pages for the prompt through the learned index
+            # (one batched §5.3 insert for the whole prompt)
             n_pages = len(req.prompt) // self.kv_pages.page_size + 1
-            for p in range(n_pages):
-                self.kv_pages.alloc(req.request_id, p)
+            self.kv_pages.alloc_batch(
+                np.full(n_pages, req.request_id, np.int64),
+                np.arange(n_pages, dtype=np.int64))
 
     def _sample(self, logits: np.ndarray) -> np.ndarray:
         if self.temperature <= 0:
@@ -91,16 +93,17 @@ class ServingEngine:
             last = (req.generated[-1] if req.generated
                     else int(req.prompt[-1]) % self.model.cfg.vocab)
             tokens[req.slot, 0] = last
-        # resolve the current page of every active request via the index
+        # resolve the current page of every active request via the index:
+        # ONE batched lookup for the whole round, then one batched alloc
+        # for the misses (instead of a per-request lookup+insert loop)
         rids = np.array([r.request_id for r in self.active.values()])
         pages = np.array([
             (len(r.prompt) + len(r.generated)) // self.kv_pages.page_size
             for r in self.active.values()])
-        for rid, page in zip(rids, pages):
-            key_known = self.kv_pages.lookup_batch(
-                np.array([rid]), np.array([page]))
-            if key_known[0] < 0:
-                self.kv_pages.alloc(int(rid), int(page))
+        known = self.kv_pages.lookup_batch(rids, pages)
+        miss = known < 0
+        if np.any(miss):
+            self.kv_pages.alloc_batch(rids[miss], pages[miss])
         self.stats["page_lookups"] += len(rids)
 
         logits, self.caches = self._decode(

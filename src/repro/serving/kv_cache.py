@@ -27,6 +27,7 @@ import numpy as np
 from ..core import LearnedIndex
 
 _PAGE_SHIFT = 20  # up to 2^20 pages per request
+_ENGINE_MIN_BATCH = 512  # below this the numpy host path wins
 
 
 def table_key(request_id: int, logical_page: int) -> int:
@@ -40,6 +41,8 @@ class PagedKVCache:
     index: LearnedIndex
     free_pages: List[int]
     allocated: Dict[int, int]  # composite key -> physical page
+    _engine: Optional[object] = None  # lazy QueryEngine over a frozen snapshot
+    _engine_dirty: bool = True
 
     @staticmethod
     def create(n_pages: int, page_size: int = 16,
@@ -70,6 +73,7 @@ class PagedKVCache:
     def alloc(self, request_id: int, logical_page: int) -> int:
         if not self.free_pages:
             raise MemoryError("KV cache out of pages")
+        self._engine_dirty = True
         phys = self.free_pages.pop()
         key = table_key(request_id, logical_page)
         kf = float(key)
@@ -80,13 +84,74 @@ class PagedKVCache:
         self.allocated[key] = phys
         return phys
 
+    def alloc_batch(self, request_ids: np.ndarray,
+                    logical_pages: np.ndarray) -> np.ndarray:
+        """Allocate many (request, page) mappings in one shot.
+
+        Skeleton keys are claimed via update; fresh keys go through the
+        vectorized ``insert_batch`` (§5.3 batched dynamic insert) instead
+        of one predict + scan per page.  Returns the physical pages.
+        """
+        request_ids = np.atleast_1d(np.asarray(request_ids, np.int64))
+        logical_pages = np.atleast_1d(np.asarray(logical_pages, np.int64))
+        n = request_ids.shape[0]
+        if n == 0:
+            return np.zeros(0, np.int64)
+        if len(self.free_pages) < n:
+            raise MemoryError("KV cache out of pages")
+        self._engine_dirty = True
+        keys = (request_ids << _PAGE_SHIFT) | logical_pages
+        kf = keys.astype(np.float64)
+        phys = np.array([self.free_pages.pop() for _ in range(n)],
+                        np.int64)
+        existing = self.index.gapped.contains_batch(kf)  # skeleton: claim
+        for k, ph in zip(kf[existing], phys[existing]):
+            self.index.update(float(k), int(ph))
+        fresh = ~existing
+        if np.any(fresh):
+            self.index.insert_batch(kf[fresh], phys[fresh])
+        for k, ph in zip(keys.tolist(), phys.tolist()):
+            self.allocated[k] = ph
+        return phys
+
+    def query_engine(self):
+        """Single-pass device ``QueryEngine`` over the current table,
+        refrozen lazily after mutations (alloc/free are the rare path in
+        a decode loop; lookups are per round)."""
+        from ..kernels import QueryEngine
+
+        if self._engine is None or self._engine_dirty:
+            self._engine = QueryEngine.from_index(self.index)
+            self._engine_dirty = False
+        return self._engine
+
     def lookup_batch(self, request_ids: np.ndarray,
-                     logical_pages: np.ndarray) -> np.ndarray:
+                     logical_pages: np.ndarray,
+                     device: Optional[bool] = None) -> np.ndarray:
+        """Batched (request, page) -> physical page; -1 for unmapped.
+
+        ``device=None`` picks the single-pass engine for large batches
+        (serving issues sorted page lookups — the engine skips the sort)
+        and the numpy reference for small ones.
+        """
         keys = ((request_ids.astype(np.int64) << _PAGE_SHIFT)
                 | logical_pages.astype(np.int64)).astype(np.float64)
+        if device is None:
+            # engine only for large, f32-exact batches (the device path
+            # stores keys as f32; huge composite keys stay on the host)
+            device = (keys.shape[0] >= _ENGINE_MIN_BATCH
+                      and bool(np.all(
+                          keys.astype(np.float32).astype(np.float64)
+                          == keys)))
+        if device:
+            qsorted = bool(np.all(np.diff(keys) >= 0))
+            out, *_ = self.query_engine().lookup(keys,
+                                                 queries_sorted=qsorted)
+            return np.asarray(out).astype(np.int64)
         return self.index.lookup(keys)
 
     def free_request(self, request_id: int, n_pages: int) -> None:
+        self._engine_dirty = True
         for p in range(n_pages):
             key = table_key(request_id, p)
             phys = self.allocated.pop(key, None)

@@ -1,0 +1,107 @@
+"""Batched dynamic ops (§5.3): insert_batch / delete_batch must be
+state-for-state identical to the sequential scalar paths (no hypothesis
+dependency — runs even where tests/test_dynamic.py is skipped)."""
+
+import copy
+
+import numpy as np
+import pytest
+
+from conftest import make_keys
+from repro.core import LearnedIndex
+
+
+def _state_equal(g1, g2):
+    return (np.array_equal(g1.slot_key, g2.slot_key)
+            and np.array_equal(g1.occupied, g2.occupied)
+            and np.array_equal(g1.payload, g2.payload)
+            and g1.n_keys == g2.n_keys
+            and dict(g1.links) == dict(g2.links))
+
+
+@pytest.mark.parametrize("kind,seed", [
+    ("iot", 0), ("iot", 1), ("weblogs", 2), ("uniform_int", 3),
+])
+def test_insert_batch_state_identical(kind, seed):
+    rng = np.random.default_rng(seed)
+    x = make_keys(kind, 16_000, seed=seed)
+    perm = rng.permutation(len(x))
+    n_ins = len(x) // 3
+    init = np.sort(x[perm[n_ins:]])
+    ins = x[perm[:n_ins]]
+    pay = 1_000_000 + np.arange(n_ins)
+    i_seq = LearnedIndex.build(init, method="pgm", eps=64, gap_rho=0.25)
+    i_bat = copy.deepcopy(i_seq)
+    for i, k in enumerate(ins):
+        i_seq.insert(float(k), int(pay[i]))
+    counts = i_bat.insert_batch(ins, pay)
+    assert counts["slot"] + counts["chain"] == n_ins
+    assert _state_equal(i_seq.gapped, i_bat.gapped)
+    # every inserted + original key resolves identically afterwards
+    q = np.concatenate([ins, rng.choice(init, 4_000)])
+    assert np.array_equal(i_bat.lookup(q), i_seq.lookup(q))
+
+
+def test_insert_batch_100k_state_identical_and_faster():
+    """The acceptance-size run: 100k batched inserts == 100k sequential
+    insert() calls (slot_key/occupied/payload/links), and faster."""
+    import time
+
+    x = make_keys("iot", 200_000, seed=11)
+    rng = np.random.default_rng(11)
+    perm = rng.permutation(len(x))
+    n_ins = min(100_000, len(x) // 2)
+    init = np.sort(x[perm[n_ins:]])
+    ins = x[perm[:n_ins]]
+    pay = 1_000_000 + np.arange(n_ins)
+    i_seq = LearnedIndex.build(init, method="pgm", eps=128, gap_rho=0.3)
+    i_bat = copy.deepcopy(i_seq)
+    t0 = time.perf_counter()
+    for i, k in enumerate(ins):
+        i_seq.insert(float(k), int(pay[i]))
+    t_seq = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    i_bat.insert_batch(ins, pay)
+    t_bat = time.perf_counter() - t0
+    assert _state_equal(i_seq.gapped, i_bat.gapped)
+    assert t_bat < t_seq  # same result, strictly cheaper (typ. 5-9x here)
+
+
+def test_insert_batch_duplicate_raises():
+    x = make_keys("uniform_int", 4_000, seed=4)
+    idx = LearnedIndex.build(x, method="pgm", eps=64, gap_rho=0.2)
+    fresh = float(x[0]) + 0.5
+    with pytest.raises(KeyError):
+        idx.insert_batch(np.array([fresh, fresh]), np.array([1, 2]))
+    with pytest.raises(KeyError):  # duplicate of an existing key
+        idx2 = LearnedIndex.build(x, method="pgm", eps=64, gap_rho=0.2)
+        idx2.insert_batch(np.array([float(x[17])]), np.array([3]))
+
+
+def test_delete_batch_matches_sequential():
+    x = make_keys("iot", 10_000, seed=6)
+    rng = np.random.default_rng(6)
+    i_seq = LearnedIndex.build(x, method="pgm", eps=64, gap_rho=0.25)
+    i_bat = copy.deepcopy(i_seq)
+    victims = rng.choice(x, 1_500, replace=False)
+    for k in victims:
+        assert i_seq.delete(float(k))
+    removed = i_bat.delete_batch(victims)
+    assert removed == len(victims)
+    assert _state_equal(i_seq.gapped, i_bat.gapped)
+    assert np.all(i_bat.lookup(victims) == -1)
+
+
+def test_insert_batch_then_mixed_scalar_ops():
+    """Batched and scalar dynamic ops interleave safely."""
+    x = make_keys("iot", 8_000, seed=8)
+    rng = np.random.default_rng(8)
+    idx = LearnedIndex.build(x, method="pgm", eps=64, gap_rho=0.25)
+    mids = x[:-1] + np.diff(x) * rng.random(len(x) - 1)
+    new = np.setdiff1d(mids, x)[:3_000]
+    idx.insert_batch(new, 500_000 + np.arange(len(new)))
+    assert np.array_equal(idx.lookup(new), 500_000 + np.arange(len(new)))
+    k = float(new[42])
+    assert idx.update(k, 777) and idx.lookup(np.array([k]))[0] == 777
+    assert idx.delete(k) and idx.lookup(np.array([k]))[0] == -1
+    assert np.array_equal(idx.lookup(x), np.searchsorted(x, x))

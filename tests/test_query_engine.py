@@ -1,0 +1,162 @@
+"""Single-pass QueryEngine: compacted fallback re-resolution, sort-aware
+scheduling, shape buckets, wide payloads (no hypothesis dependency —
+this file carries the kernel-path coverage when hypothesis is absent)."""
+
+import numpy as np
+import pytest
+
+from conftest import make_keys
+from repro.core import LearnedIndex
+from repro.kernels import (QueryEngine, batched_lookup, from_learned_index)
+from repro.kernels import ops as ops_mod
+from repro.kernels import ref as ref_mod
+
+
+def _mixed_queries(keys, rng, n_hit=1500, n_miss=400):
+    miss = np.setdiff1d(rng.choice(2 ** 22, 4 * n_miss + 16),
+                        keys.astype(np.int64)).astype(np.float64)
+    return np.concatenate([
+        rng.choice(keys, n_hit),
+        miss[:n_miss],
+        [keys[0] - 10.0, keys[-1] + 10.0],
+    ])
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_compaction_agrees_with_oracle_bit_exact(seed):
+    """Property: the compacted-fallback path (non-overflow) and the
+    overflow escape path both agree bit-exactly with the oracle."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(5_000, 25_000))
+    keys = make_keys("uniform_int", n, seed=seed)
+    idx = LearnedIndex.build(keys, method="pgm", eps=64, gap_rho=0.2)
+    arrs = from_learned_index(idx)
+    plm = idx.mech.plm
+    q = _mixed_queries(keys, rng)
+    out_o, slot_o, found_o, _ = batched_lookup(arrs, plm.err_lo, q,
+                                               backend="oracle")
+    # non-overflow: xla windowed + compacted fallback
+    out_x, slot_x, found_x, fb = batched_lookup(
+        arrs, plm.err_lo, q, backend="xla", err_hi_by_seg=plm.err_hi)
+    assert np.array_equal(np.asarray(out_x), np.asarray(out_o))
+    assert np.array_equal(np.asarray(slot_x), np.asarray(slot_o))
+    assert np.array_equal(np.asarray(found_x), np.asarray(found_o))
+    # forced overflow: broken bounds flag (almost) everything; the host
+    # escape hatch must still return oracle-exact results
+    bad = plm.err_lo + 1e6
+    ops_mod._ESCAPES.count = 0
+    out_esc, *_ = batched_lookup(arrs, bad, q, backend="xla",
+                                 err_hi_by_seg=plm.err_hi + 1e6,
+                                 fb_frac=0.001)
+    assert ops_mod._ESCAPES.count == 1
+    assert np.array_equal(np.asarray(out_esc), np.asarray(out_o))
+    # pallas (interpret) with compaction agrees too
+    out_k, *_ = batched_lookup(arrs, plm.err_lo, q, interpret=True)
+    assert np.array_equal(np.asarray(out_k), np.asarray(out_o))
+
+
+def test_oracle_not_evaluated_on_unflagged_queries(monkeypatch):
+    """Regression: the single-pass path must never hand the FULL batch to
+    the oracle — lookup_ref may only be traced over the (fb_cap,)-shaped
+    compacted buffer, and the runtime escape hatch must not fire when
+    the buffer does not overflow (counting shims on both)."""
+    keys = make_keys("uniform_int", 20_000, seed=7)
+    idx = LearnedIndex.build(keys, method="pgm", eps=64, gap_rho=0.15)
+    arrs = from_learned_index(idx)
+    plm = idx.mech.plm
+    rng = np.random.default_rng(8)
+    # odd batch size => fresh jit trace (no cached executable to hide in)
+    q = rng.choice(keys, 3001)
+
+    traced_shapes = []
+    real_lookup_ref = ref_mod.lookup_ref
+
+    def spy_lookup_ref(queries, *args, **kw):
+        traced_shapes.append(int(queries.shape[0]))
+        return real_lookup_ref(queries, *args, **kw)
+
+    monkeypatch.setattr(ref_mod, "lookup_ref", spy_lookup_ref)
+
+    escapes = []
+    real_escape = ops_mod._oracle_escape
+
+    def spy_escape(*args, **kw):
+        escapes.append(1)
+        return real_escape(*args, **kw)
+
+    monkeypatch.setattr(ops_mod, "_oracle_escape", spy_escape)
+
+    for backend, kw in (("pallas", dict(interpret=True)),
+                        ("xla", dict(err_hi_by_seg=plm.err_hi))):
+        traced_shapes.clear()
+        escapes.clear()
+        out, _, _, fb = batched_lookup(arrs, plm.err_lo, q,
+                                       backend=backend, **kw)
+        # runtime: no full-oracle widening happened
+        assert escapes == [], backend
+        # trace-time: lookup_ref was never handed a full-batch array
+        # (the xla/pallas search stages do not call it at all; only a
+        # compacted (fb_cap,) buffer could)
+        assert all(s < q.shape[0] for s in traced_shapes), (
+            backend, traced_shapes)
+        truth = idx.gapped.lookup_batch(q)
+        assert np.array_equal(np.asarray(out), truth)
+
+
+def test_engine_buckets_and_sorted_fast_path():
+    keys = make_keys("uniform_int", 25_000, seed=3)
+    idx = LearnedIndex.build(keys, method="pgm", eps=64, gap_rho=0.2)
+    eng = QueryEngine.from_index(idx, min_bucket=1024)
+    rng = np.random.default_rng(4)
+    truth_of = idx.gapped.lookup_batch
+    # varying batch sizes collapse onto one shape bucket (no re-trace)
+    for n_q in (700, 901, 1024):
+        q = rng.choice(keys, n_q)
+        out, *_ = eng.lookup(q)
+        assert np.array_equal(np.asarray(out), truth_of(q))
+    assert eng.stats["buckets"] == {1024}
+    assert eng.stats["calls"] == 3
+    # sorted fast path: identical results without the argsort round trip
+    q = np.sort(rng.choice(keys, 2000))
+    out_s, *_ = eng.lookup(q, queries_sorted=True)
+    assert np.array_equal(np.asarray(out_s), truth_of(q))
+    # oracle-backed engine agrees on a mixed batch
+    eng_o = QueryEngine.from_index(idx, backend="oracle")
+    q = _mixed_queries(keys, rng)
+    out_a, *_ = eng.lookup(q)
+    out_b, *_ = eng_o.lookup(q)
+    assert np.array_equal(np.asarray(out_a), np.asarray(out_b))
+
+
+def test_wide_int64_payloads_roundtrip():
+    """from_learned_index must not truncate >32-bit payloads (hi/lo pair
+    carried through slot and chain epilogues on every backend)."""
+    keys = make_keys("uniform_int", 12_000, seed=5)
+    idx = LearnedIndex.build(keys, method="pgm", eps=64, gap_rho=0.2)
+    ga = idx.gapped
+    big = np.int64(3) << 40
+    ga.payload[ga.occupied] = big + ga.payload[ga.occupied]
+    for chain in ga.links.values():
+        chain[:] = [(k, int(big) + p) for k, p in chain]
+    ga._invalidate()
+    arrs = from_learned_index(idx)
+    assert arrs.wide
+    rng = np.random.default_rng(6)
+    q = _mixed_queries(keys, rng, n_hit=1000, n_miss=200)
+    truth = ga.lookup_batch(q)
+    assert truth.max() > np.iinfo(np.int32).max  # test is meaningful
+    plm = idx.mech.plm
+    for backend, kw in (("oracle", {}), ("pallas", dict(interpret=True)),
+                        ("xla", dict(err_hi_by_seg=plm.err_hi))):
+        out, *_ = batched_lookup(arrs, plm.err_lo, q, backend=backend, **kw)
+        assert np.asarray(out).dtype == np.int64
+        assert np.array_equal(np.asarray(out), truth), backend
+    eng = QueryEngine.from_index(idx)
+    out, *_ = eng.lookup(q)
+    assert np.array_equal(np.asarray(out), truth)
+
+
+def test_narrow_payloads_not_flagged_wide():
+    keys = make_keys("uniform_int", 8_000, seed=9)
+    idx = LearnedIndex.build(keys, method="pgm", eps=64, gap_rho=0.1)
+    assert not from_learned_index(idx).wide
