@@ -1,16 +1,29 @@
-"""Benchmark driver — one module per paper table/figure.
+"""Benchmark driver — one module per paper table/figure, plus the
+perf-trajectory gate.
 
 Prints ``name,us_per_call,derived`` CSV.  BENCH_N scales dataset size
-(default 400k keys); BENCH_FAST=1 runs a reduced sweep for CI.
+(default 400k keys); BENCH_FAST=1 runs a reduced sweep for CI (the
+regression gate is skipped — sizes differ — but schemas still validate);
+BENCH_NO_GATE=1 skips the gate entirely.
 
-The kernel module additionally writes ``BENCH_kernel.json`` at the repo
-root (before/after ns-per-query + fallback rate of the single-pass
-compacted query path) — the perf trajectory tracked across PRs.
+The kernel module writes two trajectory files at the repo root, both
+validated and gated here after the sweep:
+
+* ``BENCH_kernel.json`` — single-pass engine ns/query (before/after);
+* ``BENCH_api.json``    — ``Index`` handle ingest-to-queryable latency,
+  delta-updated device sync vs full refreeze (bit-identical lookups).
+
+The gate fails the run when a fresh ns/query (or delta-path latency)
+regresses more than 1.25x against the RECORDED trajectory (the committed
+JSON loaded before the sweep overwrites it), when a schema field is
+missing, or when the delta/refreeze lookups stop being bit-identical.
 """
 
 from __future__ import annotations
 
+import json
 import os
+import pathlib
 import sys
 import time
 import traceback
@@ -23,6 +36,8 @@ from . import (fig4_tradeoff, fig6_sampling, fig7_segments, fig8_nsafe,
                fig9_gaps, fig11_dynamic, kernel_bench, table1)
 from .common import emit
 
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
 MODULES = [
     ("table1", table1),
     ("fig4", fig4_tradeoff),
@@ -34,10 +49,90 @@ MODULES = [
     ("kernel", kernel_bench),
 ]
 
+# trajectory schema: file -> (metric key, direction, required row keys).
+# direction "higher_is_worse" gates ns/query-style metrics; the api file
+# gates on the delta-vs-refreeze SPEEDUP ("lower_is_worse") because both
+# arms share each run's machine state, so the ratio cancels the ~2x
+# container-load swings that raw milliseconds carry between sweeps.
+TRAJECTORIES = {
+    "BENCH_kernel.json": (
+        "after_ns_per_query", "higher_is_worse",
+        {"batch", "before_ns_per_query", "after_ns_per_query", "speedup",
+         "fallback_rate", "oracle_escapes"},
+    ),
+    "BENCH_api.json": (
+        "speedup", "lower_is_worse",
+        {"batch", "mutation_frac", "delta_ms", "refreeze_ms", "speedup",
+         "bit_identical"},
+    ),
+}
+REGRESSION_FACTOR = 1.25
+
+
+def _load_trajectories() -> dict:
+    recorded = {}
+    for name in TRAJECTORIES:
+        p = _ROOT / name
+        if p.exists():
+            try:
+                recorded[name] = json.loads(p.read_text())
+            except json.JSONDecodeError:
+                recorded[name] = None  # malformed on disk: schema-gate it
+    return recorded
+
+
+def check_trajectories(recorded: dict, *, regressions: bool = True) -> list:
+    """Validate fresh BENCH_*.json schemas and (optionally) compare
+    against the recorded trajectory.  Returns a list of error strings."""
+    errors = []
+    for name, (metric, direction, required) in TRAJECTORIES.items():
+        p = _ROOT / name
+        if not p.exists():
+            errors.append(f"{name}: missing after sweep")
+            continue
+        try:
+            fresh = json.loads(p.read_text())
+        except json.JSONDecodeError as e:
+            errors.append(f"{name}: invalid JSON ({e})")
+            continue
+        rows = fresh.get("rows")
+        if not isinstance(rows, list) or not rows:
+            errors.append(f"{name}: schema — 'rows' missing or empty")
+            continue
+        for i, row in enumerate(rows):
+            missing = required - set(row)
+            if missing:
+                errors.append(f"{name}: row {i} missing {sorted(missing)}")
+            if "bit_identical" in required and not row.get("bit_identical",
+                                                           False):
+                errors.append(
+                    f"{name}: row {i} ({row.get('batch')}) lookups not "
+                    "bit-identical between delta and refreeze")
+        old = recorded.get(name)
+        if not regressions or not old:
+            continue
+        old_rows = {r.get("batch"): r for r in old.get("rows", [])}
+        for row in rows:
+            ref = old_rows.get(row.get("batch"))
+            if not ref or metric not in ref or metric not in row:
+                continue
+            if direction == "higher_is_worse":
+                bad = row[metric] > REGRESSION_FACTOR * ref[metric]
+            else:
+                bad = row[metric] < ref[metric] / REGRESSION_FACTOR
+            if bad:
+                errors.append(
+                    f"{name}: {row['batch']} {metric} regressed "
+                    f"{row[metric]:.1f} vs recorded {ref[metric]:.1f} "
+                    f"(beyond {REGRESSION_FACTOR}x)")
+    return errors
+
 
 def main() -> None:
     fast = os.environ.get("BENCH_FAST", "0") == "1"
+    gate = os.environ.get("BENCH_NO_GATE", "0") != "1"
     n = 60_000 if fast else None
+    recorded = _load_trajectories() if gate else {}
     print("name,us_per_call,derived")
     failures = 0
     for prefix, mod in MODULES:
@@ -51,6 +146,23 @@ def main() -> None:
             failures += 1
             print(f"# {prefix} FAILED:\n{traceback.format_exc()}",
                   file=sys.stderr)
+    if gate:
+        errors = check_trajectories(recorded, regressions=not fast)
+        for e in errors:
+            print(f"# GATE: {e}", file=sys.stderr)
+        if errors:
+            failures += 1
+            # the sweep already overwrote the trajectory files; restore
+            # the recorded baseline so a regressed run cannot launder
+            # itself into the record and pass on re-run
+            for name, old in recorded.items():
+                if old is not None:
+                    (_ROOT / name).write_text(json.dumps(old, indent=2))
+                    print(f"# GATE: {name} restored to the recorded "
+                          "baseline", file=sys.stderr)
+        else:
+            print("# GATE: trajectories valid, no >"
+                  f"{REGRESSION_FACTOR}x regressions", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -3,14 +3,14 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Covers: MDL comparison of four mechanisms (§3), sampling speedup (§4),
-gap insertion precision + dynamic inserts (§5), and the device
-(Pallas-validated) batched lookup path.
+gap insertion precision + dynamic inserts (§5) through the unified
+epoch-versioned ``Index`` handle, and the device lookup path (typed
+``LookupResult``s, delta-updated device buffers after ``ingest``).
 """
 
 import numpy as np
 
-from repro.core import LearnedIndex
-from repro.kernels import batched_lookup, from_learned_index
+from repro.core import Index
 
 
 def main():
@@ -27,7 +27,7 @@ def main():
                        ("rmi", dict(n_leaf=2000)),
                        ("fiting", dict(eps=128)),
                        ("pgm", dict(eps=128))]:
-        idx = LearnedIndex.build(keys, method=method, **kw)
+        idx = Index.build(keys, method=method, **kw)
         r = idx.mdl()
         print(f"  {method:7s} L(M)={r.l_model_params:7d} params "
               f"L(D|M)={r.l_data_given_model:6.3f} bits  MAE={r.mae:9.2f} "
@@ -35,10 +35,10 @@ def main():
 
     # --- §4: sampling — build fast, stay precise -----------------------
     print("\n== sampling (PGM eps=128) ==")
-    full = LearnedIndex.build(keys, method="pgm", eps=128)
+    full = Index.build(keys, method="pgm", eps=128)
     for s in (1.0, 0.1, 0.01):
-        idx = LearnedIndex.build(keys, method="pgm", eps=128, sample_rate=s,
-                                 rng=np.random.default_rng(1))
+        idx = Index.build(keys, method="pgm", eps=128, sample_rate=s,
+                          rng=np.random.default_rng(1))
         print(f"  s={s:<5} build={idx.build_seconds*1e3:8.1f} ms "
               f"({full.build_seconds/max(idx.build_seconds,1e-9):5.1f}x) "
               f"MAE={idx.mdl().mae:8.2f} "
@@ -46,28 +46,36 @@ def main():
 
     # --- §5: gap insertion — precision + dynamics ----------------------
     print("\n== gap insertion (rho=0.2) ==")
-    gapped = LearnedIndex.build(keys, method="pgm", eps=128, gap_rho=0.2,
-                                sample_rate=0.1)
+    gapped = Index.build(keys, method="pgm", eps=128, gap_rho=0.2,
+                         sample_rate=0.1)
     print(f"  MAE {full.mdl().mae:.2f} -> {gapped.mdl().mae:.2f}; "
           f"gap fraction {gapped.gapped.gap_fraction:.2f}")
-    new_keys = np.setdiff1d(keys[:-1] + np.diff(keys) * 0.5, keys)[:5000]
-    paths = {"slot": 0, "chain": 0}
-    for i, k in enumerate(new_keys):
-        paths[gapped.insert(float(k), 1_000_000 + i)] += 1
-    found = gapped.lookup(new_keys)
-    print(f"  inserted {len(new_keys)} keys w/o retraining "
-          f"(gap-slot={paths['slot']}, chained={paths['chain']}); "
-          f"all found: {bool(np.all(found >= 1_000_000))}")
+    new_keys = np.setdiff1d(keys[:-1] + np.diff(keys) * 0.5, keys)[:10_000]
+    report = gapped.ingest(new_keys[:5000],
+                           1_000_000 + np.arange(5000))
+    res = gapped.lookup(new_keys[:5000])
+    print(f"  ingested {report.n} keys w/o retraining "
+          f"(gap-slot={report.slot}, chained={report.chain}); "
+          f"all found: {bool(res.found.all())} [epoch {gapped.epoch}]")
 
-    # --- device path: fused batched lookup (Pallas, interpret on CPU) --
-    arrays = from_learned_index(gapped)
+    # --- device path: typed lookups on the frozen engine ---------------
+    # (backend resolves by batch size; the first big batch freezes the
+    # engine, later ingests delta-update its buffers in place)
     q = rng.choice(keys, 8192)
-    out, slot, hit, fb = batched_lookup(arrays, gapped.mech.plm.err_lo, q,
-                                        interpret=True)
+    res = gapped.lookup(q)
     truth = gapped.gapped.lookup_batch(q)
-    print(f"\n== device lookup == {len(q)} queries, "
-          f"kernel==oracle: {np.array_equal(np.asarray(out), truth)}, "
-          f"fallbacks: {int(fb)}")
+    print(f"\n== device lookup == {len(q)} queries on '{res.backend}', "
+          f"engine==host oracle: {np.array_equal(res.payloads, truth)}, "
+          f"fallbacks: {res.fallbacks}")
+    report = gapped.ingest(new_keys[5000:], 2_000_000
+                           + np.arange(len(new_keys) - 5000))
+    res = gapped.lookup(new_keys[5000:])
+    print(f"== ingest-to-queryable == device sync '{report.device}' "
+          f"({report.device_elems} elements scattered, "
+          f"{report.seconds*1e3:.1f} ms incl. host insert); "
+          f"all found: {bool(res.found.all())} — "
+          f"{gapped.stats['delta_updates']} deltas / "
+          f"{gapped.stats['refreezes']} refreezes total")
 
 
 if __name__ == "__main__":

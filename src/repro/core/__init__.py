@@ -1,14 +1,30 @@
-"""Core learned-index library: the paper's contribution.
+"""Core learned-index library: the paper's contribution behind ONE
+epoch-versioned handle.
+
+``Index`` (handle.py) is the public surface: it owns the mutable host
+state (mechanism + gapped array) and the frozen device state (a
+``kernels.QueryEngine``), versioned by an epoch counter.  Reads go
+through ``index.lookup(queries) -> LookupResult`` on a backend resolved
+from the capability registry (``pallas`` / ``xla-windowed`` /
+``numpy-oracle``); writes go through ``index.ingest(keys, payloads) ->
+IngestReport``, which delta-updates the resident device buffers and only
+refreezes past the contested-remainder / link-growth thresholds.  See
+``handle.py`` for the full epoch-protocol and backend-capability docs.
 
 Layout:
   mechanisms.py — RMI / FITing-Tree / PGM / B+Tree in one PLM framework
   mdl.py        — §3 MDL objective (L(M), L(D|M), reports)
   sampling.py   — §4 sampling + coverage patches + theory bounds
   gaps.py       — §5 result-driven gap insertion, gapped array, dynamics
-  index.py      — pluggable facade combining all of the above
+  links.py      — CSR-native linking arrays (canonical chain storage)
+  results.py    — typed LookupResult / IngestReport
+  handle.py     — the unified Index handle (epochs, backends, deltas)
+  index.py      — legacy LearnedIndex facade (deprecation shim)
 """
 
+from .handle import BACKENDS, BackendSpec, Index
 from .index import LearnedIndex
+from .links import CSRLinks
 from .mechanisms import (
     BTreeMechanism,
     FITingMechanism,
@@ -19,6 +35,7 @@ from .mechanisms import (
     build_mechanism,
 )
 from .mdl import MDLReport, correction_cost, mae, mdl_report
+from .results import IngestReport, LookupResult
 from .sampling import (
     exponential_search,
     fit_sampled,
@@ -30,7 +47,13 @@ from .sampling import (
 from .gaps import GappedArray, build_gapped, gap_positions
 
 __all__ = [
+    "Index",
+    "BackendSpec",
+    "BACKENDS",
     "LearnedIndex",
+    "LookupResult",
+    "IngestReport",
+    "CSRLinks",
     "BTreeMechanism",
     "FITingMechanism",
     "MECHANISMS",

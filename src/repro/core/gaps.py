@@ -31,11 +31,11 @@ jnp reference and the Pallas lookup kernel consume (``repro.kernels``).
 from __future__ import annotations
 
 import dataclasses
-from bisect import bisect_left
-from typing import Dict, List, Optional, Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
+from .links import CSRLinks
 from .mechanisms import PiecewiseLinearModel, _finalize_errors
 from . import sampling as _sampling
 
@@ -86,22 +86,28 @@ def gap_positions(
 
 @dataclasses.dataclass
 class GappedArray:
-    """First-level gapped array G + linking arrays (paper §5.2).
+    """First-level gapped array G + CSR linking arrays (paper §5.2).
 
     * ``slot_key[i]``: the total-order key of slot i.  Occupied slots hold
       ``min(A_i)``; unoccupied slots carry the key of the first occupied
       slot to their right (+inf past the last occupied slot).
     * ``payload[i]``: payload of the occupied slot's min key, or _EMPTY.
-    * ``links``: slot -> list of (key, payload), keys > slot min, sorted.
+    * ``links``: ``CSRLinks`` — per-slot key-sorted chains stored natively
+      as CSR (offsets / chain_keys / chain_payloads) arrays; the frozen
+      device export is these arrays verbatim.
+    * ``version``: monotone mutation counter — every dynamic op bumps it;
+      the epoch-versioned ``repro.core.Index`` handle uses it to detect
+      host/device divergence.
     """
 
     slot_key: np.ndarray           # (m,) float64
     occupied: np.ndarray           # (m,) bool
     payload: np.ndarray            # (m,) int64
-    links: Dict[int, List[Tuple[float, int]]]
+    links: CSRLinks
     mech: object                   # re-learned mechanism (predicts slots)
     n_keys: int
     rho: float
+    version: int = 0
 
     # ------------------------------------------------------------------
     @property
@@ -114,10 +120,7 @@ class GappedArray:
 
     def link_stats(self) -> Tuple[int, int]:
         """(#chained keys, max chain length)."""
-        if not self.links:
-            return 0, 0
-        lens = [len(v) for v in self.links.values()]
-        return int(sum(lens)), int(max(lens))
+        return self.links.total, self.links.max_chain
 
     # ------------------------------------------------------------------
     # read path
@@ -141,27 +144,26 @@ class GappedArray:
             return None
         if self.slot_key[j] == q:
             return int(self.payload[j])
-        for k, p in self.links.get(j, ()):  # bounded linear chain scan
-            if k == q:
-                return int(p)
-        return None
+        return self.links.find_payload(j, q)  # bounded chain bisect
 
     def _csr(self):
-        """Cached CSR link tables (invalidated by dynamic ops)."""
-        if getattr(self, "_csr_cache", None) is None:
-            self._csr_cache = self.export_csr_links()
-        return self._csr_cache
+        """CSR link tables — free: they ARE the canonical storage."""
+        return self.links.csr()
 
     def _invalidate(self):
-        self._csr_cache = None
+        self.version += 1
 
-    def lookup_batch(self, qs: np.ndarray, bounded: bool = True) -> np.ndarray:
+    def lookup_batch(self, qs: np.ndarray, bounded: bool = True,
+                     full: bool = False) -> np.ndarray:
         """Vectorized batch lookup; -1 for misses (numpy kernel reference).
 
         ``bounded`` uses the mechanism's prediction + exponential search
         (the paper's correction step — cost scales with log|err|, which
         is where gap insertion's precision pays off); otherwise a plain
-        full-array binary search.
+        full-array binary search.  ``full=True`` returns the triple
+        ``(payloads, slots, found)`` — slots are first-level upper
+        bounds, found covers slot AND chain hits (the typed-result
+        contract of ``repro.core.Index.lookup``).
         """
         from . import sampling as _s
 
@@ -175,6 +177,7 @@ class GappedArray:
         ok = j >= 0
         hit = ok & (np.where(ok, self.slot_key[np.maximum(j, 0)], np.nan) == qs)
         out[hit] = self.payload[j[hit]]
+        resolved = hit.copy()
         # vectorized chain scan over the CSR link tables for the misses
         miss = np.flatnonzero(ok & ~hit)
         if miss.size:
@@ -192,9 +195,12 @@ class GappedArray:
                 found = in_chain & (lkeys[np.minimum(idx, len(lkeys) - 1)]
                                     == qs[midx])
                 out[midx[found]] = lpays[idx[found]]
+                resolved[midx[found]] = True
                 keep = in_chain & ~found
                 start, end, midx = start[keep], end[keep], midx[keep]
                 t += 1
+        if full:
+            return out, j.astype(np.int64), resolved
         return out
 
     def contains_batch(self, qs: np.ndarray) -> np.ndarray:
@@ -241,7 +247,14 @@ class GappedArray:
         return self._insert_at(key, payload, p)
 
     def _insert_at(self, key: float, payload: int, p: int) -> str:
-        """insert() body with the predicted slot already computed."""
+        """insert() body with the predicted slot already computed.
+
+        Chain writes land in the CSRLinks pending overlay (O(chain)),
+        merged into the flat tables lazily — scalar insert loops and
+        insert_batch's contested replay never pay a per-insert O(m)
+        offsets shift.
+        """
+        links = self.links
         m = self.n_slots
         if not self.occupied[p]:
             prev = self._prev_occupied(p)
@@ -250,10 +263,8 @@ class GappedArray:
             # (total-order invariant: max(A_{i-1}) < G(i), paper §5.3)
             prev_max = -np.inf
             if prev >= 0:
-                prev_max = float(self.slot_key[prev])
-                chain = self.links.get(prev)
-                if chain:
-                    prev_max = max(prev_max, chain[-1][0])
+                prev_max = max(float(self.slot_key[prev]),
+                               links.chain_max_key(prev))
             prev_ok = prev < 0 or prev_max < key
             next_ok = nxt >= m or self.slot_key[nxt] > key
             if prev_ok and next_ok:
@@ -276,20 +287,14 @@ class GappedArray:
             # new global minimum: displace the current min into the chain
             old_key = float(self.slot_key[nxt])
             old_payload = int(self.payload[nxt])
-            chain = self.links.setdefault(nxt, [])
-            chain.append((old_key, old_payload))
-            chain.sort()
+            links.insert_one(nxt, old_key, old_payload)
             self.payload[nxt] = payload
             self.slot_key[: nxt + 1] = key
             self.n_keys += 1
             return "chain"
         if self.slot_key[ub] == key:
             raise KeyError(f"duplicate key {key!r}")
-        chain = self.links.setdefault(ub, [])
-        if any(k == key for k, _ in chain):
-            raise KeyError(f"duplicate key {key!r}")
-        chain.append((key, payload))
-        chain.sort()
+        links.insert_one(ub, key, payload)  # raises on duplicates
         self.n_keys += 1
         return "chain"
 
@@ -299,12 +304,9 @@ class GappedArray:
         ub = self._upper_bound_slot(key)
         if ub < 0:
             return False
-        chain = self.links.get(ub)
         if self.slot_key[ub] == key:
-            if chain:  # promote chain min into the slot
-                k2, p2 = chain.pop(0)
-                if not chain:
-                    del self.links[ub]
+            if self.links.chain_len(ub):  # promote chain min into the slot
+                k2, p2 = self.links.pop_front(ub)
                 prev = self._prev_occupied(ub - 1)
                 self.slot_key[prev + 1 : ub + 1] = k2
                 self.payload[ub] = p2
@@ -317,14 +319,9 @@ class GappedArray:
                 self.slot_key[prev + 1 : nxt] = nk
             self.n_keys -= 1
             return True
-        if chain:
-            for t, (k, _) in enumerate(chain):
-                if k == key:
-                    chain.pop(t)
-                    if not chain:
-                        del self.links[ub]
-                    self.n_keys -= 1
-                    return True
+        if self.links.remove(ub, key):
+            self.n_keys -= 1
+            return True
         return False
 
     def update(self, key: float, payload: int) -> bool:
@@ -336,12 +333,7 @@ class GappedArray:
         if self.slot_key[ub] == key:
             self.payload[ub] = payload
             return True
-        chain = self.links.get(ub, [])
-        for t, (k, _) in enumerate(chain):
-            if k == key:
-                chain[t] = (key, payload)
-                return True
-        return False
+        return self.links.set_payload(ub, key, payload)
 
     # ------------------------------------------------------------------
     # batched dynamic path — state-identical to sequential insert()
@@ -395,29 +387,34 @@ class GappedArray:
         ``KeyError`` just like ``insert()`` (state of the current batch
         is unspecified on raise, as with a partial sequential loop).
 
-        Returns ``{"slot": n, "chain": n}`` path counts.
+        Returns ``{"slot": n, "chain": n, "contested": n}`` — slot/chain
+        path counts plus how many keys left the vectorized fast path for
+        class-C re-resolution (the contested remainder; the epoch-
+        versioned ``Index`` handle uses its fraction as a refreeze
+        signal).
         """
         keys = np.asarray(keys, np.float64)
         payloads = np.asarray(payloads, np.int64)
         n_b = keys.shape[0]
         if n_b == 0:
-            return {"slot": 0, "chain": 0}
+            return {"slot": 0, "chain": 0, "contested": 0}
         if n_b == 1:
             path = self.insert(float(keys[0]), int(payloads[0]))
             return {"slot": int(path == "slot"),
-                    "chain": int(path == "chain")}
+                    "chain": int(path == "chain"), "contested": 0}
         # chunk large batches: cross-key run contention grows
         # ~quadratically with batch size while the per-chunk vectorized
         # cost is only ~O(m); sequential equality composes over chunks
         chunk = max(4096, min(16384,
                               int(np.count_nonzero(self.occupied)) // 8))
         if n_b > chunk:
-            counts = {"slot": 0, "chain": 0}
+            counts = {"slot": 0, "chain": 0, "contested": 0}
             for s in range(0, n_b, chunk):
                 c = self.insert_batch(keys[s:s + chunk],
                                       payloads[s:s + chunk])
                 counts["slot"] += c["slot"]
                 counts["chain"] += c["chain"]
+                counts["contested"] += c["contested"]
             return counts
         self._invalidate()
         m = self.n_slots
@@ -425,7 +422,7 @@ class GappedArray:
             np.int64)
         occ_idx = np.flatnonzero(self.occupied)
         if occ_idx.size == 0:  # degenerate: empty structure
-            counts = {"slot": 0, "chain": 0}
+            counts = {"slot": 0, "chain": 0, "contested": 0}
             for i in range(n_b):
                 counts[self._insert_at(float(keys[i]), int(payloads[i]),
                                        int(p[i]))] += 1
@@ -472,12 +469,12 @@ class GappedArray:
         prev_max = np.where(pv >= 0, self.slot_key[np.maximum(pv, 0)],
                             -np.inf)
         if self.links:
-            links_get = self.links.get
-            for i in np.flatnonzero((cand | is_loser)
-                                    & (pv >= 0)).tolist():
-                chain = links_get(int(pv[i]))
-                if chain and chain[-1][0] > prev_max[i]:
-                    prev_max[i] = chain[-1][0]
+            # CSR chains: the per-slot max is chain_keys[offsets[i+1]-1]
+            # — one vectorized gather instead of a per-key python scan
+            sel = np.flatnonzero((cand | is_loser) & (pv >= 0))
+            if sel.size:
+                cm = self.links.chain_max_keys(pv[sel])
+                np.maximum.at(prev_max, sel, cm)
         bracket = (prev_max < keys) & (keys < nx_key)
         cand &= bracket
 
@@ -584,36 +581,9 @@ class GappedArray:
             bi = np.concatenate([bi, li])
             targets = np.concatenate([targets, l_t])
         if bi.size:
-            torder = np.argsort(targets, kind="stable")
-            bt = targets[torder].tolist()
-            bk = keys[bi][torder].tolist()
-            bp = payloads[bi][torder].tolist()
-            starts = np.flatnonzero(
-                np.r_[True, np.diff(targets[torder]) != 0]).tolist()
-            starts.append(len(bt))
-            links = self.links
-            for gi in range(len(starts) - 1):
-                s, e = starts[gi], starts[gi + 1]
-                t = bt[s]
-                if e - s == 1:  # singleton: positioned insert, O(1) dup check
-                    chain = links.get(t)
-                    if chain is None:
-                        links[t] = [(bk[s], bp[s])]
-                    else:
-                        k1 = bk[s]
-                        j = bisect_left(chain, (k1,))
-                        if j < len(chain) and chain[j][0] == k1:
-                            raise KeyError(f"duplicate key {k1!r}")
-                        chain.insert(j, (k1, bp[s]))
-                    continue
-                chain = links.setdefault(t, [])
-                chain.extend(zip(bk[s:e], bp[s:e]))
-                chain.sort()
-                prev = None
-                for k1, _ in chain:
-                    if k1 == prev:
-                        raise KeyError(f"duplicate key {k1!r}")
-                    prev = k1
+            # ONE vectorized CSR merge for every chain append in the
+            # batch (raises KeyError on duplicates, like insert())
+            self.links.append_batch(targets, keys[bi], payloads[bi])
             n_chain += int(bi.size)
         self.n_keys += n_slot + n_chain
 
@@ -622,11 +592,13 @@ class GappedArray:
         # equivalence argument applies recursively, and contention shrinks
         # geometrically per round.  Sequential replay only when a round
         # makes no progress (pathological all-contested batches).
-        counts = {"slot": n_slot, "chain": n_chain}
         ci = np.flatnonzero(c_mask)
+        counts = {"slot": n_slot, "chain": n_chain, "contested": int(ci.size)}
         if ci.size == n_b or ci.size <= 1024:
             # no progress (pathological all-contested batch) or a small
-            # tail: scalar replay in arrival order beats another round
+            # tail: scalar replay in arrival order beats another O(m)
+            # round; chain appends buffer in the CSRLinks pending
+            # overlay and merge as one flush
             ins_at = self._insert_at
             for k, pl, pp in zip(keys[ci].tolist(), payloads[ci].tolist(),
                                  p[ci].tolist()):
@@ -635,13 +607,17 @@ class GappedArray:
             sub = self.insert_batch(keys[ci], payloads[ci])
             counts["slot"] += sub["slot"]
             counts["chain"] += sub["chain"]
+        # merge the replay tail's buffered chain appends now: the flush
+        # belongs to this batch, not to the next reader (e.g. the epoch
+        # handle's timed device sync)
+        self.links.flush()
         return counts
 
     def delete_batch(self, keys: np.ndarray) -> int:
         """Batched §5.3 deletes — a host-side sweep over ``delete()``
-        (deletes are the rare arm of dynamic workloads; a vectorized
-        sweep is a ROADMAP follow-up alongside the CSR links refactor).
-        Returns the number of keys actually removed."""
+        (deletes are the rare arm of dynamic workloads; each chain
+        removal is one CSR memmove).  Returns the number of keys
+        actually removed."""
         removed = 0
         for k in np.asarray(keys, np.float64):
             removed += bool(self.delete(float(k)))
@@ -653,28 +629,19 @@ class GappedArray:
     def export_csr_links(self, max_chain: Optional[int] = None):
         """CSR link tables: (offsets (m+1,), keys (L,), payloads (L,)).
 
-        ``max_chain`` bounds per-slot chains for the fixed-trip-count
-        kernel; overflow raises (asserted rare — paper §5.2 observes
-        chains are short).
+        Free — the chains are stored natively as CSR arrays; the return
+        values are views of the canonical storage (copy before mutating
+        this structure).  ``max_chain`` bounds per-slot chains for the
+        fixed-trip-count kernel; overflow raises (asserted rare — paper
+        §5.2 observes chains are short).
         """
-        m = self.n_slots
-        counts = np.zeros(m + 1, np.int64)
-        for i, chain in self.links.items():
-            counts[i + 1] = len(chain)
-            if max_chain is not None and len(chain) > max_chain:
-                raise ValueError(
-                    f"chain at slot {i} has {len(chain)} > max_chain={max_chain}"
-                )
-        offsets = np.cumsum(counts)
-        total = int(offsets[-1])
-        keys = np.empty(total, np.float64)
-        payloads = np.empty(total, np.int64)
-        for i, chain in self.links.items():
-            o = offsets[i]
-            for t, (k, p) in enumerate(chain):
-                keys[o + t] = k
-                payloads[o + t] = p
-        return offsets, keys, payloads
+        if max_chain is not None and self.links.max_chain > max_chain:
+            lens = np.diff(self.links.offsets)
+            i = int(np.argmax(lens))
+            raise ValueError(
+                f"chain at slot {i} has {int(lens[i])} > max_chain={max_chain}"
+            )
+        return self.links.csr()
 
 
 def _place_keys(
@@ -682,35 +649,40 @@ def _place_keys(
     payloads: np.ndarray,
     pred_slot: np.ndarray,
     m: int,
-) -> Tuple[np.ndarray, np.ndarray, np.ndarray, Dict[int, List[Tuple[float, int]]]]:
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, CSRLinks]:
     """Linking-array placement (§5.2): slot = prediction; conflicts chain.
 
-    Keys arrive sorted; we keep a cursor at the last occupied slot.  A key
-    predicted at/behind the cursor chains onto the cursor slot; otherwise
-    it occupies its predicted slot.
+    Keys arrive sorted; the cursor (last occupied slot) is the running
+    max of predicted slots, so the whole placement vectorizes: a key
+    occupies iff its prediction strictly exceeds every earlier
+    prediction; otherwise it chains onto the cursor.  Chain targets are
+    non-decreasing and keys arrive key-sorted, so the chained triples
+    are already in CSR order — built with one bincount + cumsum.
     """
     slot_key = np.full(m, np.inf, np.float64)
     occupied = np.zeros(m, bool)
     payload = np.full(m, _EMPTY, np.int64)
-    links: Dict[int, List[Tuple[float, int]]] = {}
-    cur = -1
-    for t in range(x.shape[0]):
-        p = int(pred_slot[t])
-        if p > cur:
-            slot_key[p] = x[t]
-            occupied[p] = True
-            payload[p] = payloads[t]
-            cur = p
-        else:
-            links.setdefault(cur, []).append((float(x[t]), int(payloads[t])))
+    pred_slot = np.asarray(pred_slot, np.int64)
+    n = x.shape[0]
+    links = CSRLinks(m)
+    if n:
+        cm = np.maximum.accumulate(pred_slot)
+        occ = np.r_[True, pred_slot[1:] > cm[:-1]]
+        po = pred_slot[occ]
+        slot_key[po] = x[occ]
+        occupied[po] = True
+        payload[po] = payloads[occ]
+        chained = ~occ
+        if np.any(chained):
+            targets = cm[chained]  # cursor at each chained arrival
+            counts = np.bincount(targets, minlength=m)
+            links = CSRLinks(m, np.concatenate([[0], np.cumsum(counts)]),
+                             np.asarray(x[chained], np.float64),
+                             np.asarray(payloads[chained], np.int64))
     # carried keys for unoccupied slots: next occupied key to the right
-    carried = slot_key.copy()
-    nxt = np.inf
-    for i in range(m - 1, -1, -1):
-        if occupied[i]:
-            nxt = carried[i]
-        else:
-            carried[i] = nxt
+    # (occupied keys ascend, so one reverse cummin repairs everything)
+    carried = np.minimum.accumulate(
+        np.where(occupied, slot_key, np.inf)[::-1])[::-1]
     return carried, occupied, payload, links
 
 

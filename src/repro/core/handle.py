@@ -1,0 +1,553 @@
+"""Unified ``Index`` handle: one epoch-versioned object owning both the
+mutable host state and the frozen device state.
+
+The paper's pitch is *pluggability* — sampling (§4) and gap insertion
+(§5) as knobs over any base mechanism.  ``Index`` is the one public
+surface those knobs hang off:
+
+* ``Index.build(keys, method=..., sample_rate=..., gap_rho=...)``
+* reads:  ``index.lookup(queries) -> LookupResult`` (typed: payloads,
+  slots, found mask, fallback/escape stats) on a backend chosen from the
+  capability registry below;
+* writes: ``index.ingest(keys, payloads) -> IngestReport`` /
+  ``index.remove(keys)`` — §5.3 dynamic ops, no retraining.
+
+Epoch protocol
+--------------
+Every host mutation bumps ``index.epoch`` (delegated to the gapped
+array's version counter, so scalar ``insert``/``delete``/``update``
+through any path count too).  The frozen device state records the epoch
+it was built against; a device-backend lookup first brings the device
+forward:
+
+* **delta update** (the common case): scatter only the changed
+  slot_key/payload entries and CSR-link tail regions into the resident
+  device buffers — no re-jit, no window-bound recompute, no full
+  transfer;
+* **full refreeze**: taken only when the contested-remainder fraction of
+  an ingest or the link-chain growth since the last freeze crosses a
+  threshold (stale windows / long chains degrade the single-pass rate),
+  or when a shape/dtype static changed (link capacity, max-chain
+  headroom, payload or key width).
+
+Backend capability registry
+---------------------------
+=============  ======  ==========  =========  =====================
+name           device  wide keys   min batch  notes
+=============  ======  ==========  =========  =====================
+pallas         yes     no          512        TPU kernel (interpret
+                                              =True runs it on CPU)
+xla-windowed   yes     yes (hi/lo  512        windowed bisect/rank;
+                       f32 pair)              permutation-free
+numpy-oracle   no      yes (f64)   0          host reference; exact
+=============  ======  ==========  =========  =====================
+
+``lookup(backend=None)`` resolves: small batches go to ``numpy-oracle``;
+large batches to ``pallas`` on TPU (narrow keys) else ``xla-windowed``.
+Explicitly requesting a backend that cannot serve the index (e.g.
+``pallas`` with >2^24 composite keys) raises with the capability that
+failed.
+"""
+
+from __future__ import annotations
+
+import copy as _copy
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from . import gaps as _gaps
+from . import mdl as _mdl
+from . import sampling as _sampling
+from .mechanisms import MECHANISMS
+from .results import IngestReport, LookupResult, host_lookup_result
+
+__all__ = ["Index", "BackendSpec", "BACKENDS"]
+
+
+def _mechanism_factory(method: str, **kwargs):
+    cls = MECHANISMS[method]
+    return lambda: cls(**kwargs)
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """Capability record for one lookup backend."""
+
+    name: str
+    device: bool            # runs on the frozen device arrays
+    wide_keys: bool         # exact beyond f32 (2^24) key magnitudes
+    min_batch: int          # below this the backend loses to the host
+    engine_backend: Optional[str]  # kernels.QueryEngine backend name
+
+    def available(self) -> bool:
+        if not self.device:
+            return True
+        import jax
+        if self.name == "pallas":
+            # auto-pick only on TPU; explicit requests run interpreted
+            return jax.default_backend() == "tpu"
+        return True
+
+
+BACKENDS: Dict[str, BackendSpec] = {
+    "pallas": BackendSpec("pallas", device=True, wide_keys=False,
+                          min_batch=512, engine_backend="pallas"),
+    "xla-windowed": BackendSpec("xla-windowed", device=True, wide_keys=True,
+                                min_batch=512, engine_backend="xla"),
+    "numpy-oracle": BackendSpec("numpy-oracle", device=False, wide_keys=True,
+                                min_batch=0, engine_backend=None),
+}
+
+
+@dataclasses.dataclass
+class Index:
+    """A built learned index over sorted unique f64 keys (see module doc).
+
+    Host state: ``keys`` / ``mech`` / ``gapped``; device state: a lazily
+    frozen ``kernels.QueryEngine`` plus the host mirror its delta updates
+    diff against.  ``epoch`` versions the pair.
+    """
+
+    keys: np.ndarray
+    mech: object
+    method: str
+    gapped: Optional[_gaps.GappedArray] = None
+    sample_rate: float = 1.0
+    gap_rho: float = 0.0
+    build_seconds: float = 0.0
+    # --- device-sync policy knobs -------------------------------------
+    refreeze_contested_frac: float = 0.25
+    refreeze_link_growth: float = 0.10
+    min_device_batch: int = 512
+    # --- device state (rebuilt lazily; dropped on deepcopy) -----------
+    _engine: object = dataclasses.field(default=None, repr=False,
+                                        compare=False)
+    _mirror: object = dataclasses.field(default=None, repr=False,
+                                        compare=False)
+    _device_epoch: int = dataclasses.field(default=-1, repr=False,
+                                           compare=False)
+    _keycap_cache: object = dataclasses.field(default=None, repr=False,
+                                              compare=False)
+    stats: dict = dataclasses.field(default_factory=lambda: {
+        "refreezes": 0, "delta_updates": 0, "delta_elems": 0,
+        "lookups": 0, "ingests": 0})
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def build(
+        cls,
+        keys: np.ndarray,
+        method: str = "pgm",
+        sample_rate: float = 1.0,
+        gap_rho: float = 0.0,
+        rng: Optional[np.random.Generator] = None,
+        **mech_kwargs,
+    ) -> "Index":
+        keys = np.asarray(keys, np.float64)
+        if keys.ndim != 1 or keys.shape[0] < 2:
+            raise ValueError("need a 1-D array of at least two keys")
+        if not bool(np.all(np.diff(keys) > 0)):
+            raise ValueError("keys must be sorted, strictly increasing (unique)")
+        factory = _mechanism_factory(method, **mech_kwargs)
+        t0 = time.perf_counter()
+        if gap_rho > 0.0:
+            refit_factory = None
+            if method in ("pgm", "fiting") and "eps" in mech_kwargs:
+                # D_g is near-linear: tighter refit eps => precise
+                # placement, short linking arrays (beyond-paper knob)
+                rkw = dict(mech_kwargs)
+                rkw["eps"] = max(4.0, float(mech_kwargs["eps"]) / 16.0)
+                refit_factory = _mechanism_factory(method, **rkw)
+            ga = _gaps.build_gapped(
+                factory, keys, rho=gap_rho, sample_rate=sample_rate, rng=rng,
+                refit_factory=refit_factory,
+            )
+            mech = ga.mech
+            gapped = ga
+        else:
+            gapped = None
+            if sample_rate < 1.0:
+                mech = _sampling.fit_sampled(factory, keys, rate=sample_rate,
+                                             rng=rng)
+            else:
+                mech = factory()
+                mech.fit(keys, np.arange(keys.shape[0], dtype=np.float64))
+        dt = time.perf_counter() - t0
+        return cls(
+            keys=keys,
+            mech=mech,
+            method=method,
+            gapped=gapped,
+            sample_rate=sample_rate,
+            gap_rho=gap_rho,
+            build_seconds=dt,
+        )
+
+    # ------------------------------------------------------------------
+    # epoch protocol
+    # ------------------------------------------------------------------
+    @property
+    def epoch(self) -> int:
+        """Monotone host-state version (0 for an untouched build)."""
+        return self.gapped.version if self.gapped is not None else 0
+
+    @property
+    def device_epoch(self) -> int:
+        """Epoch the frozen device state reflects (-1: not materialized)."""
+        return self._device_epoch
+
+    def __deepcopy__(self, memo):
+        # device state is a cache keyed by epoch — rebuild it lazily in
+        # the copy instead of deep-copying jax buffers
+        new = Index(
+            keys=_copy.deepcopy(self.keys, memo),
+            mech=_copy.deepcopy(self.mech, memo),
+            method=self.method,
+            gapped=_copy.deepcopy(self.gapped, memo),
+            sample_rate=self.sample_rate,
+            gap_rho=self.gap_rho,
+            build_seconds=self.build_seconds,
+            refreeze_contested_frac=self.refreeze_contested_frac,
+            refreeze_link_growth=self.refreeze_link_growth,
+            min_device_batch=self.min_device_batch,
+            stats=dict(self.stats),
+        )
+        new.__class__ = self.__class__
+        memo[id(self)] = new
+        return new
+
+    # ------------------------------------------------------------------
+    # backend resolution
+    # ------------------------------------------------------------------
+    def _key_caps(self):
+        """(wide, device_exact) of the LIVE key set, cached per epoch.
+
+        ``wide``: keys exceed f32 exactness (2^24) and ride the hi/lo
+        pair on device.  ``device_exact``: the device pair search cannot
+        conflate stored keys — either every key is individually
+        pair-exact (integers < 2^48; the common composite/hash case) or
+        the pair mapping is alias-free over the stored set (continuous
+        f64 keys whose spacing exceeds pair resolution).  ``ingest``
+        maintains the cache incrementally for all-exact batches, so the
+        hot path stays O(batch)."""
+        cached = self._keycap_cache
+        if cached is not None and cached[0] == self.epoch:
+            return cached[1], cached[2]
+        from ..kernels import ops as _ops
+        if self.gapped is not None:
+            arrs = (self.gapped.slot_key, self.gapped.links.chain_keys)
+        else:
+            arrs = (self.keys,)
+        wide = any(_ops.keys_need_pair(a) for a in arrs)
+        indiv = all(_ops.keys_pair_exact(a) for a in arrs)
+        exact = indiv
+        if wide and not indiv:
+            merged = (np.sort(np.concatenate(arrs)) if len(arrs) > 1
+                      and arrs[1].size else arrs[0])
+            exact = _ops.pair_alias_free(merged)
+        self._keycap_cache = (self.epoch, wide, exact, indiv)
+        return wide, exact
+
+    def _key_caps_after_batch(self, batch: np.ndarray) -> None:
+        """Incremental cap maintenance after an ingest, O(batch log n):
+
+        * all-exact set + per-key pair-exact batch: exact pairs
+          reconstruct their key, so no aliasing can appear — roll the
+          cache forward directly;
+        * alias-free continuous set: a NEW alias must pair a new key
+          with one of its key-order neighbors, so checking the batch
+          against its bracketing stored keys (slot keys + the bracketing
+          slots' chains) suffices — no O(n log n) global re-sort;
+        * anything else leaves the cache stale for a full recompute.
+        """
+        cached = self._keycap_cache
+        if cached is None or not cached[2]:
+            return  # no cache, or already inexact (stays inexact)
+        from ..kernels import ops as _ops
+        batch = np.asarray(batch, np.float64)
+        wide = cached[1] or _ops.keys_need_pair(batch)
+        if cached[3] and _ops.keys_pair_exact(batch):
+            self._keycap_cache = (self.epoch, wide, True, True)
+            return
+        ga = self.gapped
+        if ga is None:
+            return
+        # continuous case: verify alias-freeness of the new keys against
+        # their key-order neighbors in the (already updated) structure.
+        # By the carried-key construction, a value's predecessor lives
+        # on the PREV occupied slot (left-searchsorted - 1) or its
+        # chain, and its bracketing chain hangs off the occupied upper
+        # bound (right-searchsorted - 1); the successor value is that
+        # slot's right neighbor's (carried) key.
+        bs = np.unique(batch)
+        m = ga.n_slots
+        jr = np.searchsorted(ga.slot_key, bs, side="right") - 1
+        jl = np.searchsorted(ga.slot_key, bs, side="left") - 1
+        s_chain = np.unique(np.clip(np.concatenate([jl, jr]), 0, m - 1))
+        s_vals = np.unique(np.clip(np.concatenate([jl, jr, jr + 1]),
+                                   0, m - 1))
+        nb = ga.slot_key[s_vals]
+        off, ck, _ = ga.links.csr()
+        starts, ends = off[s_chain], off[s_chain + 1]
+        lens = ends - starts
+        if int(lens.sum()):
+            base = np.repeat(starts, lens)
+            step = np.arange(int(lens.sum())) - np.repeat(
+                np.cumsum(lens) - lens, lens)
+            chain_nb = ck[base + step]
+        else:
+            chain_nb = np.zeros(0, np.float64)
+        cand = np.concatenate([bs, nb[np.isfinite(nb)], chain_nb])
+        exact = _ops.pair_alias_free(np.sort(np.unique(cand)))
+        self._keycap_cache = (self.epoch, wide, bool(exact), False)
+
+    def _keys_wide(self) -> bool:
+        return self._key_caps()[0]
+
+    def resolve_backend(self, n_queries: int,
+                        requested: Optional[str] = None) -> BackendSpec:
+        """Pick a backend from the capability registry (see module doc)."""
+        has_plm = getattr(self.mech, "plm", None) is not None
+        if requested is not None:
+            try:
+                spec = BACKENDS[requested]
+            except KeyError:
+                raise ValueError(
+                    f"unknown backend {requested!r}; registered: "
+                    f"{sorted(BACKENDS)}") from None
+            if spec.device:
+                if not has_plm:
+                    raise ValueError(
+                        f"backend {requested!r} cannot serve this index: "
+                        f"mechanism {self.method!r} does not export a "
+                        "piecewise linear model — use 'numpy-oracle'")
+                wide, exact = self._key_caps()
+                if wide and not spec.wide_keys:
+                    raise ValueError(
+                        f"backend {requested!r} cannot serve this index: "
+                        "keys exceed f32 exactness (2^24) and the backend "
+                        "lacks hi/lo wide-key support — use 'xla-windowed' "
+                        "or 'numpy-oracle'")
+                if wide and not exact:
+                    raise ValueError(
+                        f"backend {requested!r} cannot serve this index: "
+                        "distinct keys alias in the f32 hi/lo pair "
+                        "representation (exact only up to ~2^48) — only "
+                        "'numpy-oracle' can distinguish them")
+            return spec
+        if n_queries < self.min_device_batch or not has_plm:
+            return BACKENDS["numpy-oracle"]
+        wide, exact = self._key_caps()
+        if wide and not exact:  # beyond 2^48: only the host is exact
+            return BACKENDS["numpy-oracle"]
+        pallas = BACKENDS["pallas"]
+        if pallas.available() and not wide:
+            return pallas
+        return BACKENDS["xla-windowed"]
+
+    # ------------------------------------------------------------------
+    # device state lifecycle
+    # ------------------------------------------------------------------
+    def refreeze(self):
+        """Full rebuild of the frozen device state (arrays + query-safe
+        window bounds + host mirror) at the current epoch."""
+        from ..kernels import ops as _ops
+        self._engine, self._mirror = _ops.freeze_state(self)
+        self._device_epoch = self.epoch
+        self.stats["refreezes"] += 1
+        return self._engine
+
+    def sync_device(self):
+        """Bring the frozen device state to the current epoch NOW (delta
+        scatter when possible, refreeze otherwise) instead of lazily on
+        the next device lookup.  Returns the engine."""
+        return self._sync_device()
+
+    def _sync_device(self, prefer_delta: bool = True):
+        """Bring the device state to the current epoch (delta if allowed
+        and possible, else refreeze)."""
+        if self._engine is None:
+            return self.refreeze()
+        if self._device_epoch == self.epoch:
+            return self._engine
+        from ..kernels import ops as _ops
+        if prefer_delta:
+            new_arrays, n_elems = _ops.delta_update(
+                self._engine.arrays, self._mirror, self)
+            if new_arrays is not None:
+                self._engine.swap_arrays(new_arrays)
+                self._device_epoch = self.epoch
+                self.stats["delta_updates"] += 1
+                self.stats["delta_elems"] += n_elems
+                return self._engine
+        return self.refreeze()
+
+    def _link_growth_fraction(self) -> float:
+        """Chained keys added since the last freeze, relative to the
+        index size AT that freeze (a stable denominator)."""
+        if self.gapped is None or self._mirror is None:
+            return 0.0
+        grown = self.gapped.links.total - self._mirror.links_at_freeze
+        return grown / max(self._mirror.n_keys_at_freeze, 1)
+
+    # ------------------------------------------------------------------
+    # reads
+    # ------------------------------------------------------------------
+    def predict(self, qs: np.ndarray) -> np.ndarray:
+        return self.mech.predict(np.asarray(qs, np.float64))
+
+    def lookup(self, queries, *, backend: Optional[str] = None,
+               queries_sorted: bool = False) -> LookupResult:
+        """Batched exact-match lookup -> ``LookupResult``.
+
+        ``backend`` picks a registry entry explicitly; default resolves
+        by batch size / platform / key width.  ``queries_sorted=True``
+        skips the sort round trip on the Pallas path.
+        """
+        queries = np.asarray(queries, np.float64)
+        spec = self.resolve_backend(queries.shape[0], backend)
+        self.stats["lookups"] += 1
+        if not spec.device:
+            if self.gapped is not None:
+                pay, slots, found = self.gapped.lookup_batch(queries,
+                                                             full=True)
+                return host_lookup_result(pay, slots, found, spec.name,
+                                          self.epoch)
+            pos = _sampling.exponential_search(self.keys, queries,
+                                              self.predict(queries))
+            found = self.keys[pos] == queries
+            pay = np.where(found, pos, -1)
+            return host_lookup_result(pay, pos, found, spec.name, self.epoch)
+        engine = self._sync_device()
+        esc0 = engine.stats["oracle_escapes"]
+        out, slot, found, fb = engine.lookup(
+            queries, queries_sorted=queries_sorted,
+            backend=spec.engine_backend, force_backend=backend is not None)
+        # label the search stage that ACTUALLY ran: the engine's
+        # size-aware scheduler may run the device oracle for small
+        # default-resolved buckets (explicit requests are forced)
+        stage = {"pallas": "pallas", "xla": "xla-windowed",
+                 "oracle": "device-oracle"}[engine.last_stage]
+        return LookupResult(
+            payloads=np.asarray(out).astype(np.int64),
+            slots=np.asarray(slot).astype(np.int64),
+            found=np.asarray(found, bool),
+            backend=stage,
+            epoch=self.epoch,
+            fallbacks=int(fb),
+            oracle_escapes=engine.stats["oracle_escapes"] - esc0,
+        )
+
+    # ------------------------------------------------------------------
+    # writes (§5.3 dynamic ops — need a gapped build)
+    # ------------------------------------------------------------------
+    def _need_gapped(self):
+        if self.gapped is None:
+            raise NotImplementedError(
+                "dynamic ops need gap insertion (build with gap_rho > 0)"
+            )
+
+    def ingest(self, keys, payloads) -> IngestReport:
+        """Batched insert; delta-updates the frozen device state in place
+        (full refreeze only past the policy thresholds — see module doc).
+        """
+        self._need_gapped()
+        t0 = time.perf_counter()
+        keys = np.atleast_1d(np.asarray(keys, np.float64))
+        payloads = np.atleast_1d(np.asarray(payloads, np.int64))
+        counts = self.gapped.insert_batch(keys, payloads)
+        self._key_caps_after_batch(keys)
+        self.stats["ingests"] += 1
+        device = "none"
+        elems = 0
+        if self._engine is not None:
+            wide, exact = self._key_caps()
+            if wide and not exact:
+                # ingested keys outgrew the hi/lo pair's exactness: the
+                # device can no longer answer exactly — drop the frozen
+                # state; the registry now routes every lookup host-side
+                self._engine = None
+                self._mirror = None
+                self._device_epoch = -1
+            else:
+                contested_frac = counts["contested"] / max(keys.shape[0], 1)
+                want_refreeze = (
+                    contested_frac > self.refreeze_contested_frac
+                    or self._link_growth_fraction()
+                    > self.refreeze_link_growth)
+                before = (self.stats["delta_updates"],
+                          self.stats["refreezes"],
+                          self.stats["delta_elems"])
+                self._sync_device(prefer_delta=not want_refreeze)
+                if self.stats["delta_updates"] > before[0]:
+                    device = "delta"
+                    elems = self.stats["delta_elems"] - before[2]
+                elif self.stats["refreezes"] > before[1]:
+                    device = "refreeze"
+        return IngestReport(
+            n=int(keys.shape[0]), slot=counts["slot"], chain=counts["chain"],
+            contested=counts["contested"], epoch=self.epoch, device=device,
+            device_elems=elems, seconds=time.perf_counter() - t0)
+
+    def _roll_caps(self) -> None:
+        """Advance the keycap cache to the current epoch UNCHANGED —
+        for mutations that cannot worsen key capabilities (payload
+        updates; deletes, which can only remove aliasing: stale wide
+        or inexact flags err conservative)."""
+        cached = self._keycap_cache
+        if cached is not None:
+            self._keycap_cache = (self.epoch,) + cached[1:]
+
+    def remove(self, keys) -> int:
+        """Batched delete; device state follows lazily (next device
+        lookup delta-updates or refreezes as needed)."""
+        self._need_gapped()
+        n = self.gapped.delete_batch(np.atleast_1d(
+            np.asarray(keys, np.float64)))
+        self._roll_caps()
+        return n
+
+    # scalar host ops (thin delegates; epoch bumps via gapped.version)
+    def insert(self, key: float, payload: int) -> str:
+        self._need_gapped()
+        path = self.gapped.insert(key, payload)
+        self._key_caps_after_batch(np.array([key], np.float64))
+        return path
+
+    def insert_batch(self, keys: np.ndarray, payloads: np.ndarray) -> dict:
+        """Raw batched insert returning §5.3 path counts (host only; use
+        ``ingest`` for the typed report + eager device sync)."""
+        self._need_gapped()
+        return self.gapped.insert_batch(keys, payloads)
+
+    def delete(self, key: float) -> bool:
+        self._need_gapped()
+        out = self.gapped.delete(key)
+        self._roll_caps()
+        return out
+
+    def delete_batch(self, keys: np.ndarray) -> int:
+        self._need_gapped()
+        out = self.gapped.delete_batch(keys)
+        self._roll_caps()
+        return out
+
+    def update(self, key: float, payload: int) -> bool:
+        self._need_gapped()
+        out = self.gapped.update(key, payload)
+        self._roll_caps()  # payload-only: key capabilities unchanged
+        return out
+
+    # ------------------------------------------------------------------
+    def mdl(self, alpha: float = 1.0) -> _mdl.MDLReport:
+        """Evaluate under the §3 MDL framework (positions = logical y)."""
+        y = np.arange(self.keys.shape[0], dtype=np.float64)
+        if self.gapped is not None:
+            # positions are physical slots in the gapped layout
+            y = np.searchsorted(self.gapped.slot_key, self.keys,
+                                side="right") - 1
+        return _mdl.mdl_report(self.method, self.mech, self.keys, y,
+                               alpha=alpha)

@@ -1,155 +1,52 @@
-"""Pluggable LearnedIndex facade — the paper's techniques as composable knobs.
+"""Legacy ``LearnedIndex`` facade — a thin deprecation shim over the
+unified ``repro.core.Index`` handle.
 
-``LearnedIndex.build(keys, method=..., sample_rate=..., gap_rho=...)``
-combines any base mechanism (rmi / fiting / pgm / btree) with the two
-pluggable techniques:
+``LearnedIndex`` predates the epoch-versioned handle; it returned bare
+arrays from ``lookup`` (positions for static builds, payloads for gapped
+ones, -1 sentinels for both) and ad-hoc dicts/strings from dynamic ops.
+The handle replaces all of that with typed results (``LookupResult`` /
+``IngestReport``) and owns the frozen device state.
 
-* ``sample_rate < 1``  -> §4 sampling (+ coverage patches)
-* ``gap_rho > 0``      -> §5 result-driven gap insertion (gapped layout,
-                          linking arrays, dynamic ops)
+Migration:
 
-Static layout (no gaps) supports batched exact lookup via bounded search;
-gapped layout additionally supports insert/delete/update without
-retraining.  ``mdl()`` evaluates the instance under the §3 framework.
+====================================  =================================
+old                                   new
+====================================  =================================
+``LearnedIndex.build(...)``           ``Index.build(...)``
+``idx.lookup(q) -> ndarray``          ``idx.lookup(q).payloads``
+``idx.insert_batch(k, p) -> dict``    ``idx.ingest(k, p) -> IngestReport``
+``QueryEngine.from_index(idx)``       ``idx.lookup(q, backend=...)`` (the
+                                      handle freezes lazily and keeps the
+                                      engine fresh via delta updates)
+====================================  =================================
+
+``LearnedIndex.lookup`` keeps the old array returns for one release and
+emits a ``DeprecationWarning``; everything else inherits the handle's
+behavior unchanged (same build knobs, same §5.3 dynamic ops).
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Optional
+import warnings
 
 import numpy as np
 
-from . import gaps as _gaps
-from . import mdl as _mdl
-from . import sampling as _sampling
-from .mechanisms import MECHANISMS
+from .handle import Index
 
 __all__ = ["LearnedIndex"]
 
 
-def _mechanism_factory(method: str, **kwargs):
-    cls = MECHANISMS[method]
-    return lambda: cls(**kwargs)
+class LearnedIndex(Index):
+    """Deprecated facade — use ``repro.core.Index`` (see module doc)."""
 
-
-@dataclasses.dataclass
-class LearnedIndex:
-    """A built index over a sorted unique key array."""
-
-    keys: np.ndarray
-    mech: object
-    method: str
-    gapped: Optional[_gaps.GappedArray] = None
-    sample_rate: float = 1.0
-    gap_rho: float = 0.0
-    build_seconds: float = 0.0
-
-    # ------------------------------------------------------------------
-    @staticmethod
-    def build(
-        keys: np.ndarray,
-        method: str = "pgm",
-        sample_rate: float = 1.0,
-        gap_rho: float = 0.0,
-        rng: Optional[np.random.Generator] = None,
-        **mech_kwargs,
-    ) -> "LearnedIndex":
-        keys = np.asarray(keys, np.float64)
-        if keys.ndim != 1 or keys.shape[0] < 2:
-            raise ValueError("need a 1-D array of at least two keys")
-        if not bool(np.all(np.diff(keys) > 0)):
-            raise ValueError("keys must be sorted, strictly increasing (unique)")
-        factory = _mechanism_factory(method, **mech_kwargs)
-        t0 = time.perf_counter()
-        if gap_rho > 0.0:
-            refit_factory = None
-            if method in ("pgm", "fiting") and "eps" in mech_kwargs:
-                # D_g is near-linear: tighter refit eps => precise
-                # placement, short linking arrays (beyond-paper knob)
-                rkw = dict(mech_kwargs)
-                rkw["eps"] = max(4.0, float(mech_kwargs["eps"]) / 16.0)
-                refit_factory = _mechanism_factory(method, **rkw)
-            ga = _gaps.build_gapped(
-                factory, keys, rho=gap_rho, sample_rate=sample_rate, rng=rng,
-                refit_factory=refit_factory,
-            )
-            mech = ga.mech
-            gapped = ga
-        else:
-            gapped = None
-            if sample_rate < 1.0:
-                mech = _sampling.fit_sampled(factory, keys, rate=sample_rate, rng=rng)
-            else:
-                mech = factory()
-                mech.fit(keys, np.arange(keys.shape[0], dtype=np.float64))
-        dt = time.perf_counter() - t0
-        return LearnedIndex(
-            keys=keys,
-            mech=mech,
-            method=method,
-            gapped=gapped,
-            sample_rate=sample_rate,
-            gap_rho=gap_rho,
-            build_seconds=dt,
-        )
-
-    # ------------------------------------------------------------------
-    def predict(self, qs: np.ndarray) -> np.ndarray:
-        return self.mech.predict(np.asarray(qs, np.float64))
-
-    def lookup(self, qs: np.ndarray) -> np.ndarray:
-        """Exact positions (static) or payloads (gapped); -1 for misses."""
-        qs = np.asarray(qs, np.float64)
-        if self.gapped is not None:
-            return self.gapped.lookup_batch(qs)
-        pos = _sampling.exponential_search(self.keys, qs, self.predict(qs))
-        found = self.keys[pos] == qs
-        return np.where(found, pos, -1)
-
-    def insert(self, key: float, payload: int) -> str:
-        if self.gapped is None:
-            raise NotImplementedError(
-                "dynamic ops need gap insertion (build with gap_rho > 0)"
-            )
-        return self.gapped.insert(key, payload)
-
-    def insert_batch(self, keys: np.ndarray, payloads: np.ndarray) -> dict:
-        """Vectorized bulk insert; state-identical to sequential insert()."""
-        if self.gapped is None:
-            raise NotImplementedError(
-                "dynamic ops need gap insertion (build with gap_rho > 0)"
-            )
-        return self.gapped.insert_batch(keys, payloads)
-
-    def delete(self, key: float) -> bool:
-        if self.gapped is None:
-            raise NotImplementedError(
-                "dynamic ops need gap insertion (build with gap_rho > 0)"
-            )
-        return self.gapped.delete(key)
-
-    def delete_batch(self, keys: np.ndarray) -> int:
-        """Bulk delete; returns the number of keys removed."""
-        if self.gapped is None:
-            raise NotImplementedError(
-                "dynamic ops need gap insertion (build with gap_rho > 0)"
-            )
-        return self.gapped.delete_batch(keys)
-
-    def update(self, key: float, payload: int) -> bool:
-        if self.gapped is None:
-            raise NotImplementedError(
-                "dynamic ops need gap insertion (build with gap_rho > 0)"
-            )
-        return self.gapped.update(key, payload)
-
-    # ------------------------------------------------------------------
-    def mdl(self, alpha: float = 1.0) -> _mdl.MDLReport:
-        """Evaluate under the §3 MDL framework (positions = logical y)."""
-        y = np.arange(self.keys.shape[0], dtype=np.float64)
-        if self.gapped is not None:
-            # positions are physical slots in the gapped layout
-            y = np.searchsorted(self.gapped.slot_key, self.keys, side="right") - 1
-        return _mdl.mdl_report(self.method, self.mech, self.keys, y, alpha=alpha)
+    def lookup(self, qs: np.ndarray, **kwargs) -> np.ndarray:
+        """Legacy lookup: positions (static) / payloads (gapped); -1 for
+        misses.  One-release shim: routes through the unified
+        ``LookupResult`` and returns its payload array (identical values
+        — static payloads ARE positions), warning once per call site.
+        """
+        warnings.warn(
+            "LearnedIndex.lookup returning a bare array is deprecated; "
+            "use repro.core.Index.lookup -> LookupResult (payloads/slots/"
+            "found/stats)", DeprecationWarning, stacklevel=2)
+        return np.asarray(Index.lookup(self, qs, **kwargs).payloads)

@@ -1,0 +1,105 @@
+"""Typed results for the unified ``repro.core.Index`` handle.
+
+Every read returns a ``LookupResult`` and every write returns an
+``IngestReport`` — one contract across host and device backends, static
+and gapped builds (before this, static builds returned position arrays,
+gapped builds payload arrays, and dynamic ops ad-hoc dicts/strings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["LookupResult", "IngestReport"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LookupResult:
+    """Result of ``Index.lookup`` (one batch).
+
+    * ``payloads`` — (n,) int64; -1 for absent keys.  For static (no-gap)
+      builds the payload of key i is its position i, so this doubles as
+      the classic position array.
+    * ``slots``    — (n,) int64 physical slot of each query's upper bound
+      in the first-level array (-1 below all keys).
+    * ``found``    — (n,) bool: key present (first-level slot hit OR
+      linking-chain hit).  Distinguishes "absent" from "stored payload
+      happens to be -1".
+    * ``backend``  — the search stage that actually ran: ``pallas`` /
+      ``xla-windowed`` / ``numpy-oracle``, or ``device-oracle`` when the
+      engine's size-aware scheduler ran the full-array device search for
+      a small default-resolved batch (explicit backend requests are
+      forced and never relabeled).
+    * ``epoch``    — index epoch the answer was computed against.
+    * ``fallbacks`` — device-path queries re-resolved through the
+      compacted fallback buffer (0 on the host backend).
+    * ``oracle_escapes`` — whole-batch oracle escapes taken (compaction
+      buffer overflow; rare by construction).
+    """
+
+    payloads: np.ndarray
+    slots: np.ndarray
+    found: np.ndarray
+    backend: str
+    epoch: int
+    fallbacks: int = 0
+    oracle_escapes: int = 0
+
+    def __len__(self) -> int:
+        return int(self.payloads.shape[0])
+
+    def __array__(self, dtype=None):
+        # legacy interop: np.asarray(result) is the old payload array
+        a = self.payloads
+        return a if dtype is None else a.astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class IngestReport:
+    """Result of ``Index.ingest`` (one batch of (key, payload) pairs).
+
+    * ``n`` — batch size; ``slot`` / ``chain`` — §5.3 placement path
+      counts (gap slot vs linking chain); ``contested`` — keys that left
+      the vectorized fast path for re-resolution (the contested
+      remainder driving the refreeze policy).
+    * ``epoch`` — host epoch after the ingest.
+    * ``device`` — how the frozen device state was brought forward:
+      ``"none"`` (no device state materialized yet — it will freeze
+      lazily on the next device lookup), ``"delta"`` (in-place scatter of
+      changed slot/payload entries + CSR link tail appends), or
+      ``"refreeze"`` (full rebuild: a threshold crossed or a capacity /
+      dtype static changed).
+    * ``device_elems`` — elements scattered on the delta path.
+    * ``seconds`` — wall time of the whole ingest (host + device sync).
+    """
+
+    n: int
+    slot: int
+    chain: int
+    contested: int
+    epoch: int
+    device: str = "none"
+    device_elems: int = 0
+    seconds: float = 0.0
+
+    @property
+    def contested_fraction(self) -> float:
+        return self.contested / max(self.n, 1)
+
+
+def host_lookup_result(payloads: np.ndarray, slots: Optional[np.ndarray],
+                       found: Optional[np.ndarray], backend: str,
+                       epoch: int) -> LookupResult:
+    """Assemble a LookupResult, defaulting slots/found from payloads."""
+    payloads = np.asarray(payloads)
+    if found is None:
+        found = payloads >= 0
+    if slots is None:
+        slots = np.full(payloads.shape[0], -1, np.int64)
+    return LookupResult(payloads=payloads.astype(np.int64),
+                        slots=np.asarray(slots, np.int64),
+                        found=np.asarray(found, bool),
+                        backend=backend, epoch=epoch)

@@ -3,14 +3,18 @@
 A training job addresses samples by *key* (content hash / global shuffle
 id), not ordinal: restarts, online mixing, and streamed ingestion all
 need key -> storage-position resolution.  Classically that's a B-tree or
-a hash map per worker; here it is the paper's pluggable learned index:
+a hash map per worker; here it is the paper's pluggable learned index
+behind the epoch-versioned ``repro.core.Index`` handle:
 
  * build: PGM/FITing/RMI over the store's sorted sample keys —
    optionally **sampled** (§4) for fast worker startup on huge stores;
- * serve: batched lookups through the jnp/Pallas path (`use_device=True`)
-   or the numpy reference;
+ * serve: ``index.lookup`` — the handle routes big batches through the
+   jnp/Pallas device path and small ones through the numpy reference
+   (``prefer_device`` pins the device backend instead);
  * stream: new documents appended out-of-key-order land in **gap slots**
-   (§5.3 dynamic insert) — no index rebuild on ingestion.
+   (§5.3 dynamic insert via ``index.ingest``) — no index rebuild, and
+   the frozen device buffers are delta-updated in place (the old code
+   refroze the whole engine after every append).
 
 Misses raise KeyError (a miss means a corrupt manifest — fail loudly).
 """
@@ -18,52 +22,43 @@ Misses raise KeyError (a miss means a corrupt manifest — fail loudly).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import numpy as np
 
-from ..core import LearnedIndex
+from ..core import Index, IngestReport
 from .token_store import PackedTokenStore
 
 
 @dataclasses.dataclass
 class IndexedTokenDataset:
     store: PackedTokenStore
-    index: LearnedIndex
-    use_device: bool = False
-    _device_state: Optional[tuple] = None
+    index: Index
+    prefer_device: bool = False
 
     @staticmethod
     def build(store: PackedTokenStore, method: str = "pgm",
               sample_rate: float = 1.0, gap_rho: float = 0.15,
               use_device: bool = False, **mech_kwargs) -> "IndexedTokenDataset":
         keys = store.sample_keys.astype(np.float64)
-        index = LearnedIndex.build(
+        index = Index.build(
             keys, method=method, sample_rate=sample_rate, gap_rho=gap_rho,
             **mech_kwargs)
         ds = IndexedTokenDataset(store=store, index=index,
-                                 use_device=use_device)
+                                 prefer_device=use_device)
         if use_device:
-            ds._refresh_device()
+            index.refreeze()  # materialize the engine up front
         return ds
-
-    def _refresh_device(self):
-        from ..kernels import QueryEngine
-        self._device_state = QueryEngine.from_index(self.index)
 
     # ------------------------------------------------------------------
     def ordinals(self, sample_keys: np.ndarray) -> np.ndarray:
         """Batched key -> document ordinal (payload) resolution."""
         q = np.asarray(sample_keys, np.float64)
-        if self.use_device and self._device_state is not None:
-            out, *_ = self._device_state.lookup(q)
-            out = np.asarray(out)
-        else:
-            out = self.index.lookup(q)
-        if np.any(out < 0):
-            missing = q[out < 0][:5]
+        backend = "xla-windowed" if self.prefer_device else None
+        res = self.index.lookup(q, backend=backend)
+        if not bool(res.found.all()):
+            missing = q[~res.found][:5]
             raise KeyError(f"sample keys not in index (first 5): {missing}")
-        return out.astype(np.int64)
+        return np.asarray(res.payloads, np.int64)
 
     def batch(self, sample_keys: np.ndarray, seq_len: int) -> np.ndarray:
         """Fetch + pad/trim documents into an (n, seq_len) token matrix."""
@@ -76,20 +71,19 @@ class IndexedTokenDataset:
 
     # ------------------------------------------------------------------
     def ingest(self, doc: np.ndarray, sample_key: int) -> str:
-        """Streamed append: O(1) gap-slot insert, no retrain (paper §5.3)."""
-        ordinal = self.store.append(doc, sample_key)
-        path = self.index.insert(float(sample_key), int(ordinal))
-        if self.use_device:
-            self._refresh_device()  # device arrays are immutable snapshots
-        return path
+        """Streamed append: O(1) gap-slot insert, no retrain (paper §5.3).
 
-    def ingest_batch(self, docs, sample_keys) -> dict:
-        """Batched streamed append: one vectorized §5.3 ``insert_batch``
-        (and at most ONE device refreeze) for a whole shipment of
-        documents.  Returns the {'slot': n, 'chain': n} path counts."""
+        Returns the placement path ('slot'|'chain'); the device state —
+        if materialized — follows lazily via delta update on the next
+        device lookup.
+        """
+        ordinal = self.store.append(doc, sample_key)
+        return self.index.insert(float(sample_key), int(ordinal))
+
+    def ingest_batch(self, docs, sample_keys) -> IngestReport:
+        """Batched streamed append: one vectorized §5.3 ingest (and at
+        most ONE device delta-update/refreeze) for a whole shipment of
+        documents.  Returns the typed ``IngestReport``."""
         ordinals = self.store.append_batch(docs, sample_keys)
-        counts = self.index.insert_batch(
+        return self.index.ingest(
             np.asarray(sample_keys, np.float64), ordinals)
-        if self.use_device:
-            self._refresh_device()
-        return counts

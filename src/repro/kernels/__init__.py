@@ -4,56 +4,107 @@ learned-index lookup (predict + bounded rank-search over VMEM tiles).
 Modules
 -------
 lookup.py: pl.pallas_call + BlockSpec (+scalar-prefetch dynamic windows)
-ops.py:    the single-pass ``QueryEngine`` pipeline (sort-aware
-           scheduling, compacted fallback, fused CSR epilogue)
+ops.py:    the single-pass pipeline, ``QueryEngine``, and the epoch-
+           versioned freeze/delta-update entry points
 ref.py:    pure-jnp oracle the kernel is validated against + the shared
-           ``chain_hit_index`` fori_loop CSR scan.
+           ``chain_hit_index`` fori_loop CSR scan (hi/lo pair aware).
 
-QueryEngine API and the single-pass pipeline contract
------------------------------------------------------
-``QueryEngine(arrays, err_lo, err_hi)`` (or ``QueryEngine.from_index``)
-wraps a frozen ``IndexArrays`` and serves ``engine.lookup(queries,
-queries_sorted=...)`` -> ``(payloads, slot, found, fb_count)``.
+The ``Index`` handle contract (who calls what)
+----------------------------------------------
+``repro.core.Index`` owns this layer.  It freezes host state ONCE
+(``freeze_state`` -> ``QueryEngine`` + ``HostMirror``), then keeps the
+resident device buffers current across host mutations by **epoch**:
+
+* every host mutation bumps ``index.epoch``; the engine remembers the
+  epoch it was frozen at;
+* a stale device lookup first calls ``delta_update`` — it re-derives the
+  padded numpy images (cheap), diffs them against the host mirror, and
+  scatters ONLY changed elements (slot_key/payload entries for slot
+  placements, CSR link-table tails + shifted offsets for chain appends)
+  into the device buffers.  Shapes and jit statics are frozen with
+  headroom, so compiled executables survive;
+* ``delta_update`` declines — and the handle takes a full refreeze —
+  when a capacity/static no longer holds (link storage, max-chain
+  headroom, payload i32 width, key f32 width) or the diff would touch
+  most of the buffers.  Stale window bounds after a delta are SOUND:
+  they only raise the compacted-fallback rate, never wrong results.
+
+Backend capability table (mirrored by ``repro.core.BACKENDS``)
+--------------------------------------------------------------
+=============  ==============  ===========  ==============================
+engine name    handle name     wide keys    search stage
+=============  ==============  ===========  ==============================
+``pallas``     pallas          no           TPU kernel, VMEM window tiles
+                                            (``interpret=True`` on CPU)
+``xla``        xla-windowed    yes          fixed-trip windowed bisect /
+                                            loop-free flat rank count
+``oracle``     (device oracle) yes          full-array searchsorted /
+                                            pair bisect
+(host numpy)   numpy-oracle    yes (f64)    GappedArray.lookup_batch
+=============  ==============  ===========  ==============================
+
+Wide keys: beyond f32 exactness (2^24) keys ride an f32 hi/lo pair
+(``split_key_pair``) — lexicographic pair order == numeric order, exact
+for integer keys < 2^48.  The Pallas kernel is narrow-only; the registry
+routes wide indexes to the XLA backend.
+
+Single-pass pipeline contract
+-----------------------------
+``engine.lookup(queries, queries_sorted=..., backend=...)`` returns
+``(payloads, slot, found, fb_count)`` — ``found`` covers first-level AND
+linking-chain hits (the ``LookupResult.found`` mask).
 
 1. **Single pass**: each query is resolved by exactly one bounded window
-   search (Pallas kernel on TPU; XLA fixed-trip windowed bisect
-   elsewhere).  The full-array oracle is evaluated ONLY over the
-   compacted fallback buffer — capacity ``max(q_tile, ~2% of Q)``,
-   shape-static — never over the whole batch.  If the buffer overflows
-   (more flagged queries than capacity), a host-side escape hatch
-   re-dispatches the batch to the oracle backend; this is counted in
-   ``engine.stats["oracle_escapes"]`` and is rare by construction.
-2. **Sort-aware scheduling**: the Pallas path needs ascending queries
-   for its tile windows; callers that already issue sorted batches
-   (e.g. serving page lookups) pass ``queries_sorted=True`` and skip the
-   argsort + inverse-permutation round trip.  The XLA and oracle
-   backends are permutation-free.
+   search.  The full-array oracle is evaluated ONLY over the compacted
+   fallback buffer — capacity ``max(q_tile, ~2% of Q)``, shape-static —
+   never over the whole batch.  If the buffer overflows, a host-side
+   escape hatch re-dispatches the batch to the oracle backend (counted
+   in ``engine.stats["oracle_escapes"]``; rare by construction).
+2. **Sort-aware scheduling**: the Pallas path needs ascending queries;
+   callers that already issue sorted batches pass ``queries_sorted=True``
+   and skip the argsort + inverse-permutation round trip.  The XLA and
+   oracle backends are permutation-free.
 3. **Shape buckets**: query batches are padded (+inf tail — sorted stays
-   sorted) up to power-of-two buckets so each bucket compiles once; the
-   serving engine stops re-tracing per batch.
+   sorted) up to power-of-two buckets so each bucket compiles once.
 4. **Fused epilogue**: slot->payload gather and the CSR linking-array
-   scan run in one stage (in the sorted domain on the Pallas path, so a
-   single unsort gather finishes the batch).  The chain scan is a rolled
-   ``lax.fori_loop`` — one graph copy regardless of ``max_chain``.
+   scan run in one stage; the chain scan is a rolled ``lax.fori_loop``
+   bisect — one graph copy regardless of ``max_chain``.
 5. **Wide payloads**: int64 payloads are carried as an i32 hi/lo pair
-   and reconstructed in the epilogue (``IndexArrays.wide``); narrow
-   payloads pay nothing.
+   and reconstructed in the epilogue (``IndexArrays.wide``).
+
+Migration notes
+---------------
+``QueryEngine.from_index(idx)`` + manual refreeze-after-mutation is the
+legacy pattern; prefer holding a ``repro.core.Index`` and calling
+``index.lookup`` / ``index.ingest`` — the handle schedules freezes and
+delta updates for you and returns typed results.  ``from_learned_index``
+remains the raw freeze (no headroom, no mirror) for kernel tests and
+benchmarks.
 """
 
-from .ops import (IndexArrays, QueryEngine, batched_lookup,
-                  from_learned_index)
+from .ops import (HostMirror, IndexArrays, QueryEngine, batched_lookup,
+                  delta_update, freeze_state, from_learned_index,
+                  keys_need_pair, keys_pair_exact, pair_alias_free,
+                  split_key_pair)
 from .ops_gap import gap_positions_device, gap_positions_oracle
 from .ref import chain_hit_index, lookup_ref, predict_ref, resolve_chains
 
 __all__ = [
+    "HostMirror",
     "IndexArrays",
     "QueryEngine",
     "batched_lookup",
     "chain_hit_index",
+    "delta_update",
+    "freeze_state",
     "from_learned_index",
     "gap_positions_device",
     "gap_positions_oracle",
+    "keys_need_pair",
+    "keys_pair_exact",
     "lookup_ref",
+    "pair_alias_free",
     "predict_ref",
     "resolve_chains",
+    "split_key_pair",
 ]

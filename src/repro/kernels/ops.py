@@ -1,8 +1,7 @@
-"""Single-pass device query engine — the public device API.
+"""Single-pass device query engine — the device half of ``repro.core.Index``.
 
-``IndexArrays`` freezes a host-side ``LearnedIndex`` / ``GappedArray``
-into f32/i32 device arrays; ``batched_lookup`` / ``QueryEngine`` run the
-full pipeline:
+``IndexArrays`` freezes the host state of an index into f32/i32 device
+arrays; ``batched_lookup`` / ``QueryEngine`` run the full pipeline:
 
     [sort queries]* -> bounded window search (Pallas kernel on TPU,
     XLA fixed-trip windowed bisect on CPU/GPU)
@@ -20,6 +19,29 @@ compaction buffer (capacity ``max(q_tile, ~2% of Q)``) overflows, in
 which case a host-side escape hatch re-dispatches the batch to the
 oracle backend (rare by construction; counted in ``QueryEngine.stats``
 and asserted in tests/test_query_engine.py).
+
+Epoch-versioned device state (``repro.core.Index``)
+---------------------------------------------------
+``freeze_state`` builds an engine plus a **host mirror** of the padded
+device buffers; after host mutations, ``delta_update`` re-derives the
+padded arrays (cheap numpy), diffs them against the mirror, and
+scatters ONLY the changed elements into the resident device buffers —
+slot_key/payload entries for slot placements, CSR link-table tail
+regions for chain appends.  Shape/dtype statics (link capacity,
+max-chain headroom, payload width, key width) are frozen with headroom;
+when exceeded — or when the diff would touch most of the arrays —
+``delta_update`` declines and the handle takes a full refreeze.
+
+Wide keys (f32 hi/lo pairs)
+---------------------------
+Keys that exceed f32 exactness (>2^24 integer magnitudes, e.g. paged-KV
+composite keys) are carried as an (hi, lo) f32 pair with
+``lo = key - f64(hi)``; lexicographic pair order equals numeric order
+and the representation is exact for integer keys below 2^48.  The XLA
+windowed and oracle backends compare pairs end to end (search, window
+edges, compacted fallback, CSR chain bisect); the Pallas kernel is
+narrow-key only — the capability registry (repro.core.handle) routes
+wide-key lookups to ``xla-windowed``.
 
 Everything is shape-static and jit-friendly; ``QueryEngine`` buckets
 query shapes so the serving path stops re-tracing per batch.
@@ -41,7 +63,9 @@ from . import ref as _ref
 from .lookup import lookup_kernel_call
 
 __all__ = ["IndexArrays", "QueryEngine", "batched_lookup",
-           "from_learned_index"]
+           "from_learned_index", "freeze_state", "delta_update",
+           "HostMirror", "keys_need_pair", "keys_pair_exact",
+           "split_key_pair"]
 
 _I32_MIN = np.iinfo(np.int32).min
 _I32_MAX = np.iinfo(np.int32).max
@@ -56,27 +80,89 @@ def _pad_pow(a: np.ndarray, multiple: int, fill) -> np.ndarray:
     return np.concatenate([a, np.full(m - n, fill, a.dtype)])
 
 
+def keys_need_pair(keys) -> bool:
+    """True when the keys exceed f32 exactness (need the hi/lo pair)."""
+    k = np.asarray(keys, np.float64)
+    f = k[np.isfinite(k)]
+    if f.size == 0:
+        return False
+    return not bool(np.all(f.astype(np.float32).astype(np.float64) == f))
+
+
+def keys_pair_exact(keys) -> bool:
+    """True when every key is represented EXACTLY by its f32 hi/lo pair
+    (hi + lo == key in f64 — holds e.g. for all integer keys < 2^48).
+    An all-exact key set maps injectively to pairs, so the device search
+    is exact by construction."""
+    k = np.asarray(keys, np.float64)
+    f = k[np.isfinite(k)]
+    if f.size == 0:
+        return True
+    hi, lo = split_key_pair(f)
+    return bool(np.all(hi.astype(np.float64) + lo.astype(np.float64) == f))
+
+
+def pair_alias_free(sorted_keys) -> bool:
+    """True when no two DISTINCT keys of this sorted array share an f32
+    hi/lo pair.  The weaker (and sufficient) device-search requirement
+    for key sets that are not per-key pair-exact (continuous f64 keys):
+    the pair compare then never conflates two stored keys — the residual
+    hazard is only an absent query within pair resolution (~2^-48
+    relative) of a stored key, the same hazard class the plain-f32 path
+    always had at 2^-24."""
+    k = np.asarray(sorted_keys, np.float64)
+    f = k[np.isfinite(k)]
+    if f.size < 2:
+        return True
+    hi, lo = split_key_pair(f)
+    same_pair = (hi[1:] == hi[:-1]) & (lo[1:] == lo[:-1])
+    distinct = f[1:] != f[:-1]
+    return not bool(np.any(same_pair & distinct))
+
+
+def split_key_pair(keys):
+    """(hi, lo) f32 pair with ``lo = key - f64(hi)``.
+
+    Lexicographic (hi, lo) order equals numeric order (f32 rounding is
+    monotone); exact for integer keys < 2^48 (hi is then a multiple of a
+    power of two and the residual fits 24 mantissa bits) — the ROADMAP
+    "f64 device keys" item.  Non-finite keys get lo = 0.
+    """
+    k = np.asarray(keys, np.float64)
+    hi = k.astype(np.float32)
+    with np.errstate(invalid="ignore"):
+        lo = k - hi.astype(np.float64)
+    lo = np.where(np.isfinite(k), lo, 0.0)
+    return hi, lo.astype(np.float32)
+
+
 @dataclasses.dataclass(frozen=True)
 class IndexArrays:
     """Frozen device-side index state (all f32/i32, shape-static).
 
     64-bit payloads are carried as a hi/lo i32 pair (``wide=True``);
-    narrow payloads keep the hi arrays zero-length.
+    keys beyond f32 exactness as an f32 hi/lo pair (``key_wide=True``).
+    Narrow builds keep the corresponding ``*_lo`` / ``*_hi`` arrays
+    zero-length, so they cost nothing.
     """
 
-    seg_first_key: jax.Array   # (Kpad,) f32, +inf padded
-    seg_slope: jax.Array       # (Kpad,) f32
-    seg_icept: jax.Array       # (Kpad,) f32
-    slot_key: jax.Array        # (Mpad,) f32, +inf padded
-    payload: jax.Array         # (Mpad,) i32 — low 32 payload bits
-    payload_hi: jax.Array      # (Mpad,) i32 when wide else (0,)
-    link_offsets: jax.Array    # (Mpad+1,) i32
-    link_keys: jax.Array       # (Lpad,) f32
-    link_payloads: jax.Array   # (Lpad,) i32 — low 32 payload bits
-    link_payload_hi: jax.Array  # (Lpad,) i32 when wide else (0,)
-    n_slots: int               # true (unpadded) slot count
+    seg_first_key: jax.Array     # (Kpad,) f32, +inf padded
+    seg_first_key_lo: jax.Array  # (Kpad,) f32 when key_wide else (0,)
+    seg_slope: jax.Array         # (Kpad,) f32
+    seg_icept: jax.Array         # (Kpad,) f32
+    slot_key: jax.Array          # (Mpad,) f32, +inf padded
+    slot_key_lo: jax.Array       # (Mpad,) f32 when key_wide else (0,)
+    payload: jax.Array           # (Mpad,) i32 — low 32 payload bits
+    payload_hi: jax.Array        # (Mpad,) i32 when wide else (0,)
+    link_offsets: jax.Array      # (Mpad+1,) i32
+    link_keys: jax.Array         # (Lpad,) f32
+    link_keys_lo: jax.Array      # (Lpad,) f32 when key_wide else (0,)
+    link_payloads: jax.Array     # (Lpad,) i32 — low 32 payload bits
+    link_payload_hi: jax.Array   # (Lpad,) i32 when wide else (0,)
+    n_slots: int                 # true (unpadded) slot count
     max_chain: int
-    wide: bool                 # payloads need the hi/lo i64 reconstruction
+    wide: bool                   # payloads need the hi/lo i64 reconstruction
+    key_wide: bool               # keys carried as an f32 hi/lo pair
 
 
 def _split_i64(a: np.ndarray):
@@ -85,78 +171,198 @@ def _split_i64(a: np.ndarray):
     return a.astype(np.int32), (a >> 32).astype(np.int32)
 
 
-def from_learned_index(index, *, w_tile: int = 2048, seg_chunk: int = 512,
-                       max_chain: Optional[int] = None) -> IndexArrays:
-    """Freeze a ``repro.core.LearnedIndex`` for the device query path.
+class _CapacityError(Exception):
+    """Frozen capacity/static exceeded — delta declined, refreeze."""
 
-    Payloads wider than int32 are carried as a hi/lo i32 pair and
-    reconstructed to i64 in the epilogue (live payloads only — the
-    unoccupied-slot marker is never read because carried keys route
-    equal-key runs to their occupied tail slot).
+
+_NP_FIELDS = ("seg_first_key", "seg_first_key_lo", "seg_slope", "seg_icept",
+              "slot_key", "slot_key_lo", "payload", "payload_hi",
+              "link_offsets", "link_keys", "link_keys_lo", "link_payloads",
+              "link_payload_hi")
+
+# fields a host mutation can change (mech/seg tables never move)
+_DELTA_FIELDS = ("slot_key", "slot_key_lo", "payload", "payload_hi",
+                 "link_offsets", "link_keys", "link_keys_lo",
+                 "link_payloads", "link_payload_hi")
+
+
+def _freeze_numpy(index, *, w_tile: int = 2048, seg_chunk: int = 512,
+                  max_chain: Optional[int] = None,
+                  link_cap: Optional[int] = None,
+                  force_wide: Optional[bool] = None,
+                  force_key_wide: Optional[bool] = None):
+    """Derive the padded numpy device images from host state.
+
+    Raises ``_CapacityError`` when a forced static (chain bound, link
+    capacity, payload/key width) cannot hold the current state.
+    Returns ``(arrays: dict[str, np.ndarray], statics: dict)``.
     """
     plm = getattr(index.mech, "plm", None)
     if plm is None:
         raise ValueError("mechanism does not export a piecewise linear model")
     if index.gapped is not None:
         ga = index.gapped
-        slot_key = ga.slot_key
-        payload = ga.payload
+        slot_key = np.asarray(ga.slot_key, np.float64)
+        payload = np.asarray(ga.payload, np.int64)
         offsets, lkeys, lpay = ga.export_csr_links()
-        chain = max((len(v) for v in ga.links.values()), default=0)
-        live = np.asarray(ga.payload)[np.asarray(ga.occupied, bool)]
+        chain = ga.links.max_chain
+        live = payload[np.asarray(ga.occupied, bool)]
     else:
-        slot_key = index.keys
-        payload = np.arange(index.keys.shape[0], dtype=np.int64)
-        offsets = np.zeros(index.keys.shape[0] + 1, np.int64)
+        slot_key = np.asarray(index.keys, np.float64)
+        payload = np.arange(slot_key.shape[0], dtype=np.int64)
+        offsets = np.zeros(slot_key.shape[0] + 1, np.int64)
         lkeys = np.zeros(0, np.float64)
         lpay = np.zeros(0, np.int64)
         chain = 0
         live = payload
     if max_chain is None:
         max_chain = int(chain)
+    elif chain > max_chain:
+        raise _CapacityError(f"max_chain {chain} > frozen {max_chain}")
 
     wide = bool(
         (live.size and (live.min() < _I32_MIN or live.max() > _I32_MAX))
         or (lpay.size and (lpay.min() < _I32_MIN or lpay.max() > _I32_MAX))
     )
+    if force_wide is not None:
+        if wide and not force_wide:
+            raise _CapacityError("payloads outgrew the narrow i32 freeze")
+        wide = force_wide
+    key_wide = keys_need_pair(slot_key) or keys_need_pair(lkeys)
+    if force_key_wide is not None:
+        if key_wide and not force_key_wide:
+            raise _CapacityError("keys outgrew the narrow f32 freeze")
+        key_wide = force_key_wide
 
     n_slots = slot_key.shape[0]
-    skp = _pad_pow(np.asarray(slot_key, np.float32), w_tile, np.float32(np.inf))
+    sk_hi, sk_lo = split_key_pair(slot_key)
+    skp = _pad_pow(sk_hi, w_tile, np.float32(np.inf))
     # one extra +inf block so index_map's (b, b+1) pair is always valid
     skp = np.concatenate([skp, np.full(w_tile, np.inf, np.float32)])
+    sklp = np.concatenate(
+        [_pad_pow(sk_lo, w_tile, np.float32(0)),
+         np.zeros(w_tile, np.float32)])
     pay_lo, pay_hi = _split_i64(payload)
     m_extra = skp.shape[0] - pay_lo.shape[0]
     pay_lo = np.concatenate([pay_lo, np.full(m_extra, -1, np.int32)])
     pay_hi = np.concatenate([pay_hi, np.full(m_extra, -1, np.int32)])
+
+    if link_cap is None:
+        link_cap = int(lkeys.shape[0])
+    elif lkeys.shape[0] > link_cap:
+        raise _CapacityError(
+            f"links {lkeys.shape[0]} > frozen capacity {link_cap}")
+    lk_hi, lk_lo = split_key_pair(lkeys)
+    l_extra = link_cap - lkeys.shape[0]
+    lk_hi = np.concatenate([lk_hi, np.full(l_extra, np.inf, np.float32)])
+    lk_lo = np.concatenate([lk_lo, np.zeros(l_extra, np.float32)])
     lpay_lo, lpay_hi = _split_i64(lpay)
+    lpay_lo = np.concatenate([lpay_lo, np.full(l_extra, -1, np.int32)])
+    lpay_hi = np.concatenate([lpay_hi, np.full(l_extra, -1, np.int32)])
     offp = np.concatenate(
         [offsets, np.full(skp.shape[0] + 1 - offsets.shape[0], offsets[-1])]
     ).astype(np.int32)
-    none32 = np.zeros(0, np.int32)
+    none32f = np.zeros(0, np.float32)
+    none32i = np.zeros(0, np.int32)
 
+    sfk = np.asarray(plm.seg_first_key, np.float64)
+    sfk_hi, sfk_lo = split_key_pair(sfk)
+    arrays = {
+        "seg_first_key": _pad_pow(sfk_hi, seg_chunk, np.float32(np.inf)),
+        "seg_first_key_lo": (
+            np.concatenate([sfk_lo,
+                            np.zeros(_pad_pow(sfk_hi, seg_chunk,
+                                              np.float32(np.inf)).shape[0]
+                                     - sfk_lo.shape[0], np.float32)])
+            if key_wide else none32f),
+        "seg_slope": _pad_pow(np.asarray(plm.slope, np.float32), seg_chunk,
+                              np.float32(0)),
+        "seg_icept": _pad_pow(np.asarray(plm.icept, np.float32), seg_chunk,
+                              np.float32(n_slots - 1)),
+        "slot_key": skp,
+        "slot_key_lo": sklp if key_wide else none32f,
+        "payload": pay_lo,
+        "payload_hi": pay_hi if wide else none32i,
+        "link_offsets": offp,
+        "link_keys": lk_hi,
+        "link_keys_lo": lk_lo if key_wide else none32f,
+        "link_payloads": lpay_lo,
+        "link_payload_hi": lpay_hi if wide else none32i,
+    }
+    statics = {"n_slots": n_slots, "max_chain": int(max_chain),
+               "wide": wide, "key_wide": key_wide, "w_tile": w_tile,
+               "seg_chunk": seg_chunk, "link_cap": int(link_cap)}
+    return arrays, statics
+
+
+def _to_device(arrays: dict, statics: dict) -> IndexArrays:
     return IndexArrays(
-        seg_first_key=jnp.asarray(
-            _pad_pow(np.asarray(plm.seg_first_key, np.float32), seg_chunk,
-                     np.float32(np.inf))
-        ),
-        seg_slope=jnp.asarray(
-            _pad_pow(np.asarray(plm.slope, np.float32), seg_chunk, np.float32(0))
-        ),
-        seg_icept=jnp.asarray(
-            _pad_pow(np.asarray(plm.icept, np.float32), seg_chunk,
-                     np.float32(n_slots - 1))
-        ),
-        slot_key=jnp.asarray(skp),
-        payload=jnp.asarray(pay_lo),
-        payload_hi=jnp.asarray(pay_hi if wide else none32),
-        link_offsets=jnp.asarray(offp),
-        link_keys=jnp.asarray(lkeys.astype(np.float32)),
-        link_payloads=jnp.asarray(lpay_lo),
-        link_payload_hi=jnp.asarray(lpay_hi if wide else none32),
-        n_slots=n_slots,
-        max_chain=max_chain,
-        wide=wide,
+        **{f: jnp.asarray(arrays[f]) for f in _NP_FIELDS},
+        n_slots=statics["n_slots"], max_chain=statics["max_chain"],
+        wide=statics["wide"], key_wide=statics["key_wide"],
     )
+
+
+def from_learned_index(index, *, w_tile: int = 2048, seg_chunk: int = 512,
+                       max_chain: Optional[int] = None) -> IndexArrays:
+    """Freeze an index (``repro.core.Index`` or the legacy
+    ``LearnedIndex`` shim) for the device query path.
+
+    Payloads wider than int32 are carried as a hi/lo i32 pair and
+    reconstructed to i64 in the epilogue (live payloads only — the
+    unoccupied-slot marker is never read because carried keys route
+    equal-key runs to their occupied tail slot).  Keys beyond f32
+    exactness are carried as an f32 hi/lo pair (``key_wide``).
+    """
+    arrays, statics = _freeze_numpy(index, w_tile=w_tile,
+                                    seg_chunk=seg_chunk, max_chain=max_chain)
+    return _to_device(arrays, statics)
+
+
+# ---------------------------------------------------------------------------
+# pair-comparison helpers (wide keys)
+# ---------------------------------------------------------------------------
+
+
+def _ple(kh, kl, qh, ql):
+    """Lexicographic (hi, lo) <=, elementwise."""
+    return (kh < qh) | ((kh == qh) & (kl <= ql))
+
+
+def _peq(kh, kl, qh, ql):
+    return (kh == qh) & (kl == ql)
+
+
+def _pair_bisect(kh, kl, qh, ql, lo0, hi0, trips):
+    """Rightmost index in [lo0, hi0] with pair(key) <= pair(q); branchless
+    fixed-trip bisect (lo0 may start at -1)."""
+    m_max = kh.shape[0] - 1
+
+    def body(_, carry):
+        lo, hi = carry
+        upd = lo < hi
+        mid = (lo + hi + 1) >> 1
+        midc = jnp.clip(mid, 0, m_max)
+        go = _ple(jnp.take(kh, midc), jnp.take(kl, midc), qh, ql)
+        lo = jnp.where(upd & go, mid, lo)
+        hi = jnp.where(upd, jnp.where(go, hi, mid - 1), hi)
+        return lo, hi
+
+    lo, _ = jax.lax.fori_loop(0, trips, body, (lo0, hi0))
+    return lo
+
+
+def _pair_oracle(qh, ql, slot_key, slot_key_lo):
+    """Full-array pair search (the wide-key oracle): slot + found."""
+    m_pad = slot_key.shape[0]
+    trips = int(np.ceil(np.log2(max(m_pad, 2)))) + 1
+    lo0 = jnp.full(qh.shape, -1, jnp.int32)
+    hi0 = jnp.full(qh.shape, m_pad - 1, jnp.int32)
+    slot = _pair_bisect(slot_key, slot_key_lo, qh, ql, lo0, hi0, trips)
+    safe = jnp.maximum(slot, 0)
+    found = (slot >= 0) & _peq(jnp.take(slot_key, safe),
+                               jnp.take(slot_key_lo, safe), qh, ql)
+    return slot.astype(jnp.int32), found
 
 
 # ---------------------------------------------------------------------------
@@ -164,34 +370,41 @@ def from_learned_index(index, *, w_tile: int = 2048, seg_chunk: int = 512,
 # ---------------------------------------------------------------------------
 
 
-def _epilogue(queries, slot, found, payload, payload_hi,
-              link_offsets, link_keys, link_payloads, link_payload_hi,
-              max_chain, wide):
+def _epilogue(queries, queries_lo, slot, found, payload, payload_hi,
+              link_offsets, link_keys, link_keys_lo, link_payloads,
+              link_payload_hi, max_chain, wide, key_wide):
     """Fused slot->payload gather + CSR chain scan (hi/lo aware).
 
-    Returns ``(lo32, hi32)``; ``hi32`` is zero-length when narrow.  The
-    i64 reconstruction happens on the host (x64 may be disabled in jax).
+    Returns ``(lo32, hi32, resolved)``; ``hi32`` is zero-length when
+    narrow, ``resolved`` marks keys present in the first level OR a
+    chain (the typed-result found mask).  The i64 reconstruction happens
+    on the host (x64 may be disabled in jax).
     """
     safe_slot = jnp.clip(slot, 0, payload.shape[0] - 1)
-    hit = _ref.chain_hit_index(queries, slot, found, link_offsets,
-                               link_keys, max_chain)
+    hit = _ref.chain_hit_index(
+        queries, slot, found, link_offsets, link_keys, max_chain,
+        queries_lo=queries_lo if key_wide else None,
+        link_keys_lo=link_keys_lo if key_wide else None)
     has_links = link_keys.shape[0] > 0 and max_chain > 0
     out = jnp.where(found, jnp.take(payload, safe_slot), jnp.int32(-1))
+    resolved = found
     if has_links:
         out = jnp.where(hit >= 0,
                         jnp.take(link_payloads, jnp.maximum(hit, 0)), out)
+        resolved = found | (hit >= 0)
     if not wide:
-        return out, jnp.zeros((0,), jnp.int32)
+        return out, jnp.zeros((0,), jnp.int32), resolved
     out_hi = jnp.where(found, jnp.take(payload_hi, safe_slot), jnp.int32(-1))
     if has_links:
         out_hi = jnp.where(
             hit >= 0, jnp.take(link_payload_hi, jnp.maximum(hit, 0)), out_hi)
-    return out, out_hi
+    return out, out_hi, resolved
 
 
-def _xla_window_lookup(queries, seg_first_key, seg_slope, seg_icept,
-                       err_lo_by_seg, err_hi_by_seg, slot_key, n_slots,
-                       trips, flat_w, radix_table=None, radix_scale=None):
+def _xla_window_lookup(queries, queries_lo, seg_first_key, seg_first_key_lo,
+                       seg_slope, seg_icept, err_lo_by_seg, err_hi_by_seg,
+                       slot_key, slot_key_lo, n_slots, trips, flat_w,
+                       key_wide, radix_table=None, radix_scale=None):
     """XLA analog of the Pallas kernel: per-query bounded window search.
 
     The mechanism's error bounds give each query a slot window.  Narrow
@@ -208,7 +421,9 @@ def _xla_window_lookup(queries, seg_first_key, seg_slope, seg_icept,
     The routing may be off by a segment near bucket boundaries — that is
     SOUND: a mid-window rank is globally correct whatever the window
     placement (slot_key is totally ordered), and edge ranks raise the
-    fallback flag.
+    fallback flag.  With ``key_wide`` every key compare is an f32 hi/lo
+    pair compare, and predictions subtract the segment anchor in pair
+    arithmetic so large-magnitude keys keep their relative precision.
     """
     m_pad = slot_key.shape[0]
     # fold the error bounds into per-segment intercepts (K-sized ops are
@@ -217,15 +432,32 @@ def _xla_window_lookup(queries, seg_first_key, seg_slope, seg_icept,
     icept_hi = seg_icept + err_hi_by_seg + 1.0
     if radix_table is not None:
         r = radix_table.shape[0]
-        b = jnp.clip((queries - radix_scale[0]) * radix_scale[1],
-                     0.0, float(r - 1)).astype(jnp.int32)
+        if key_wide:
+            x = (queries - radix_scale[0]) + (queries_lo - radix_scale[1])
+        else:
+            x = queries - radix_scale[0]
+        b = jnp.clip(x * radix_scale[2], 0.0, float(r - 1)).astype(jnp.int32)
         seg = jnp.take(radix_table, b, mode="clip")
+    elif key_wide:
+        k_pad = seg_first_key.shape[0]
+        seg_trips = int(np.ceil(np.log2(max(k_pad, 2)))) + 1
+        seg = _pair_bisect(
+            seg_first_key, seg_first_key_lo, queries, queries_lo,
+            jnp.zeros(queries.shape, jnp.int32),
+            jnp.full(queries.shape, k_pad - 1, jnp.int32), seg_trips)
+        seg = jnp.clip(seg, 0, k_pad - 1)
     else:
         seg = jnp.clip(
             jnp.searchsorted(seg_first_key, queries, side="right") - 1,
             0, seg_first_key.shape[0] - 1,
         )
-    dx = queries - jnp.take(seg_first_key, seg)
+    if key_wide:
+        # pair-anchored delta: (qh - fkh) is (near-)exact by Sterbenz for
+        # same-segment magnitudes; ql - fkl restores the f64 residual
+        dx = ((queries - jnp.take(seg_first_key, seg))
+              + (queries_lo - jnp.take(seg_first_key_lo, seg)))
+    else:
+        dx = queries - jnp.take(seg_first_key, seg)
     sl = jnp.take(seg_slope, seg)
     lo0 = jnp.clip(jnp.floor(sl * dx + jnp.take(icept_lo, seg)),
                    0.0, float(n_slots - 1)).astype(jnp.int32)
@@ -242,39 +474,61 @@ def _xla_window_lookup(queries, seg_first_key, seg_slope, seg_icept,
         offs = jnp.arange(width, dtype=jnp.int32)
         idx = jnp.minimum(lo0[:, None] + offs[None, :], m_pad - 1)
         ks = jnp.take(slot_key, idx)
-        le = ks <= queries[:, None]
+        if key_wide:
+            ksl = jnp.take(slot_key_lo, idx)
+            le = _ple(ks, ksl, queries[:, None], queries_lo[:, None])
+            eq = _peq(ks, ksl, queries[:, None], queries_lo[:, None])
+        else:
+            le = ks <= queries[:, None]
+            eq = ks == queries[:, None]
         rank = jnp.sum(le.astype(jnp.int32), axis=1)
         slot = lo0 - 1 + rank
-        found = (slot >= 0) & jnp.any(ks == queries[:, None], axis=1)
+        found = (slot >= 0) & jnp.any(eq, axis=1)
         fb_lo = (rank == 0) & (lo0 > 0)
-        fb_hi = (rank == width) & (
-            jnp.take(slot_key, jnp.minimum(lo0 + width, m_pad - 1))
-            <= queries
-        )
+        edge = jnp.minimum(lo0 + width, m_pad - 1)
+        if key_wide:
+            fb_hi = (rank == width) & _ple(
+                jnp.take(slot_key, edge), jnp.take(slot_key_lo, edge),
+                queries, queries_lo)
+        else:
+            fb_hi = (rank == width) & (jnp.take(slot_key, edge) <= queries)
         fb = (fb_lo | fb_hi) & jnp.isfinite(queries)
         return slot, found, fb
 
-    def body(_, carry):
-        lo, hi = carry
-        upd = lo < hi
-        mid = (lo + hi + 1) >> 1
-        go = jnp.take(slot_key, jnp.clip(mid, 0, m_pad - 1)) <= queries
-        lo = jnp.where(upd & go, mid, lo)
-        hi = jnp.where(upd, jnp.where(go, hi, mid - 1), hi)
-        return lo, hi
+    if key_wide:
+        slot = _pair_bisect(slot_key, slot_key_lo, queries, queries_lo,
+                            lo0 - 1, hi0, trips)
+        safe = jnp.clip(slot, 0, m_pad - 1)
+        found = (slot >= 0) & _peq(jnp.take(slot_key, safe),
+                                   jnp.take(slot_key_lo, safe),
+                                   queries, queries_lo)
+        edge = jnp.minimum(hi0 + 1, m_pad - 1)
+        fb_hi = (slot == hi0) & _ple(jnp.take(slot_key, edge),
+                                     jnp.take(slot_key_lo, edge),
+                                     queries, queries_lo)
+    else:
+        def body(_, carry):
+            lo, hi = carry
+            upd = lo < hi
+            mid = (lo + hi + 1) >> 1
+            go = jnp.take(slot_key, jnp.clip(mid, 0, m_pad - 1)) <= queries
+            lo = jnp.where(upd & go, mid, lo)
+            hi = jnp.where(upd, jnp.where(go, hi, mid - 1), hi)
+            return lo, hi
 
-    slot, _ = jax.lax.fori_loop(0, trips, body, (lo0 - 1, hi0))
-    safe = jnp.clip(slot, 0, m_pad - 1)
-    found = (slot >= 0) & (jnp.take(slot_key, safe) == queries)
+        slot, _ = jax.lax.fori_loop(0, trips, body, (lo0 - 1, hi0))
+        safe = jnp.clip(slot, 0, m_pad - 1)
+        found = (slot >= 0) & (jnp.take(slot_key, safe) == queries)
+        fb_hi = (slot == hi0) & (
+            jnp.take(slot_key, jnp.minimum(hi0 + 1, m_pad - 1)) <= queries
+        )
     fb_lo = (slot == lo0 - 1) & (lo0 > 0)
-    fb_hi = (slot == hi0) & (
-        jnp.take(slot_key, jnp.minimum(hi0 + 1, m_pad - 1)) <= queries
-    )
     fb = (fb_lo | fb_hi) & jnp.isfinite(queries)
     return slot, found, fb
 
 
-def _compact_fallback(queries, slot, found, fb, slot_key, fb_cap):
+def _compact_fallback(queries, queries_lo, slot, found, fb, slot_key,
+                      slot_key_lo, fb_cap, key_wide):
     """Re-resolve ONLY the fb-flagged queries via a fixed-capacity buffer.
 
     Gathers the flagged queries into a (fb_cap,)-shaped compacted batch
@@ -295,10 +549,15 @@ def _compact_fallback(queries, slot, found, fb, slot_key, fb_cap):
         idx = jnp.full((fb_cap + 1,), n_q, jnp.int32).at[dst].set(
             jnp.arange(n_q, dtype=jnp.int32))[:fb_cap]
         q_fb = jnp.take(queries, idx, mode="clip")
-        slot_fb = jnp.searchsorted(slot_key, q_fb, side="right").astype(
-            jnp.int32) - 1
-        found_fb = (slot_fb >= 0) & (
-            jnp.take(slot_key, jnp.maximum(slot_fb, 0)) == q_fb)
+        if key_wide:
+            ql_fb = jnp.take(queries_lo, idx, mode="clip")
+            slot_fb, found_fb = _pair_oracle(q_fb, ql_fb, slot_key,
+                                             slot_key_lo)
+        else:
+            slot_fb = jnp.searchsorted(slot_key, q_fb,
+                                       side="right").astype(jnp.int32) - 1
+            found_fb = (slot_fb >= 0) & (
+                jnp.take(slot_key, jnp.maximum(slot_fb, 0)) == q_fb)
         return (slot.at[idx].set(slot_fb, mode="drop"),
                 found.at[idx].set(found_fb, mode="drop"))
 
@@ -312,49 +571,63 @@ def _compact_fallback(queries, slot, found, fb, slot_key, fb_cap):
     static_argnames=("q_tile", "w_tile", "seg_chunk", "win_chunk",
                      "max_chain", "n_slots", "interpret", "backend",
                      "assume_sorted", "fb_cap", "trips", "flat_w",
-                     "radix", "wide"),
+                     "radix", "wide", "key_wide"),
 )
 def _pipeline(
-    queries,
-    seg_first_key, seg_slope, seg_icept, err_lo_by_seg, err_hi_by_seg,
-    slot_key, payload, payload_hi, link_offsets, link_keys, link_payloads,
-    link_payload_hi, radix_table, radix_scale,
+    queries, queries_lo,
+    seg_first_key, seg_first_key_lo, seg_slope, seg_icept,
+    err_lo_by_seg, err_hi_by_seg,
+    slot_key, slot_key_lo, payload, payload_hi,
+    link_offsets, link_keys, link_keys_lo, link_payloads, link_payload_hi,
+    radix_table, radix_scale,
     *,
     q_tile, w_tile, seg_chunk, win_chunk, max_chain, n_slots,
     interpret, backend, assume_sorted, fb_cap, trips, flat_w, radix, wide,
+    key_wide,
 ):
     n_q = queries.shape[0]
     m_pad = slot_key.shape[0]
 
+    def epi(qs, qls, slot, found):
+        return _epilogue(qs, qls, slot, found, payload, payload_hi,
+                         link_offsets, link_keys, link_keys_lo,
+                         link_payloads, link_payload_hi, max_chain, wide,
+                         key_wide)
+
     if backend == "oracle":
         # permutation-free: searchsorted needs no sorted queries
-        slot, found = _ref.lookup_ref(
-            queries, seg_first_key, seg_slope, seg_icept, slot_key
-        )
-        out, out_hi = _epilogue(queries, slot, found, payload, payload_hi,
-                                link_offsets, link_keys, link_payloads,
-                                link_payload_hi, max_chain, wide)
+        if key_wide:
+            slot, found = _pair_oracle(queries, queries_lo, slot_key,
+                                       slot_key_lo)
+        else:
+            slot, found = _ref.lookup_ref(
+                queries, seg_first_key, seg_slope, seg_icept, slot_key
+            )
+        out, out_hi, resolved = epi(queries, queries_lo, slot, found)
         zero = jnp.int32(0)
-        return out, out_hi, slot, found, zero, zero > 0
+        return out, out_hi, slot, resolved, zero, zero > 0
 
     if backend == "xla":
         # permutation-free single pass: windowed bisect + compaction
         slot, found, fb = _xla_window_lookup(
-            queries, seg_first_key, seg_slope, seg_icept,
-            err_lo_by_seg, err_hi_by_seg, slot_key, n_slots, trips,
-            flat_w,
+            queries, queries_lo, seg_first_key, seg_first_key_lo,
+            seg_slope, seg_icept, err_lo_by_seg, err_hi_by_seg,
+            slot_key, slot_key_lo, n_slots, trips, flat_w, key_wide,
             radix_table=radix_table if radix else None,
             radix_scale=radix_scale if radix else None,
         )
         slot, found, fb_count, overflow = _compact_fallback(
-            queries, slot, found, fb, slot_key, fb_cap
+            queries, queries_lo, slot, found, fb, slot_key, slot_key_lo,
+            fb_cap, key_wide
         )
-        out, out_hi = _epilogue(queries, slot, found, payload, payload_hi,
-                                link_offsets, link_keys, link_payloads,
-                                link_payload_hi, max_chain, wide)
-        return out, out_hi, slot, found, fb_count, overflow
+        out, out_hi, resolved = epi(queries, queries_lo, slot, found)
+        return out, out_hi, slot, resolved, fb_count, overflow
 
-    # --- Pallas backend -------------------------------------------------
+    # --- Pallas backend (narrow keys only; the capability registry in
+    # repro.core.handle routes wide-key indexes to the XLA backend) -----
+    if key_wide:
+        raise ValueError("the pallas backend does not support wide "
+                         "(f32 hi/lo pair) keys; use 'xla'")
     if assume_sorted:
         qs = queries
     else:
@@ -379,18 +652,17 @@ def _pipeline(
     # away by the caller)
     fb_s = fb_s & jnp.isfinite(qs)
     slot_s, found_s, fb_count, overflow = _compact_fallback(
-        qs, slot_s, found_s, fb_s, slot_key, fb_cap
+        qs, queries_lo, slot_s, found_s, fb_s, slot_key, slot_key_lo,
+        fb_cap, key_wide
     )
     # fused epilogue in the sorted domain, then ONE unsort gather per out
-    out_s, out_hi_s = _epilogue(qs, slot_s, found_s, payload, payload_hi,
-                                link_offsets, link_keys, link_payloads,
-                                link_payload_hi, max_chain, wide)
+    out_s, out_hi_s, res_s = epi(qs, queries_lo, slot_s, found_s)
     if assume_sorted:
-        return out_s, out_hi_s, slot_s, found_s, fb_count, overflow
+        return out_s, out_hi_s, slot_s, res_s, fb_count, overflow
     inv = jnp.argsort(order)
     out_hi = jnp.take(out_hi_s, inv) if wide else out_hi_s
     return (jnp.take(out_s, inv), out_hi, jnp.take(slot_s, inv),
-            jnp.take(found_s, inv), fb_count, overflow)
+            jnp.take(res_s, inv), fb_count, overflow)
 
 
 def query_window_bounds(index, max_widen: float = 32.0):
@@ -512,8 +784,9 @@ class _EscapeCounter:
 _ESCAPES = _EscapeCounter()
 
 
+_NO_F32 = np.zeros(0, np.float32)
 _NO_RADIX_TABLE = np.zeros(1, np.int32)
-_NO_RADIX_SCALE = np.zeros(2, np.float32)
+_NO_RADIX_SCALE = np.zeros(3, np.float32)
 
 
 def _recombine_i64(out, out_hi, n_q, wide):
@@ -523,6 +796,14 @@ def _recombine_i64(out, out_hi, n_q, wide):
     lo = np.asarray(out[:n_q]).astype(np.int64) & 0xFFFFFFFF
     hi = np.asarray(out_hi[:n_q]).astype(np.int64)
     return (hi << 32) | lo
+
+
+def _split_queries(queries, key_wide: bool):
+    """Host-side query split matching the frozen key representation."""
+    q64 = np.asarray(queries, np.float64)
+    if key_wide:
+        return split_key_pair(q64)
+    return q64.astype(np.float32), _NO_F32
 
 
 def _oracle_escape(arrays, err_lo_by_seg, queries, **kwargs):
@@ -556,23 +837,28 @@ def batched_lookup(
     ``backend`` selects the search stage: "pallas" (TPU kernel;
     ``interpret=True`` on CPU), "xla" (windowed bisect, permutation-free)
     or "oracle" (full searchsorted).  Default: "pallas" when
-    ``use_kernel`` else "oracle".  ``err_lo_by_seg``/``err_hi_by_seg``
-    are the (K,) per-segment error bounds (finalized on the full data —
-    see sampling.refinalize_bounds); err_hi defaults to zeros, which only
-    costs extra (compacted) fallbacks.  ``queries_sorted=True`` skips the
-    argsort/inverse round trip on the Pallas path.
+    ``use_kernel`` else "oracle"; wide-key (``arrays.key_wide``) batches
+    requesting "pallas" route to "xla".  ``err_lo_by_seg`` /
+    ``err_hi_by_seg`` are the (K,) per-segment error bounds (finalized
+    on the full data — see sampling.refinalize_bounds); err_hi defaults
+    to zeros, which only costs extra (compacted) fallbacks.
+    ``queries_sorted=True`` skips the argsort/inverse round trip on the
+    Pallas path.  ``found`` marks present keys (first-level OR chain).
     """
     backend = backend or ("pallas" if use_kernel else "oracle")
     if backend not in ("pallas", "xla", "oracle"):
         raise ValueError(f"unknown backend {backend!r}")
-    queries = np.asarray(queries, np.float32)
-    n_q = queries.shape[0]
+    if backend == "pallas" and arrays.key_wide:
+        backend = "xla"  # capability fallback (see module docstring)
+    qh, ql = _split_queries(queries, arrays.key_wide)
+    n_q = qh.shape[0]
     if q_tile <= 0:  # density-aware default (fallbacks stay rare)
         q_tile = auto_q_tile(n_q, arrays.n_slots, w_tile)
-    if backend == "pallas":
-        qp = _pad_pow(queries, q_tile, np.float32(np.inf))
+    if backend == "pallas":  # narrow-only: wide batches rerouted above
+        qp = _pad_pow(qh, q_tile, np.float32(np.inf))
     else:
-        qp = queries
+        qp = qh
+    qlp = ql
     k_pad = int(arrays.seg_first_key.shape[0])
     err_lo_np = np.asarray(err_lo_by_seg, np.float32)
     err_hi_np = (np.zeros_like(err_lo_np) if err_hi_by_seg is None
@@ -587,17 +873,21 @@ def batched_lookup(
             int(np.ceil(fb_frac * qp.shape[0]))),
     ))
     out, out_hi, slot, found, fb, overflow = _pipeline(
-        jnp.asarray(qp),
-        arrays.seg_first_key, arrays.seg_slope, arrays.seg_icept,
+        jnp.asarray(qp), jnp.asarray(qlp),
+        arrays.seg_first_key, arrays.seg_first_key_lo,
+        arrays.seg_slope, arrays.seg_icept,
         jnp.asarray(err_lo_p), jnp.asarray(err_hi_p),
-        arrays.slot_key, arrays.payload, arrays.payload_hi,
-        arrays.link_offsets, arrays.link_keys, arrays.link_payloads,
-        arrays.link_payload_hi, _NO_RADIX_TABLE, _NO_RADIX_SCALE,
+        arrays.slot_key, arrays.slot_key_lo,
+        arrays.payload, arrays.payload_hi,
+        arrays.link_offsets, arrays.link_keys, arrays.link_keys_lo,
+        arrays.link_payloads, arrays.link_payload_hi,
+        _NO_RADIX_TABLE, _NO_RADIX_SCALE,
         q_tile=q_tile, w_tile=w_tile, seg_chunk=seg_chunk,
         win_chunk=win_chunk, max_chain=arrays.max_chain,
         n_slots=arrays.n_slots, interpret=interpret, backend=backend,
         assume_sorted=bool(queries_sorted), fb_cap=fb_cap, trips=trips,
         flat_w=flat_w, radix=False, wide=arrays.wide,
+        key_wide=arrays.key_wide,
     )
     if backend != "oracle" and bool(overflow):
         return _oracle_escape(
@@ -609,6 +899,227 @@ def batched_lookup(
         )
     out = _recombine_i64(out, out_hi, n_q, arrays.wide)
     return out, slot[:n_q], found[:n_q], fb
+
+
+# ---------------------------------------------------------------------------
+# epoch-versioned device state: freeze + delta update (host-mirror diff)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class HostMirror:
+    """Host-side state at the device's epoch — what ``delta_update``
+    diffs against and patches forward.
+
+    ``sources``: f64/i64 copies of the unpadded index arrays (the diff
+    is a handful of vectorized compares; f32/i32 splits are computed
+    only for changed elements).  ``images``: the padded device-dtype
+    buffers, patched in place so a dense diff uploads an already-built
+    image instead of rebuilding it.  ``statics``: the frozen jit
+    statics/capacities.  ``links_at_freeze``/``n_keys_at_freeze``: the
+    refreeze policy's growth baseline (see Index._link_growth_fraction).
+    """
+
+    sources: dict
+    images: dict
+    statics: dict
+    links_at_freeze: int
+    n_keys_at_freeze: int
+
+
+def _round_pow2(n: int) -> int:
+    return 1 << max(0, int(n - 1).bit_length())
+
+
+@jax.jit
+def _scatter_set(buf, idx, vals):
+    return buf.at[idx].set(vals)
+
+
+# fixed scatter capacity => ONE compiled scatter per (buffer, dtype)
+# shape, however the diff size varies call to call
+_SCATTER_CAP = 8192
+
+
+def _scatter_into(dev, idx: np.ndarray, vals: np.ndarray):
+    """Element-scatter a sparse diff (<= ``_SCATTER_CAP``) into a device
+    buffer through a fixed-capacity bucket (padded by duplicating the
+    last element — idempotent), so the jitted scatter compiles once per
+    buffer shape."""
+    n = idx.shape[0]
+    if n < _SCATTER_CAP:
+        idx = np.concatenate(
+            [idx, np.full(_SCATTER_CAP - n, idx[-1], idx.dtype)])
+        vals = np.concatenate(
+            [vals, np.full(_SCATTER_CAP - n, vals[-1], vals.dtype)])
+    return _scatter_set(dev, jnp.asarray(idx.astype(np.int32)),
+                        jnp.asarray(vals))
+
+
+def freeze_state(index, *, w_tile: int = 2048, seg_chunk: int = 512,
+                 chain_headroom: int = 2, link_headroom: float = 2.0,
+                 **engine_kwargs):
+    """Freeze an index into a ``QueryEngine`` + ``HostMirror`` pair.
+
+    Unlike the bare ``from_learned_index``, capacities are frozen WITH
+    HEADROOM (max-chain x``chain_headroom``, link storage
+    x``link_headroom``, power-of-two) so subsequent ``delta_update``
+    calls keep shapes — and therefore compiled executables — stable.
+    """
+    ga = getattr(index, "gapped", None)
+    chain = ga.links.max_chain if ga is not None else 0
+    total = ga.links.total if ga is not None else 0
+    max_chain = max(4, chain_headroom * max(chain, 1))
+    link_cap = _round_pow2(max(64, int(link_headroom * max(total, 1))))
+    np_arrays, statics = _freeze_numpy(
+        index, w_tile=w_tile, seg_chunk=seg_chunk, max_chain=max_chain,
+        link_cap=link_cap)
+    arrays = _to_device(np_arrays, statics)
+    err_lo, err_hi = query_window_bounds(index)
+    engine = QueryEngine(arrays, err_lo, err_hi, w_tile=w_tile,
+                         seg_chunk=seg_chunk, **engine_kwargs)
+    n_keys = ga.n_keys if ga is not None else int(index.keys.shape[0])
+    images = {f: np_arrays[f].copy() for f in _DELTA_FIELDS
+              if np_arrays[f].size}
+    mirror = HostMirror(sources=_snapshot_sources(index), images=images,
+                        statics=statics, links_at_freeze=total,
+                        n_keys_at_freeze=n_keys)
+    return engine, mirror
+
+
+def _snapshot_sources(index) -> dict:
+    ga = getattr(index, "gapped", None)
+    if ga is None:
+        return {}
+    offsets, lkeys, lpay = ga.export_csr_links()
+    return {"slot_key": np.array(ga.slot_key, np.float64),
+            "payload": np.array(ga.payload, np.int64),
+            "offsets": np.array(offsets, np.int64),
+            "link_keys": np.array(lkeys, np.float64),
+            "link_payloads": np.array(lpay, np.int64)}
+
+
+def _diff_grown(old: np.ndarray, new: np.ndarray) -> np.ndarray:
+    """Changed indices between two source arrays that may differ in
+    length; positions past the new length are unread on device (the
+    offsets bound every chain scan), so only [0, len(new)) matters."""
+    n0, n1 = old.shape[0], new.shape[0]
+    lo = min(n0, n1)
+    d = np.flatnonzero(old[:lo] != new[:lo])
+    if n1 > lo:
+        d = np.concatenate([d, np.arange(lo, n1)])
+    return d
+
+
+def delta_update(arrays: IndexArrays, mirror: HostMirror, index,
+                 max_diff_frac: float = 0.5):
+    """Bring frozen device buffers to the index's current host state by
+    scattering ONLY changed elements (slot_key/payload entries for slot
+    placements, CSR link-table tails + shifted offsets for chain
+    appends; dense diffs swap the single affected buffer).
+
+    The diff runs on the SOURCE arrays (a few vectorized f64/i64
+    compares) and the device-dtype splits are computed only for changed
+    elements — no padded-image rebuild, no window-bound recompute, no
+    executable retrace.
+
+    Returns ``(new_arrays, n_changed)`` — or ``(None, 0)`` when a frozen
+    static/capacity no longer holds or the diff would touch more than
+    ``max_diff_frac`` of the slot buffers (a refreeze is then cheaper).
+    On success the mirror is advanced to the new host snapshot.
+    """
+    ga = getattr(index, "gapped", None)
+    if ga is None or not mirror.sources:
+        return None, 0
+    st = mirror.statics
+    if ga.n_slots != st["n_slots"]:
+        return None, 0
+    offsets, lkeys, lpay = ga.export_csr_links()
+    if ga.links.max_chain > st["max_chain"]:
+        return None, 0
+    if lkeys.shape[0] > st["link_cap"]:
+        return None, 0
+    src = mirror.sources
+    d_slot = np.flatnonzero(src["slot_key"] != np.asarray(ga.slot_key))
+    d_pay = np.flatnonzero(src["payload"] != np.asarray(ga.payload))
+    d_off = np.flatnonzero(src["offsets"] != offsets)
+    d_lk = _diff_grown(src["link_keys"], lkeys)
+    d_lp = _diff_grown(src["link_payloads"], lpay)
+    changed = int(d_slot.size + d_pay.size + d_off.size + d_lk.size
+                  + d_lp.size)
+    if changed == 0:  # epoch moved without visible writes
+        return arrays, 0
+    if (d_slot.size + d_pay.size) > max_diff_frac * ga.n_slots:
+        return None, 0
+    # width statics: only the CHANGED values can violate them
+    new_pay = np.asarray(ga.payload)[d_pay]
+    new_lpay = lpay[d_lp]
+    if not st["wide"] and (
+            (new_pay.size and (new_pay.min() < _I32_MIN
+                               or new_pay.max() > _I32_MAX))
+            or (new_lpay.size and (new_lpay.min() < _I32_MIN
+                                   or new_lpay.max() > _I32_MAX))):
+        return None, 0
+    new_sk = np.asarray(ga.slot_key)[d_slot]
+    if not st["key_wide"] and (keys_need_pair(new_sk)
+                               or keys_need_pair(lkeys[d_lk])):
+        return None, 0
+    # NOTE: pair-ALIASING of distinct keys (beyond ~2^48) is the
+    # caller's gate — repro.core.Index checks it per epoch (_key_caps)
+    # and drops the device state instead of syncing; a full check here
+    # would cost an O(n log n) merge per delta.
+
+    updates = {}
+
+    def upd(field, d, vals):
+        """Sparse patch: fix the padded host image in place, then
+        element-scatter (tiny diffs) or upload the patched image."""
+        img = mirror.images[field]
+        img[d] = vals
+        if d.size <= _SCATTER_CAP:
+            updates[field] = _scatter_into(getattr(arrays, field), d, vals)
+        else:
+            updates[field] = jnp.asarray(img)
+
+    def upd_dense(field, prefix):
+        """Dense patch (e.g. a chain append mid-array shifts every
+        downstream CSR offset): one contiguous prefix write into the
+        image (cheaper than an O(n) fancy-index scatter), one upload."""
+        img = mirror.images[field]
+        img[: prefix.shape[0]] = prefix
+        updates[field] = jnp.asarray(img)
+
+    def pair_group(fields, d, full64, split):
+        dense = d.size > max(full64.shape[0] // 2, _SCATTER_CAP)
+        parts = split(full64 if dense else full64[d])
+        for f, part in zip(fields, parts):
+            if f is None:
+                continue
+            (upd_dense(f, part) if dense else upd(f, d, part))
+
+    if d_slot.size:
+        pair_group(("slot_key", "slot_key_lo" if st["key_wide"] else None),
+                   d_slot, np.asarray(ga.slot_key), split_key_pair)
+        src["slot_key"][d_slot] = new_sk
+    if d_pay.size:
+        pair_group(("payload", "payload_hi" if st["wide"] else None),
+                   d_pay, np.asarray(ga.payload), _split_i64)
+        src["payload"][d_pay] = new_pay
+    if d_off.size:
+        pair_group(("link_offsets", None), d_off, offsets,
+                   lambda a: (a.astype(np.int32),))
+        src["offsets"] = np.array(offsets, np.int64)
+    if d_lk.size:
+        pair_group(("link_keys", "link_keys_lo" if st["key_wide"] else None),
+                   d_lk, lkeys, split_key_pair)
+        src["link_keys"] = np.array(lkeys, np.float64)
+    if d_lp.size:
+        pair_group(("link_payloads",
+                    "link_payload_hi" if st["wide"] else None),
+                   d_lp, lpay, _split_i64)
+        src["link_payloads"] = np.array(lpay, np.int64)
+    new_arrays = dataclasses.replace(arrays, **updates)
+    return new_arrays, changed
 
 
 # ---------------------------------------------------------------------------
@@ -624,6 +1135,10 @@ class QueryEngine:
     keeps the padded error-bound arrays resident on device.  Serving
     callers that issue sorted batches pass ``queries_sorted=True`` to
     skip the argsort/inverse-permutation round trip on the Pallas path.
+
+    ``swap_arrays`` accepts delta-updated buffers of identical shapes —
+    the compiled executables and window bounds stay valid (stale bounds
+    only raise the compacted-fallback rate, never wrong results).
 
     ``stats`` tracks calls, per-call fallback totals, and how often the
     compaction buffer overflowed into the full-oracle escape hatch.
@@ -663,11 +1178,17 @@ class QueryEngine:
         self._trips = _bisect_trips(self.err_lo, err_hi_np)
         self._flat_w = _flat_width(self.err_lo, err_hi_np)
         # approximate radix router: one multiply + one 64 KiB table gather
-        # instead of the exact segment searchsorted (mis-routes near
-        # bucket boundaries are sound — see _xla_window_lookup)
-        segk = np.asarray(arrays.seg_first_key)
+        # instead of the exact segment-routing searchsorted (mis-routes
+        # near bucket boundaries are sound — see _xla_window_lookup).
+        # kmin is carried as an f32 hi/lo pair so wide-key subtraction
+        # keeps its relative precision.
+        segk = np.asarray(arrays.seg_first_key, np.float64)
+        if arrays.key_wide:
+            segk = segk + np.asarray(arrays.seg_first_key_lo, np.float64)
         finite = segk[np.isfinite(segk)]
-        sk = np.asarray(arrays.slot_key)
+        sk = np.asarray(arrays.slot_key, np.float64)
+        if arrays.key_wide:
+            sk = sk + np.asarray(arrays.slot_key_lo, np.float64)
         sk_fin = sk[np.isfinite(sk)]
         kmin = float(finite[0]) if finite.size else 0.0
         kmax = float(sk_fin[-1]) if sk_fin.size else kmin + 1.0
@@ -678,25 +1199,39 @@ class QueryEngine:
             np.searchsorted(segk, buckets, side="right") - 1,
             0, segk.shape[0] - 1,
         ).astype(np.int32)
+        kmin_hi, kmin_lo = split_key_pair(np.array([kmin]))
         self._radix_table = jnp.asarray(table)
         self._radix_scale = jnp.asarray(
-            np.array([kmin, scale], np.float32))
+            np.array([kmin_hi[0], kmin_lo[0], scale], np.float32))
         # sticky per-bucket fallback-capacity boost: a workload that once
         # overflowed gets a larger compaction buffer next time instead of
         # paying the oracle escape on every call
         self._cap_boost: dict = {}
+        self.last_stage: Optional[str] = None  # search stage of last call
         self.stats = {"calls": 0, "fallbacks": 0, "oracle_escapes": 0,
                       "buckets": set()}
 
     @classmethod
     def from_index(cls, index, *, w_tile: int = 2048, seg_chunk: int = 512,
                    max_chain: Optional[int] = None, **kwargs):
-        """Freeze a ``LearnedIndex`` with query-safe window bounds."""
+        """Freeze an index with query-safe window bounds.
+
+        Deprecated entry point: prefer the epoch-versioned
+        ``repro.core.Index`` handle, which owns the engine, keeps it
+        fresh across mutations via delta updates, and returns typed
+        ``LookupResult``s.  This classmethod remains as a thin shim for
+        code that manages freezing manually.
+        """
         arrays = from_learned_index(index, w_tile=w_tile,
                                     seg_chunk=seg_chunk, max_chain=max_chain)
         err_lo, err_hi = query_window_bounds(index)
         return cls(arrays, err_lo, err_hi, w_tile=w_tile,
                    seg_chunk=seg_chunk, **kwargs)
+
+    def swap_arrays(self, arrays: IndexArrays) -> None:
+        """Adopt delta-updated buffers (same shapes/statics — compiled
+        executables stay valid)."""
+        self.arrays = arrays
 
     def bucket(self, n: int) -> int:
         b = self.min_bucket
@@ -704,48 +1239,71 @@ class QueryEngine:
             b <<= 1
         return b
 
-    def _dispatch(self, qj, backend, q_tile, fb_cap, queries_sorted):
+    def _dispatch(self, qj, qlj, backend, q_tile, fb_cap, queries_sorted):
         a = self.arrays
         return _pipeline(
-            qj, a.seg_first_key, a.seg_slope, a.seg_icept,
-            self._elo, self._ehi, a.slot_key, a.payload, a.payload_hi,
-            a.link_offsets, a.link_keys, a.link_payloads,
-            a.link_payload_hi, self._radix_table, self._radix_scale,
+            qj, qlj, a.seg_first_key, a.seg_first_key_lo,
+            a.seg_slope, a.seg_icept, self._elo, self._ehi,
+            a.slot_key, a.slot_key_lo, a.payload, a.payload_hi,
+            a.link_offsets, a.link_keys, a.link_keys_lo,
+            a.link_payloads, a.link_payload_hi,
+            self._radix_table, self._radix_scale,
             q_tile=q_tile, w_tile=self.w_tile, seg_chunk=self.seg_chunk,
             win_chunk=self.win_chunk, max_chain=a.max_chain,
             n_slots=a.n_slots, interpret=self.interpret, backend=backend,
             assume_sorted=queries_sorted, fb_cap=fb_cap,
             trips=self._trips, flat_w=self._flat_w,
-            radix=(backend == "xla"), wide=a.wide,
+            radix=(backend == "xla"), wide=a.wide, key_wide=a.key_wide,
         )
 
-    def lookup(self, queries, *, queries_sorted: bool = False):
-        """Returns (payloads, slot, found, fb_count) sliced to len(queries)."""
-        queries = np.asarray(queries, np.float32)
-        n_q = queries.shape[0]
+    def lookup(self, queries, *, queries_sorted: bool = False,
+               backend: Optional[str] = None, force_backend: bool = False):
+        """Returns (payloads, slot, found, fb_count) sliced to len(queries).
+
+        ``backend`` overrides the engine default for this call ("pallas"
+        / "xla" / "oracle"); wide-key indexes route "pallas" to "xla"
+        (a capability, always applied).  The size-aware xla->oracle
+        downgrade for small buckets is scheduling and is skipped when
+        ``force_backend`` is set — explicit requests run the requested
+        stage.  ``self.last_stage`` records the stage that actually ran.
+        """
+        key_wide = self.arrays.key_wide
+        qh, ql = _split_queries(queries, key_wide)
+        n_q = qh.shape[0]
         b = self.bucket(n_q)
         if b == n_q:
-            qp = queries
+            qp, qlp = qh, ql
         else:
             qp = np.full(b, np.inf, np.float32)
-            qp[:n_q] = queries  # +inf tail keeps sorted batches sorted
+            qp[:n_q] = qh  # +inf tail keeps sorted batches sorted
+            if key_wide:
+                qlp = np.zeros(b, np.float32)
+                qlp[:n_q] = ql
+            else:
+                qlp = ql
         q_tile = min(b, self.q_tile or auto_q_tile(b, self.arrays.n_slots,
                                                    self.w_tile))
-        backend = self.backend
-        if backend == "xla" and b < self.xla_min_bucket:
+        backend = backend or self.backend
+        if backend == "pallas" and key_wide:
+            backend = "xla"  # capability fallback
+        if (backend == "xla" and b < self.xla_min_bucket
+                and not force_backend):
             backend = "oracle"  # size-aware scheduling (see __init__)
+        self.last_stage = backend
         boost = self._cap_boost.get(b, 1)
         fb_cap = int(min(b, boost * max(
             q_tile if backend == "pallas" else 64,
             int(np.ceil(self.fb_frac * b)))))
         qj = jnp.asarray(qp)
+        qlj = jnp.asarray(qlp)
         out, out_hi, slot, found, fb, overflow = self._dispatch(
-            qj, backend, q_tile, fb_cap, bool(queries_sorted))
+            qj, qlj, backend, q_tile, fb_cap, bool(queries_sorted))
         if backend != "oracle" and fb_cap < b and bool(overflow):
             self.stats["oracle_escapes"] += 1
             self._cap_boost[b] = min(boost * 4, 64)  # sticky escalation
+            self.last_stage = "oracle"  # the stage that actually served
             out, out_hi, slot, found, fb, _ = self._dispatch(
-                qj, "oracle", q_tile, fb_cap, bool(queries_sorted))
+                qj, qlj, "oracle", q_tile, fb_cap, bool(queries_sorted))
         self.stats["calls"] += 1
         self.stats["fallbacks"] += int(fb)
         self.stats["buckets"].add(b)

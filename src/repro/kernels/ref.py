@@ -59,6 +59,8 @@ def chain_hit_index(
     link_offsets,
     link_keys,
     max_chain: int,
+    queries_lo=None,
+    link_keys_lo=None,
 ):
     """Index into the CSR link tables of the entry matching q, else -1.
 
@@ -67,11 +69,16 @@ def chain_hit_index(
     + 1))`` rolled ``lax.fori_loop`` trips (ONE copy of the body in the
     graph; the old Python loop unrolled ``max_chain`` linear
     gather/compare/select stages).
+
+    ``queries_lo``/``link_keys_lo`` switch every compare to the wide-key
+    f32 hi/lo pair representation (lexicographic pair order == numeric
+    order — see kernels.ops.split_key_pair); pass None for narrow keys.
     """
     n_q = queries.shape[0]
     miss = jnp.full((n_q,), -1, jnp.int32)
     if link_keys.shape[0] == 0 or max_chain <= 0:
         return miss
+    wide = queries_lo is not None and link_keys_lo is not None
     l_max = link_keys.shape[0] - 1
     safe_slot = jnp.clip(slot, 0, link_offsets.shape[0] - 2)
     start = jnp.take(link_offsets, safe_slot)
@@ -83,14 +90,23 @@ def chain_hit_index(
         lo, hi = carry
         upd = lo < hi
         mid = (lo + hi + 1) >> 1
-        go = jnp.take(link_keys, jnp.clip(mid, 0, l_max)) <= queries
+        midc = jnp.clip(mid, 0, l_max)
+        kh = jnp.take(link_keys, midc)
+        if wide:
+            kl = jnp.take(link_keys_lo, midc)
+            go = (kh < queries) | ((kh == queries) & (kl <= queries_lo))
+        else:
+            go = kh <= queries
         lo = jnp.where(upd & go, mid, lo)
         hi = jnp.where(upd, jnp.where(go, hi, mid - 1), hi)
         return lo, hi
 
     lo, _ = jax.lax.fori_loop(0, trips, body, (start - 1, end - 1))
-    hit = (scan & (lo >= start)
-           & (jnp.take(link_keys, jnp.clip(lo, 0, l_max)) == queries))
+    loc = jnp.clip(lo, 0, l_max)
+    eq = jnp.take(link_keys, loc) == queries
+    if wide:
+        eq = eq & (jnp.take(link_keys_lo, loc) == queries_lo)
+    hit = scan & (lo >= start) & eq
     return jnp.where(hit, lo, miss)
 
 

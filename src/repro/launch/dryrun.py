@@ -305,7 +305,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):
+        # jax.set_mesh landed after 0.4.x; entering the Mesh context is
+        # the portable equivalent (build_step shards via NamedSharding)
+        with mesh:
             jitted, aargs = build_step(model, shape, mesh, seq_axis=seq_axis,
                                        kv_shard=kv_shard)
             lowered = jitted.lower(*aargs)
@@ -315,6 +317,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
 
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):  # jax<=0.4.x: one dict
+                cost = cost[0] if cost else None  # per computation
             hlo = compiled.as_text()
             cbytes, per_kind, n_coll = collective_bytes(hlo)
 

@@ -129,4 +129,10 @@ class ServingEngine:
         while (self.queue or self.active) and self.stats["rounds"] < max_rounds:
             self.step()
         self.stats["wall_s"] = time.perf_counter() - t0
+        # block-table health: epoch distance covered by cheap delta
+        # updates vs full refreezes (the Index handle's device sync)
+        idx = self.kv_pages.index
+        self.stats["kv_epoch"] = idx.epoch
+        self.stats["kv_delta_updates"] = idx.stats["delta_updates"]
+        self.stats["kv_refreezes"] = idx.stats["refreezes"]
         return self.stats

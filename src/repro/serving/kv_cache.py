@@ -2,19 +2,21 @@
 
 vLLM-style paging keeps a per-request block table (logical page ->
 physical page) in a hash map.  Here the table is a *gapped learned
-index* over composite keys ``request_id * 2^20 + logical_page``:
+index* over composite keys ``request_id * 2^20 + logical_page``, held by
+the epoch-versioned ``repro.core.Index`` handle:
 
  * allocation = the paper's §5.3 **dynamic insert**: the predicted slot
    is usually a reserved gap (requests allocate pages in key order, the
    exact pattern result-driven gaps anticipate), so inserts are O(1)
-   without rehashing/retraining;
- * lookup     = batched predict+bounded-search — the Pallas kernel path
-   resolves every (request, page) of a decode batch in one shot;
- * free       = §5.3 delete.
-
-The physical pages themselves are a free-list over a preallocated
-(n_pages, page_size, ...) tensor per layer — standard paged attention;
-this module manages the mapping, not the attention math.
+   without rehashing/retraining.  ``index.ingest`` delta-updates the
+   frozen device buffers in place — no more "mark dirty + refreeze the
+   whole engine on the next lookup" dance;
+ * lookup     = ``index.lookup`` — the handle resolves small batches on
+   the numpy oracle and large ones on the device engine.  Composite keys
+   beyond f32 exactness (2^24) ride the f32 hi/lo pair representation,
+   so the device path serves them exactly (no host fallback guard);
+ * free       = §5.3 delete (device state follows via delta on the next
+   device lookup).
 """
 
 from __future__ import annotations
@@ -24,10 +26,9 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from ..core import LearnedIndex
+from ..core import Index
 
 _PAGE_SHIFT = 20  # up to 2^20 pages per request
-_ENGINE_MIN_BATCH = 512  # below this the numpy host path wins
 
 
 def table_key(request_id: int, logical_page: int) -> int:
@@ -38,11 +39,9 @@ def table_key(request_id: int, logical_page: int) -> int:
 class PagedKVCache:
     n_pages: int
     page_size: int
-    index: LearnedIndex
+    index: Index
     free_pages: List[int]
     allocated: Dict[int, int]  # composite key -> physical page
-    _engine: Optional[object] = None  # lazy QueryEngine over a frozen snapshot
-    _engine_dirty: bool = True
 
     @staticmethod
     def create(n_pages: int, page_size: int = 16,
@@ -57,14 +56,11 @@ class PagedKVCache:
             for p in range(0, pages_per_req, 2):  # every other page: gaps
                 skeleton.append(table_key(r, p))
         keys = np.array(sorted(set(skeleton)), np.float64)
-        index = LearnedIndex.build(keys, method="pgm", eps=16,
-                                   gap_rho=gap_rho)
+        index = Index.build(keys, method="pgm", eps=16, gap_rho=gap_rho)
         # skeleton keys carry payload -1 (not an allocation)
-        for slot in range(index.gapped.n_slots):
-            if index.gapped.occupied[slot]:
-                index.gapped.payload[slot] = -1
-        for chain in index.gapped.links.values():
-            chain[:] = [(k, -1) for k, _ in chain]
+        ga = index.gapped
+        ga.payload[ga.occupied] = -1
+        ga.links.chain_payloads[:] = -1
         return PagedKVCache(
             n_pages=n_pages, page_size=page_size, index=index,
             free_pages=list(range(n_pages)), allocated={})
@@ -73,7 +69,6 @@ class PagedKVCache:
     def alloc(self, request_id: int, logical_page: int) -> int:
         if not self.free_pages:
             raise MemoryError("KV cache out of pages")
-        self._engine_dirty = True
         phys = self.free_pages.pop()
         key = table_key(request_id, logical_page)
         kf = float(key)
@@ -88,9 +83,10 @@ class PagedKVCache:
                     logical_pages: np.ndarray) -> np.ndarray:
         """Allocate many (request, page) mappings in one shot.
 
-        Skeleton keys are claimed via update; fresh keys go through the
-        vectorized ``insert_batch`` (§5.3 batched dynamic insert) instead
-        of one predict + scan per page.  Returns the physical pages.
+        Skeleton keys are claimed via update; fresh keys go through ONE
+        ``index.ingest`` (§5.3 batched dynamic insert), which also
+        delta-updates the frozen device buffers so the engine stays hot.
+        Returns the physical pages.
         """
         request_ids = np.atleast_1d(np.asarray(request_ids, np.int64))
         logical_pages = np.atleast_1d(np.asarray(logical_pages, np.int64))
@@ -99,7 +95,6 @@ class PagedKVCache:
             return np.zeros(0, np.int64)
         if len(self.free_pages) < n:
             raise MemoryError("KV cache out of pages")
-        self._engine_dirty = True
         keys = (request_ids << _PAGE_SHIFT) | logical_pages
         kf = keys.astype(np.float64)
         phys = np.array([self.free_pages.pop() for _ in range(n)],
@@ -109,55 +104,43 @@ class PagedKVCache:
             self.index.update(float(k), int(ph))
         fresh = ~existing
         if np.any(fresh):
-            self.index.insert_batch(kf[fresh], phys[fresh])
+            self.index.ingest(kf[fresh], phys[fresh])
         for k, ph in zip(keys.tolist(), phys.tolist()):
             self.allocated[k] = ph
         return phys
-
-    def query_engine(self):
-        """Single-pass device ``QueryEngine`` over the current table,
-        refrozen lazily after mutations (alloc/free are the rare path in
-        a decode loop; lookups are per round)."""
-        from ..kernels import QueryEngine
-
-        if self._engine is None or self._engine_dirty:
-            self._engine = QueryEngine.from_index(self.index)
-            self._engine_dirty = False
-        return self._engine
 
     def lookup_batch(self, request_ids: np.ndarray,
                      logical_pages: np.ndarray,
                      device: Optional[bool] = None) -> np.ndarray:
         """Batched (request, page) -> physical page; -1 for unmapped.
 
-        ``device=None`` picks the single-pass engine for large batches
-        (serving issues sorted page lookups — the engine skips the sort)
-        and the numpy reference for small ones.
+        ``device=None`` lets the handle's capability registry pick
+        (numpy oracle below ``index.min_device_batch``, the device
+        engine above — composite keys beyond 2^24 ride the f32 hi/lo
+        pair, so there is no host-only guard anymore).
         """
         keys = ((request_ids.astype(np.int64) << _PAGE_SHIFT)
                 | logical_pages.astype(np.int64)).astype(np.float64)
-        if device is None:
-            # engine only for large, f32-exact batches (the device path
-            # stores keys as f32; huge composite keys stay on the host)
-            device = (keys.shape[0] >= _ENGINE_MIN_BATCH
-                      and bool(np.all(
-                          keys.astype(np.float32).astype(np.float64)
-                          == keys)))
-        if device:
-            qsorted = bool(np.all(np.diff(keys) >= 0))
-            out, *_ = self.query_engine().lookup(keys,
-                                                 queries_sorted=qsorted)
-            return np.asarray(out).astype(np.int64)
-        return self.index.lookup(keys)
+        backend = None
+        if device is True:
+            backend = "xla-windowed"
+        elif device is False:
+            backend = "numpy-oracle"
+        qsorted = bool(np.all(np.diff(keys) >= 0))
+        res = self.index.lookup(keys, backend=backend,
+                                queries_sorted=qsorted)
+        return np.asarray(res.payloads).astype(np.int64)
 
     def free_request(self, request_id: int, n_pages: int) -> None:
-        self._engine_dirty = True
+        doomed = []
         for p in range(n_pages):
             key = table_key(request_id, p)
             phys = self.allocated.pop(key, None)
             if phys is not None and phys >= 0:
                 self.free_pages.append(phys)
-                self.index.delete(float(key))
+                doomed.append(float(key))
+        if doomed:
+            self.index.remove(np.asarray(doomed, np.float64))
 
     @property
     def utilization(self) -> float:
@@ -168,6 +151,8 @@ class PagedKVCache:
         (the paper's dynamic-insert claim, measurable)."""
         g = self.index.gapped
         chained, _ = g.link_stats()
-        total = max(len(self.allocated), 1)
         return {"gap_fraction_remaining": g.gap_fraction,
-                "chained_keys": chained}
+                "chained_keys": chained,
+                "epoch": self.index.epoch,
+                "refreezes": self.index.stats["refreezes"],
+                "delta_updates": self.index.stats["delta_updates"]}

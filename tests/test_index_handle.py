@@ -1,0 +1,268 @@
+"""Unified Index handle: epoch protocol, delta-vs-rebuild state identity,
+backend capability registry, typed results, deprecation shims."""
+
+import copy
+import warnings
+
+import numpy as np
+import pytest
+
+from conftest import make_keys
+from repro.core import BACKENDS, Index, IngestReport, LearnedIndex, LookupResult
+from repro.kernels import from_learned_index
+
+
+def _device_state_equal(engine_arrays, fresh_arrays):
+    """Delta-updated device buffers == rebuild-from-scratch freeze, up to
+    capacity padding (compare the live prefixes; CSR links reconstructed
+    per slot through the offsets)."""
+    ns = fresh_arrays.n_slots
+    a, b = engine_arrays, fresh_arrays
+    assert np.array_equal(np.asarray(a.slot_key)[:ns],
+                          np.asarray(b.slot_key)[:ns])
+    assert np.array_equal(np.asarray(a.payload)[:ns],
+                          np.asarray(b.payload)[:ns])
+    off_a = np.asarray(a.link_offsets)[: ns + 1]
+    off_b = np.asarray(b.link_offsets)[: ns + 1]
+    assert np.array_equal(off_a, off_b)
+    L = int(off_b[-1])
+    assert np.array_equal(np.asarray(a.link_keys)[:L],
+                          np.asarray(b.link_keys)[:L])
+    assert np.array_equal(np.asarray(a.link_payloads)[:L],
+                          np.asarray(b.link_payloads)[:L])
+    if a.key_wide:
+        assert np.array_equal(np.asarray(a.slot_key_lo)[:ns],
+                              np.asarray(b.slot_key_lo)[:ns])
+        assert np.array_equal(np.asarray(a.link_keys_lo)[:L],
+                              np.asarray(b.link_keys_lo)[:L])
+    return True
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_epoch_delta_rounds_state_identical_to_rebuild(seed):
+    """Property: N interleaved ingest/lookup rounds on the delta-updated
+    device state leave buffers state-identical to a rebuild-from-scratch
+    freeze, and every lookup is bit-identical to the host oracle."""
+    rng = np.random.default_rng(seed)
+    x = make_keys("uniform_int", 20_000, seed=seed)
+    idx = Index.build(x, method="pgm", eps=64, gap_rho=0.25)
+    pool = np.setdiff1d(
+        np.unique(rng.integers(1, 2 ** 22, 40_000)).astype(np.float64), x)
+    rng.shuffle(pool)
+    used = 0
+    # materialize the device engine, then interleave
+    idx.lookup(rng.choice(x, 4096), backend="xla-windowed")
+    assert idx.device_epoch == idx.epoch == 0
+    for rnd in range(4):
+        batch = pool[used: used + 700]
+        used += 700
+        rep = idx.ingest(batch, 10_000_000 + np.arange(700) + rnd)
+        assert isinstance(rep, IngestReport)
+        assert rep.slot + rep.chain == 700
+        assert rep.device in ("delta", "refreeze")
+        assert idx.device_epoch == idx.epoch
+        q = np.concatenate([batch, rng.choice(x, 2000),
+                            pool[used: used + 300]])  # misses too
+        res = idx.lookup(q, backend="xla-windowed")
+        assert isinstance(res, LookupResult)
+        truth_pay, _, truth_found = idx.gapped.lookup_batch(q, full=True)
+        assert np.array_equal(res.payloads, truth_pay)
+        assert np.array_equal(res.found, truth_found)
+        assert res.epoch == idx.epoch
+        _device_state_equal(idx._engine.arrays, from_learned_index(idx))
+    assert idx.stats["delta_updates"] >= 1
+
+
+def test_forced_refreeze_threshold_crossings():
+    """Tiny thresholds force the refreeze arm; results stay identical and
+    the refreeze counter moves instead of the delta counter."""
+    x = make_keys("uniform_int", 15_000, seed=3)
+    rng = np.random.default_rng(3)
+    idx = Index.build(x, method="pgm", eps=64, gap_rho=0.2)
+    idx.refreeze_contested_frac = 0.0  # any contested key -> refreeze
+    idx.refreeze_link_growth = 0.0     # any chain growth -> refreeze
+    idx.lookup(rng.choice(x, 4096), backend="xla-windowed")
+    refreezes0 = idx.stats["refreezes"]
+    mids = np.setdiff1d(x[:-1] + np.diff(x) * 0.5, x)[:1500]
+    rep = idx.ingest(mids, np.arange(1500))
+    if rep.chain or rep.contested:
+        assert rep.device == "refreeze"
+        assert idx.stats["refreezes"] > refreezes0
+    res = idx.lookup(mids, backend="xla-windowed")
+    assert np.array_equal(res.payloads, np.arange(1500))
+    _device_state_equal(idx._engine.arrays, from_learned_index(idx))
+
+
+def test_delta_and_refreeze_lookups_bit_identical():
+    """The acceptance property: after the same mutations, a delta-updated
+    engine and a freshly refrozen engine answer bit-identically."""
+    x = make_keys("iot", 20_000, seed=4)
+    rng = np.random.default_rng(4)
+    idx_delta = Index.build(x, method="pgm", eps=64, gap_rho=0.25)
+    # disable the policy thresholds so this run exercises the delta arm
+    idx_delta.refreeze_contested_frac = 1.1
+    idx_delta.refreeze_link_growth = 10.0
+    mids = np.setdiff1d(x[:-1] + np.diff(x) * rng.random(len(x) - 1), x)
+    # warm round: grows the frozen chain/link capacities (may refreeze)
+    idx_delta.ingest(mids[800:1600], np.arange(800))
+    idx_delta.lookup(rng.choice(x, 4096), backend="xla-windowed")
+    idx_fresh = copy.deepcopy(idx_delta)  # device dropped by deepcopy
+    mids = mids[:800]
+    pay = 5_000_000 + np.arange(len(mids))
+    rep = idx_delta.ingest(mids, pay)
+    assert rep.device == "delta"
+    idx_fresh.ingest(mids, pay)      # no engine yet -> device "none"
+    idx_fresh.refreeze()
+    q = np.concatenate([mids, rng.choice(x, 4000)])
+    r_delta = idx_delta.lookup(q, backend="xla-windowed")
+    r_fresh = idx_fresh.lookup(q, backend="xla-windowed")
+    assert np.array_equal(r_delta.payloads, r_fresh.payloads)
+    assert np.array_equal(r_delta.found, r_fresh.found)
+    assert np.array_equal(r_delta.slots, r_fresh.slots)
+
+
+def test_scalar_ops_bump_epoch_and_device_follows():
+    """Scalar insert/delete/update through any path bump the epoch; the
+    next device lookup syncs lazily."""
+    x = make_keys("uniform_int", 10_000, seed=5)
+    idx = Index.build(x, method="pgm", eps=64, gap_rho=0.2)
+    rng = np.random.default_rng(5)
+    idx.lookup(rng.choice(x, 4096), backend="xla-windowed")
+    e0 = idx.epoch
+    k = float(x[100]) + 0.5
+    idx.insert(k, 777)
+    assert idx.epoch > e0
+    assert idx.device_epoch < idx.epoch  # stale until next device read
+    res = idx.lookup(np.full(4096, k), backend="xla-windowed")
+    assert idx.device_epoch == idx.epoch
+    assert np.all(res.payloads == 777)
+    idx.update(k, 778)
+    assert np.all(idx.lookup(np.full(4096, k),
+                             backend="xla-windowed").payloads == 778)
+    assert idx.remove(np.array([k])) == 1
+    res = idx.lookup(np.full(4096, k), backend="xla-windowed")
+    assert not res.found.any() and np.all(res.payloads == -1)
+
+
+def test_backend_registry_resolution_and_capabilities():
+    x = make_keys("uniform_int", 9_000, seed=6)
+    idx = Index.build(x, method="pgm", eps=64, gap_rho=0.1)
+    assert set(BACKENDS) == {"pallas", "xla-windowed", "numpy-oracle"}
+    # size-aware default: small batches host, large device
+    assert not idx.resolve_backend(10).device
+    assert idx.resolve_backend(10_000).device
+    with pytest.raises(ValueError, match="unknown backend"):
+        idx.lookup(x[:4], backend="cuda")
+    # wide keys: explicit pallas refused with the failed capability
+    # (+2^30 offsets need >24 mantissa bits; *2^30 would stay f32-exact)
+    wide_keys = np.unique(x + 2.0 ** 30)
+    widx = Index.build(wide_keys, method="pgm", eps=64, gap_rho=0.1)
+    with pytest.raises(ValueError, match="hi/lo"):
+        widx.lookup(wide_keys[:2048], backend="pallas")
+    # ...but the default resolution serves them (xla-windowed)
+    res = widx.lookup(wide_keys[:2048], backend="xla-windowed")
+    assert np.array_equal(res.payloads,
+                          np.searchsorted(wide_keys, wide_keys[:2048]))
+
+
+def test_static_build_typed_and_legacy_shim():
+    """Static (no-gap) builds route through LookupResult too; the
+    LearnedIndex shim preserves the old array returns under a
+    DeprecationWarning."""
+    x = make_keys("weblogs", 8_000, seed=7)
+    rng = np.random.default_rng(7)
+    q = np.concatenate([rng.choice(x, 500), x[:200] + 0.25])
+    truth = np.where(np.isin(q, x), np.searchsorted(x, q), -1)
+    idx = Index.build(x, method="pgm", eps=64)
+    res = idx.lookup(q)
+    assert np.array_equal(res.payloads, truth)
+    assert np.array_equal(res.found, truth >= 0)
+    legacy = LearnedIndex.build(x, method="pgm", eps=64)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        out = legacy.lookup(q)
+    assert any(issubclass(c.category, DeprecationWarning) for c in caught)
+    assert isinstance(out, np.ndarray)
+    assert np.array_equal(out, truth)
+    # gapped legacy shim: payload array, same values as the typed result
+    legacy_g = LearnedIndex.build(x, method="pgm", eps=64, gap_rho=0.2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        out_g = legacy_g.lookup(q)
+    assert np.array_equal(out_g, Index.lookup(legacy_g, q).payloads)
+
+
+def test_keys_beyond_pair_exactness_stay_on_host():
+    """Key sets whose distinct keys ALIAS in the f32 hi/lo pair
+    representation (dense integers at ~2^52: pair resolution is 16)
+    must never be served by a device backend — the pair compare would
+    return false-positive hits."""
+    from repro.kernels import keys_pair_exact, pair_alias_free
+
+    rng = np.random.default_rng(10)
+    # residuals near 2^27: f32 lo quantizes to multiples of 16, so keys
+    # spaced 4 apart share their (hi, lo) pair
+    keys = np.unique(2.0 ** 52 + 2.0 ** 27
+                     + rng.integers(0, 2 ** 14, 6_000).astype(np.float64) * 4)
+    assert not pair_alias_free(keys)  # genuinely aliasing
+    idx = Index.build(keys, method="pgm", eps=64, gap_rho=0.1)
+    # auto-resolution: large batches still route to the exact host path
+    assert idx.resolve_backend(10_000).name == "numpy-oracle"
+    absent = np.setdiff1d(keys[:2048] + 1.0, keys)
+    res = idx.lookup(absent)
+    assert not res.found.any() and np.all(res.payloads == -1)
+    for be in ("xla-windowed", "pallas"):
+        with pytest.raises(ValueError, match="alias|hi/lo"):
+            idx.lookup(keys[:1024], backend=be)
+    # ingesting keys that alias EACH OTHER's pair into a device-backed
+    # index drops the engine (the registry then serves host-side)
+    x = make_keys("uniform_int", 9_000, seed=10)
+    idx2 = Index.build(x, method="pgm", eps=64, gap_rho=0.2)
+    idx2.lookup(np.sort(np.random.default_rng(0).choice(x, 4096)),
+                backend="xla-windowed")
+    assert idx2._engine is not None
+    big1 = float(2 ** 52 + 2 ** 27)      # pair-exact
+    big2 = big1 + 1.0                    # distinct key, SAME pair
+    assert keys_pair_exact(np.array([big1]))
+    assert not keys_pair_exact(np.array([big2]))
+    rep = idx2.ingest(np.array([big1, big2]), np.array([123, 124]))
+    assert rep.device == "none" and idx2._engine is None
+    res = idx2.lookup(np.full(4096, big2))
+    assert res.backend == "numpy-oracle"
+    assert np.all(res.payloads == 124)
+
+
+def test_no_plm_mechanism_serves_on_host():
+    """btree exports no piecewise linear model; large batches must fall
+    back to the host instead of crashing in the device freeze."""
+    x = make_keys("uniform_int", 6_000, seed=11)
+    idx = Index.build(x, method="btree", page_size=128)
+    q = np.concatenate([x[:900], x[:124] + 0.5])
+    res = idx.lookup(np.tile(q, 2))  # 2048 queries >= min_device_batch
+    assert res.backend == "numpy-oracle"
+    truth = np.where(np.isin(np.tile(q, 2), x),
+                     np.searchsorted(x, np.tile(q, 2)), -1)
+    assert np.array_equal(res.payloads, truth)
+    with pytest.raises(ValueError, match="piecewise linear"):
+        idx.lookup(q, backend="xla-windowed")
+
+
+def test_capability_checks_track_ingested_keys():
+    """_key_caps follows the LIVE key set: ingesting >2^24 keys into a
+    narrow-key index flips the pallas capability check."""
+    x = make_keys("uniform_int", 8_000, seed=12)  # < 2^22: narrow
+    idx = Index.build(x, method="pgm", eps=64, gap_rho=0.2)
+    idx.lookup(x[:1024], backend="pallas")  # narrow: accepted
+    idx.ingest(np.array([2.0 ** 30 + 1]), np.array([5]))
+    with pytest.raises(ValueError, match="hi/lo"):
+        idx.lookup(x[:1024], backend="pallas")
+    res = idx.lookup(np.full(4096, 2.0 ** 30 + 1),
+                     backend="xla-windowed")
+    assert np.all(res.payloads == 5)
+
+
+def test_ingest_requires_gaps():
+    x = make_keys("uniform_int", 5_000, seed=8)
+    idx = Index.build(x, method="pgm", eps=64)
+    with pytest.raises(NotImplementedError):
+        idx.ingest(np.array([1.5]), np.array([1]))

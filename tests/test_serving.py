@@ -28,6 +28,40 @@ def test_paged_kv_alloc_lookup_free():
     assert kv.utilization < 12 / 256 + 1e-9
 
 
+def test_paged_kv_composite_keys_above_2_24_on_device():
+    """Regression (ROADMAP "f64 device keys"): composite keys beyond f32
+    exactness (request_id >= 16 puts table_key past 2^24) must resolve on
+    the DEVICE path bit-identically to the host oracle — they ride the
+    f32 hi/lo pair representation instead of falling back to the host."""
+    from repro.serving.kv_cache import table_key
+
+    kv = PagedKVCache.create(n_pages=4096, page_size=16,
+                             expected_requests=64)
+    rng = np.random.default_rng(0)
+    # request ids up to 2^21: table keys up to ~2^41 >> 2^24
+    rids = np.unique(rng.integers(16, 2 ** 21, 300)).astype(np.int64)
+    phys = {}
+    pages = np.arange(4)
+    for rid in rids.tolist():
+        got = kv.alloc_batch(np.full(4, rid), pages)
+        for p, ph in zip(pages, got):
+            phys[(rid, int(p))] = int(ph)
+    q_rids = np.repeat(rids, 4)
+    q_pages = np.tile(pages, len(rids))
+    assert float(table_key(int(q_rids.max()), 3)) > 2 ** 24
+    want = np.array([phys[(r, p)] for r, p in zip(q_rids, q_pages)])
+    # force the device engine (explicit) and compare with the host path
+    got_dev = kv.lookup_batch(q_rids, q_pages, device=True)
+    got_host = kv.lookup_batch(q_rids, q_pages, device=False)
+    assert np.array_equal(got_host, want)
+    assert np.array_equal(got_dev, want)
+    assert kv.index._keys_wide()  # the pair representation was exercised
+    # unmapped (request, page) pairs miss on both paths
+    miss_dev = kv.lookup_batch(np.array([2 ** 21 + 7]), np.array([9]),
+                               device=True)
+    assert miss_dev[0] == -1
+
+
 def test_paged_kv_exhaustion():
     kv = PagedKVCache.create(n_pages=4, page_size=16, expected_requests=2)
     for p in range(4):
