@@ -8,6 +8,15 @@ Ingest now goes through the vectorized ``insert_batch`` (batched §5.3
 dynamic insert); each batch also replays sequential per-key ``insert()``
 calls on a copy to report the batched-vs-sequential speedup (the two
 paths are state-identical — asserted in tests/test_dynamic*).
+
+Device staleness (``run_device_staleness``): clustered ingest bursts on
+an epoch-versioned ``Index`` whose device state follows via DELTA
+updates only (policy refreeze off), comparing the compacted-fallback
+rate of the delta-synced engine — whose window bounds and fused rank
+rows are incrementally refreshed for the touched segments — against a
+fully refrozen copy.  The acceptance bar: the delta arm's fallback rate
+stays within 2x of the post-refreeze rate instead of climbing until the
+policy refreeze (ROADMAP "stale-window refresh").
 """
 
 from __future__ import annotations
@@ -17,7 +26,7 @@ import time
 
 import numpy as np
 
-from repro.core import LearnedIndex
+from repro.core import Index, LearnedIndex
 
 from .common import measure
 from .datasets import iot
@@ -87,6 +96,79 @@ def run(n=None, seed=0, method="pgm", eps=128, rho=0.3, batches=5):
                  "us": 0.0,
                  "geomean": float(np.exp(np.mean(np.log(sp)))),
                  "min": float(min(sp)), "max": float(max(sp))})
+    rows += run_device_staleness(n=min(n, 120_000) if n else 120_000,
+                                 seed=seed)
+    return rows
+
+
+def run_device_staleness(n=120_000, seed=0, rounds=4, probe_n=8_192):
+    """Three arms, identical host mutations, compacted-fallback rate per
+    ingest round on the FUSED device path (no overflow escape on that
+    path, so the reported counts are the raw flag rates):
+
+    * ``refresh``  — delta-synced device state WITH the incremental
+      per-segment bound + rank-row refresh (the default);
+    * ``stale``    — delta-synced with the refresh disabled
+      (``refresh_segments_frac = 0``): what the fallback rate does when
+      the frozen tables drift under the mutations;
+    * ``refreeze`` — full rebuild per round (the expensive gold arm).
+
+    Ingest bursts are CLUSTERED (contiguous key-range slices — the
+    allocation pattern serving actually produces), so only a small
+    fraction of segments is touched per round and the incremental
+    refresh engages instead of being skipped as near-global churn.
+    The acceptance bar: refresh-arm rate within 2x of the refreeze-arm
+    rate on every round.
+    """
+    keys = np.unique(np.round(iot(n) * 64.0))  # f32-exact device grid
+    rng = np.random.default_rng(seed)
+
+    def build():
+        idx = Index.build(keys, method="pgm", eps=64, gap_rho=0.15)
+        idx.refreeze_contested_frac = 1.1   # policy off: pure delta
+        idx.refreeze_link_growth = 10.0
+        idx.sync_device()
+        return idx
+
+    idx = build()
+    stale = build()
+    stale.refresh_segments_frac = 0.0       # refresh disabled
+    mids = np.setdiff1d(keys[:-1] + np.rint(np.diff(keys) * 0.5), keys)
+    lo = len(mids) // 4  # clustered bursts from one key-range slice
+    burst = max(1_000, len(mids) // 40)
+    rows = []
+    for r in range(rounds):
+        batch = mids[lo + r * burst: lo + (r + 1) * burst]
+        pays = 9_000_000 + r * burst + np.arange(len(batch))
+        idx.ingest(batch, pays)
+        stale.ingest(batch, pays)
+        assert idx.stats["refreezes"] == 1  # still the delta arm
+        probe = np.concatenate([
+            rng.choice(keys, probe_n // 2),
+            rng.choice(mids[lo: lo + (r + 1) * burst], probe_n // 2)])
+        fresh = copy.deepcopy(idx)      # device dropped by deepcopy
+        fresh.refreeze()
+        t0 = time.perf_counter_ns()
+        res_d = idx.lookup(probe, backend="fused")
+        dt = (time.perf_counter_ns() - t0) / max(probe_n, 1)
+        res_s = stale.lookup(probe, backend="fused")
+        res_f = fresh.lookup(probe, backend="fused")
+        assert np.array_equal(res_d.payloads, res_f.payloads)
+        assert np.array_equal(res_s.payloads, res_f.payloads)
+        rate = lambda res: res.fallbacks / max(probe_n, 1)  # noqa: E731
+        floor = 1.0 / probe_n  # one fallback, for a stable ratio
+        rows.append({
+            "name": f"device_staleness.round{r + 1}",
+            "overall_ns": dt,
+            "fallback_rate_refresh": rate(res_d),
+            "fallback_rate_stale": rate(res_s),
+            "fallback_rate_refreeze": rate(res_f),
+            "ratio_vs_refreeze": (rate(res_d) + floor)
+            / (rate(res_f) + floor),
+            "stale_ratio_vs_refreeze": (rate(res_s) + floor)
+            / (rate(res_f) + floor),
+            "bound_refreshes": idx.stats["bound_refreshes"],
+        })
     return rows
 
 

@@ -1,19 +1,23 @@
-"""Single-pass query engine benchmark: engine (windowed search +
-compacted fallback) vs the full-searchsorted oracle path, plus the
-roofline-relevant bytes/query accounting, plus the ``Index`` handle's
-ingest-to-queryable comparison (delta-updated device buffers vs a full
-refreeze) written to ``BENCH_api.json``.
+"""Fused single-dispatch engine benchmark: the fused lookup path (rank-
+routed bounded search + fused epilogue + O(#escapes) host patch; the
+Pallas fused kernel on TPU, the lean XLA graph on CPU) vs the
+full-searchsorted device oracle, across the small/medium/large batch
+regime — plus the ``Index`` handle's ingest-to-queryable comparison
+(delta-updated device buffers vs a full refreeze) written to
+``BENCH_api.json``.
 
-The engine's CPU backend is the XLA windowed bisect (the Pallas kernel
-is the TPU deploy target; ``interpret=True`` runs its body in Python and
-is validated for correctness, not timed).  Before PR 1 the kernel
-path ran the full-array oracle over EVERY query as an unconditional
-fallback pass, so it was strictly slower than the oracle it wrapped;
-the "before" column is therefore the oracle path itself (a lower bound
-on the old cost).
+The sweep covers q512/q1024/q4096/q32768 and records the CROSSOVER
+(smallest batch where the fused path is at least as fast as the
+oracle): PR 2's multi-op windowed backend paid per-op dispatch overhead
+and LOST to the oracle below ~8k queries (0.98x at q4096 in the
+recorded trajectory) — the fused path exists to own exactly that
+regime.  Both fused Pallas variants (legacy multi-op and fused
+single-dispatch) are validated for bit-identity in interpret mode; the
+timed CPU arm is the fused XLA graph.
 
 Also writes ``BENCH_kernel.json`` at the repo root — the perf
-trajectory file tracked across PRs (benchmarks/run.py gates on it).
+trajectory file tracked across PRs (benchmarks/run.py gates on it,
+including the recorded crossover).
 """
 
 from __future__ import annotations
@@ -69,14 +73,15 @@ def run(n=None, seed=0):
     # f32-exact grid for the device path
     keys = np.unique(np.round(keys * 64.0))
     idx = LearnedIndex.build(keys, method="pgm", eps=64, gap_rho=0.15)
-    engine = QueryEngine.from_index(idx)          # xla windowed on CPU
+    engine = QueryEngine.from_index(idx)          # fused (XLA on CPU)
     oracle = QueryEngine.from_index(idx, backend="oracle")
     arrs = from_learned_index(idx)
     err_lo = idx.mech.plm.err_lo
+    err_hi = idx.mech.plm.err_hi
     rng = np.random.default_rng(seed)
     rows = []
     w_tile = 2048
-    for n_q in (4096, 32768):
+    for n_q in (512, 1024, 4096, 32768):
         q = rng.choice(keys, n_q)
         escapes_before = engine.stats["oracle_escapes"]
         t_oracle, t_engine = _best_ns_pair(
@@ -85,9 +90,15 @@ def run(n=None, seed=0):
         out_o = np.asarray(oracle.lookup(q)[0])
         out_e, _, _, fb = engine.lookup(q)
         assert np.array_equal(np.asarray(out_e), out_o)
-        # Pallas kernel (interpret): correctness + fallback-rate only
+        # Pallas kernels (interpret): correctness + fallback-rate only —
+        # the legacy multi-op kernel and the fused single-dispatch one
         out_k, _, _, fb_k = batched_lookup(arrs, err_lo, q, interpret=True)
         assert np.array_equal(np.asarray(out_k), out_o)
+        if n_q <= 4096:  # interpret mode runs the body in Python
+            out_fk, _, _, _ = batched_lookup(
+                arrs, err_lo, q, backend="fused-pallas",
+                err_hi_by_seg=err_hi, interpret=True)
+            assert np.array_equal(np.asarray(out_fk), out_o)
         # numpy reference
         t_numpy = _best_ns(lambda: idx.gapped.lookup_batch(q), n_q, reps=3)
         rows.append({
@@ -242,13 +253,27 @@ def run_api(keys=None, seed=0, rounds=5, write=True):
     return rows
 
 
+def crossover_queries(rows):
+    """Smallest benchmarked batch size where the engine is at least as
+    fast as the device oracle (None if it never is)."""
+    xs = sorted(
+        (int(r["name"].split(".q")[1]), r["speedup_vs_oracle"])
+        for r in rows if r["name"].startswith("lookup.q"))
+    for n_q, sp in xs:
+        if sp >= 1.0:
+            return n_q
+    return None
+
+
 def _write_trajectory(rows):
-    """BENCH_kernel.json at the repo root: before (oracle ns/query — a
-    lower bound on the old always-double-resolve kernel path) vs after
-    (single-pass compacted path) per batch size."""
+    """BENCH_kernel.json at the repo root: before (device oracle
+    ns/query — the searchsorted path the engine must beat at EVERY
+    batch size) vs after (fused single-dispatch path) per batch size,
+    plus the recorded small-batch crossover the run.py gate guards."""
     payload = {
         "benchmark": "kernel.single_pass_engine",
         "dataset": "iot",
+        "crossover_vs_oracle_queries": crossover_queries(rows),
         "rows": [
             {
                 "batch": r["name"],

@@ -66,6 +66,12 @@ TRAJECTORIES = {
          "bit_identical"},
     ),
 }
+# required TOP-LEVEL fields per trajectory file (beyond "rows"):
+# the kernel file must RECORD its small-batch crossover so the gate can
+# see the fused path losing the regime this sweep exists to guard
+TOP_LEVEL_REQUIRED = {
+    "BENCH_kernel.json": {"crossover_vs_oracle_queries"},
+}
 REGRESSION_FACTOR = 1.25
 
 
@@ -99,6 +105,9 @@ def check_trajectories(recorded: dict, *, regressions: bool = True) -> list:
         if not isinstance(rows, list) or not rows:
             errors.append(f"{name}: schema — 'rows' missing or empty")
             continue
+        for key in TOP_LEVEL_REQUIRED.get(name, ()):
+            if key not in fresh:
+                errors.append(f"{name}: schema — top-level '{key}' missing")
         for i, row in enumerate(rows):
             missing = required - set(row)
             if missing:
@@ -128,7 +137,59 @@ def check_trajectories(recorded: dict, *, regressions: bool = True) -> list:
     return errors
 
 
+def smoke() -> None:
+    """``python -m benchmarks.run --smoke`` — cheap CI gate called from
+    scripts/tier1.sh: validates the COMMITTED trajectory schemas (so
+    benchmark schema drift fails tier-1 without paying for a timed
+    sweep) and runs a tiny-shape engine sanity check (fused / oracle /
+    both Pallas kernels bit-identical; fused scheduling engaged).  No
+    timing, no gate, no file writes."""
+    # same validator the timed sweep uses, pointed at the COMMITTED
+    # files (no recorded baseline -> no regression compare)
+    errors = check_trajectories({}, regressions=False)
+
+    # tiny-shape sanity: the whole fused read path on a toy index
+    import numpy as np
+
+    from repro.core import Index
+    from repro.kernels import QueryEngine, batched_lookup, \
+        from_learned_index
+
+    rng = np.random.default_rng(0)
+    keys = np.unique(rng.choice(2 ** 22, 20_000, replace=False)
+                     ).astype(np.float64)
+    idx = Index.build(keys, method="pgm", eps=64, gap_rho=0.2)
+    arrs = from_learned_index(idx)
+    plm = idx.mech.plm
+    q = np.concatenate([rng.choice(keys, 1500),
+                        rng.choice(keys, 200) + 0.5,
+                        [keys[0] - 5.0, keys[-1] + 5.0]])
+    out_o, *_ = batched_lookup(arrs, plm.err_lo, q, backend="oracle")
+    for be in ("fused", "fused-pallas", "pallas"):
+        out, *_ = batched_lookup(arrs, plm.err_lo, q, backend=be,
+                                 err_hi_by_seg=plm.err_hi, interpret=True)
+        if not np.array_equal(np.asarray(out), np.asarray(out_o)):
+            errors.append(f"smoke: backend {be} diverged from the oracle")
+    eng = QueryEngine.from_index(idx)
+    out, *_ = eng.lookup(q)
+    if eng.last_stage != "fused":
+        errors.append(f"smoke: engine scheduled {eng.last_stage!r}, "
+                      "expected 'fused'")
+    if not np.array_equal(np.asarray(out), np.asarray(out_o)):
+        errors.append("smoke: engine fused lookup diverged from oracle")
+
+    for e in errors:
+        print(f"# SMOKE: {e}", file=sys.stderr)
+    if errors:
+        sys.exit(1)
+    print("# SMOKE: trajectory schemas valid, tiny-shape engine sanity OK",
+          file=sys.stderr)
+
+
 def main() -> None:
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+        return
     fast = os.environ.get("BENCH_FAST", "0") == "1"
     gate = os.environ.get("BENCH_NO_GATE", "0") != "1"
     n = 60_000 if fast else None

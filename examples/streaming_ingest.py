@@ -69,7 +69,7 @@ def main():
     # delta-scattered into the resident buffers (48-bit content-hash
     # keys ride the f32 hi/lo pair representation on device)
     probe = np.array(added[:512] + batch_keys[:512], np.float64)
-    res = ds.index.lookup(probe, backend="xla-windowed")
+    res = ds.index.lookup(probe, backend="fused")
     print(f"[ingest] spot-check on '{res.backend}': all resolved = "
           f"{bool(res.found.all())}")
     ship_keys = fresh_keys(n_new)
@@ -77,7 +77,7 @@ def main():
             for _ in ship_keys]
     report = ds.ingest_batch(docs, ship_keys)
     res = ds.index.lookup(np.asarray(ship_keys, np.float64),
-                          backend="xla-windowed")
+                          backend="fused")
     print(f"[ingest] next shipment: device sync '{report.device}' "
           f"({report.device_elems} elements, {report.seconds*1e3:.0f} ms "
           f"incl. host insert); all resolved = {bool(res.found.all())}; "

@@ -1,8 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 verify wrapper (see ROADMAP.md): run the full test suite from
-# any cwd with the src tree on PYTHONPATH.  Extra args pass through to
-# pytest, e.g.  scripts/tier1.sh -k handle  or  scripts/tier1.sh -x.
+# any cwd with the src tree on PYTHONPATH, then the benchmark smoke
+# gate (schema + tiny-shape sanity, no timing) so trajectory schema
+# drift fails tier-1 cheaply.  Extra args pass through to pytest,
+# e.g.  scripts/tier1.sh -k handle  or  scripts/tier1.sh -x.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -q "$@"
+python -m pytest -q "$@"
+python -m benchmarks.run --smoke

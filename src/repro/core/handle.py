@@ -35,18 +35,29 @@ Backend capability registry
 =============  ======  ==========  =========  =====================
 name           device  wide keys   min batch  notes
 =============  ======  ==========  =========  =====================
-pallas         yes     no          512        TPU kernel (interpret
-                                              =True runs it on CPU)
-xla-windowed   yes     yes (hi/lo  512        windowed bisect/rank;
-                       f32 pair)              permutation-free
+fused          yes     yes (hi/lo  512        single-dispatch path:
+                       f32 pair)              fused Pallas kernel on
+                                              TPU, minimal-op fused
+                                              XLA graph elsewhere
+pallas         yes     no          512        LEGACY multi-op TPU
+                                              kernel (debug/ref;
+                                              interpret=True on CPU)
+xla-windowed   yes     yes (hi/lo  512        legacy multi-op
+                       f32 pair)              windowed bisect/rank
+                                              (debug/reference)
 numpy-oracle   no      yes (f64)   0          host reference; exact
 =============  ======  ==========  =========  =====================
 
 ``lookup(backend=None)`` resolves: small batches go to ``numpy-oracle``;
-large batches to ``pallas`` on TPU (narrow keys) else ``xla-windowed``.
-Explicitly requesting a backend that cannot serve the index (e.g.
+everything else to ``fused`` — the single-dispatch path serves narrow
+AND wide (hi/lo pair) keys on every platform, so it owns the whole
+device regime including the small/medium batches the legacy multi-op
+paths used to lose to the oracle.  ``pallas`` / ``xla-windowed`` remain
+explicitly requestable as debug/reference stages.  Explicitly
+requesting a backend that cannot serve the index (e.g. the legacy
 ``pallas`` with >2^24 composite keys) raises with the capability that
-failed.
+failed; keys aliasing beyond pair exactness (~2^48) refuse every device
+backend.
 """
 
 from __future__ import annotations
@@ -93,6 +104,8 @@ class BackendSpec:
 
 
 BACKENDS: Dict[str, BackendSpec] = {
+    "fused": BackendSpec("fused", device=True, wide_keys=True,
+                         min_batch=512, engine_backend="fused"),
     "pallas": BackendSpec("pallas", device=True, wide_keys=False,
                           min_batch=512, engine_backend="pallas"),
     "xla-windowed": BackendSpec("xla-windowed", device=True, wide_keys=True,
@@ -122,6 +135,10 @@ class Index:
     refreeze_contested_frac: float = 0.25
     refreeze_link_growth: float = 0.10
     min_device_batch: int = 512
+    # delta updates refresh window bounds for touched segments only;
+    # past this fraction of all segments the refresh is skipped (stale
+    # bounds are sound — the refreeze policy catches sustained growth)
+    refresh_segments_frac: float = 0.25
     # --- device state (rebuilt lazily; dropped on deepcopy) -----------
     _engine: object = dataclasses.field(default=None, repr=False,
                                         compare=False)
@@ -131,9 +148,14 @@ class Index:
                                            compare=False)
     _keycap_cache: object = dataclasses.field(default=None, repr=False,
                                               compare=False)
+    # mutated key values since the last device sync — feeds the
+    # incremental window-bound refresh (chain inserts never show up in
+    # the device slot diff, so the handle logs them itself)
+    _pending_touch: list = dataclasses.field(default_factory=list,
+                                             repr=False, compare=False)
     stats: dict = dataclasses.field(default_factory=lambda: {
         "refreezes": 0, "delta_updates": 0, "delta_elems": 0,
-        "lookups": 0, "ingests": 0})
+        "lookups": 0, "ingests": 0, "bound_refreshes": 0})
 
     # ------------------------------------------------------------------
     @classmethod
@@ -213,6 +235,7 @@ class Index:
             refreeze_contested_frac=self.refreeze_contested_frac,
             refreeze_link_growth=self.refreeze_link_growth,
             min_device_batch=self.min_device_batch,
+            refresh_segments_frac=self.refresh_segments_frac,
             stats=dict(self.stats),
         )
         new.__class__ = self.__class__
@@ -343,10 +366,10 @@ class Index:
         wide, exact = self._key_caps()
         if wide and not exact:  # beyond 2^48: only the host is exact
             return BACKENDS["numpy-oracle"]
-        pallas = BACKENDS["pallas"]
-        if pallas.available() and not wide:
-            return pallas
-        return BACKENDS["xla-windowed"]
+        # the fused single-dispatch path serves narrow and wide (hi/lo
+        # pair) keys on every platform; the engine picks the Pallas
+        # kernel vs the fused XLA graph by platform (engine.fused_impl)
+        return BACKENDS["fused"]
 
     # ------------------------------------------------------------------
     # device state lifecycle
@@ -357,8 +380,19 @@ class Index:
         from ..kernels import ops as _ops
         self._engine, self._mirror = _ops.freeze_state(self)
         self._device_epoch = self.epoch
+        self._pending_touch = []  # fresh bounds cover everything logged
         self.stats["refreezes"] += 1
         return self._engine
+
+    def _log_touch(self, keys) -> None:
+        """Record mutated key values for the next delta's incremental
+        window-bound refresh (cleared by any device sync)."""
+        keys = np.atleast_1d(np.asarray(keys, np.float64))
+        if keys.size:
+            self._pending_touch.append(keys)
+            if len(self._pending_touch) > 32:  # bound the log
+                self._pending_touch = [
+                    np.unique(np.concatenate(self._pending_touch))]
 
     def sync_device(self):
         """Bring the frozen device state to the current epoch NOW (delta
@@ -375,15 +409,64 @@ class Index:
             return self._engine
         from ..kernels import ops as _ops
         if prefer_delta:
-            new_arrays, n_elems = _ops.delta_update(
+            new_arrays, n_elems, touched_keys = _ops.delta_update(
                 self._engine.arrays, self._mirror, self)
             if new_arrays is not None:
                 self._engine.swap_arrays(new_arrays)
                 self._device_epoch = self.epoch
                 self.stats["delta_updates"] += 1
                 self.stats["delta_elems"] += n_elems
+                pending = ([np.asarray(touched_keys, np.float64)]
+                           if touched_keys is not None else [])
+                pending += [np.asarray(a, np.float64)
+                            for a in self._pending_touch]
+                self._pending_touch = []
+                self._refresh_window_bounds(
+                    np.concatenate(pending) if pending
+                    else np.zeros(0, np.float64))
                 return self._engine
         return self.refreeze()
+
+    def _refresh_window_bounds(self, touched_keys) -> None:
+        """Incremental per-segment window-bound refresh after a delta
+        update: only segments whose keys moved (plus their key-order
+        neighbors) recompute, so the compacted-fallback rate stays flat
+        under chain growth instead of climbing until the policy
+        refreeze.  Near-global churn (more than
+        ``refresh_segments_frac`` of the segments touched) skips the
+        refresh — stale bounds are SOUND (they only cost fallbacks) and
+        the refreeze policy catches sustained growth.
+        """
+        eng = self._engine
+        if (eng is None or touched_keys is None
+                or np.asarray(touched_keys).size == 0
+                or self.refresh_segments_frac <= 0):  # refresh disabled
+            return
+        plm = getattr(self.mech, "plm", None)
+        if plm is None:
+            return
+        from ..kernels import ops as _ops
+        # fused-path rank table: refresh only the touched buckets
+        eng.refresh_rank_rows(touched_keys, self.gapped.slot_key)
+        segs = np.unique(plm.segment_of(np.asarray(touched_keys,
+                                                   np.float64)))
+        # boundary terms reach into the neighboring segments' key spans
+        segs = np.unique(np.clip(
+            np.concatenate([segs - 1, segs, segs + 1]),
+            0, plm.n_segments - 1))
+        # the frac rule caps the refresh cost on big indexes; the floor
+        # keeps small-K indexes (where a refresh is trivially cheap)
+        # from reading every clustered burst as global churn
+        if segs.size > max(8.0, self.refresh_segments_frac
+                           * plm.n_segments):
+            return
+        err_hi_prev = (eng.err_hi if eng.err_hi is not None
+                       else np.zeros_like(eng.err_lo))
+        lo, hi = _ops.query_window_bounds(
+            self, segments=segs, base=(eng.err_lo, err_hi_prev))
+        eng.refresh_bounds(lo, hi)
+        self.stats["bound_refreshes"] = (
+            self.stats.get("bound_refreshes", 0) + 1)
 
     def _link_growth_fraction(self) -> float:
         """Chained keys added since the last freeze, relative to the
@@ -428,8 +511,10 @@ class Index:
             backend=spec.engine_backend, force_backend=backend is not None)
         # label the search stage that ACTUALLY ran: the engine's
         # size-aware scheduler may run the device oracle for small
-        # default-resolved buckets (explicit requests are forced)
-        stage = {"pallas": "pallas", "xla": "xla-windowed",
+        # default-resolved legacy-xla buckets (explicit requests are
+        # forced), and overflow escapes land on the device oracle
+        stage = {"fused": "fused", "pallas": "pallas",
+                 "xla": "xla-windowed",
                  "oracle": "device-oracle"}[engine.last_stage]
         return LookupResult(
             payloads=np.asarray(out).astype(np.int64),
@@ -460,6 +545,7 @@ class Index:
         payloads = np.atleast_1d(np.asarray(payloads, np.int64))
         counts = self.gapped.insert_batch(keys, payloads)
         self._key_caps_after_batch(keys)
+        self._log_touch(keys)
         self.stats["ingests"] += 1
         device = "none"
         elems = 0
@@ -505,9 +591,10 @@ class Index:
         """Batched delete; device state follows lazily (next device
         lookup delta-updates or refreezes as needed)."""
         self._need_gapped()
-        n = self.gapped.delete_batch(np.atleast_1d(
-            np.asarray(keys, np.float64)))
+        keys = np.atleast_1d(np.asarray(keys, np.float64))
+        n = self.gapped.delete_batch(keys)
         self._roll_caps()
+        self._log_touch(keys)
         return n
 
     # scalar host ops (thin delegates; epoch bumps via gapped.version)
@@ -515,24 +602,29 @@ class Index:
         self._need_gapped()
         path = self.gapped.insert(key, payload)
         self._key_caps_after_batch(np.array([key], np.float64))
+        self._log_touch(np.array([key], np.float64))
         return path
 
     def insert_batch(self, keys: np.ndarray, payloads: np.ndarray) -> dict:
         """Raw batched insert returning §5.3 path counts (host only; use
         ``ingest`` for the typed report + eager device sync)."""
         self._need_gapped()
-        return self.gapped.insert_batch(keys, payloads)
+        counts = self.gapped.insert_batch(keys, payloads)
+        self._log_touch(keys)
+        return counts
 
     def delete(self, key: float) -> bool:
         self._need_gapped()
         out = self.gapped.delete(key)
         self._roll_caps()
+        self._log_touch(np.array([key], np.float64))
         return out
 
     def delete_batch(self, keys: np.ndarray) -> int:
         self._need_gapped()
         out = self.gapped.delete_batch(keys)
         self._roll_caps()
+        self._log_touch(np.asarray(keys, np.float64))
         return out
 
     def update(self, key: float, payload: int) -> bool:

@@ -3,11 +3,16 @@ learned-index lookup (predict + bounded rank-search over VMEM tiles).
 
 Modules
 -------
-lookup.py: pl.pallas_call + BlockSpec (+scalar-prefetch dynamic windows)
-ops.py:    the single-pass pipeline, ``QueryEngine``, and the epoch-
-           versioned freeze/delta-update entry points
-ref.py:    pure-jnp oracle the kernel is validated against + the shared
-           ``chain_hit_index`` fori_loop CSR scan (hi/lo pair aware).
+lookup.py: the FUSED single-dispatch kernel (radix routing + bounded
+           search + CSR chain epilogue + payload gather + in-kernel
+           fallback flag/compaction, f32 hi/lo pair aware) and the
+           legacy multi-op window kernel, both pl.pallas_call +
+           BlockSpec (+scalar-prefetch dynamic windows)
+ops.py:    the fused XLA pipeline, the legacy multi-op pipeline,
+           ``QueryEngine``, and the epoch-versioned freeze/delta-update
+           + incremental bound/rank refresh entry points
+ref.py:    pure-jnp oracle the kernels are validated against + the
+           shared ``chain_hit_index`` fori_loop CSR scan (pair aware).
 
 The ``Index`` handle contract (who calls what)
 ----------------------------------------------
@@ -19,73 +24,99 @@ resident device buffers current across host mutations by **epoch**:
   epoch it was frozen at;
 * a stale device lookup first calls ``delta_update`` — it re-derives the
   padded numpy images (cheap), diffs them against the host mirror, and
-  scatters ONLY changed elements (slot_key/payload entries for slot
-  placements, CSR link-table tails + shifted offsets for chain appends)
-  into the device buffers.  Shapes and jit statics are frozen with
-  headroom, so compiled executables survive;
+  scatters ONLY changed elements into the device buffers.  Shapes and
+  jit statics are frozen with headroom, so compiled executables survive;
+* after a delta the handle INCREMENTALLY refreshes the derived read
+  tables for just the touched key ranges: the fused path's bucket->rank
+  rows (``QueryEngine.refresh_rank_rows``) and the per-segment window
+  bounds (``query_window_bounds(segments=...)`` ->
+  ``QueryEngine.refresh_bounds``) — so the compacted-fallback rate
+  stays flat under churn instead of climbing until the policy refreeze.
+  Skipped refreshes are SOUND: stale tables only raise fallbacks,
+  never wrong results;
 * ``delta_update`` declines — and the handle takes a full refreeze —
   when a capacity/static no longer holds (link storage, max-chain
   headroom, payload i32 width, key f32 width) or the diff would touch
-  most of the buffers.  Stale window bounds after a delta are SOUND:
-  they only raise the compacted-fallback rate, never wrong results.
+  most of the buffers.
 
-Backend capability table (mirrored by ``repro.core.BACKENDS``)
---------------------------------------------------------------
-=============  ==============  ===========  ==============================
-engine name    handle name     wide keys    search stage
-=============  ==============  ===========  ==============================
-``pallas``     pallas          no           TPU kernel, VMEM window tiles
-                                            (``interpret=True`` on CPU)
-``xla``        xla-windowed    yes          fixed-trip windowed bisect /
-                                            loop-free flat rank count
-``oracle``     (device oracle) yes          full-array searchsorted /
-                                            pair bisect
-(host numpy)   numpy-oracle    yes (f64)    GappedArray.lookup_batch
-=============  ==============  ===========  ==============================
+Backend decision table (mirrored by ``repro.core.BACKENDS``)
+------------------------------------------------------------
+=============  ==============  =====  ====================================
+engine name    handle name     wide   search stage
+=============  ==============  =====  ====================================
+``fused``      fused           yes    THE default device path, one lean
+                                      dispatch at every batch size:
+                                      * TPU: fused Pallas kernel — in-
+                                        kernel radix routing, windowed
+                                        search over VMEM tiles, CSR chain
+                                        epilogue, payload gather, per-tile
+                                        fallback compaction;
+                                      * CPU/GPU: fused XLA graph — one
+                                        bucket->slot-rank table collapses
+                                        route+predict+window into two
+                                        gathers + a ~log2(p99 occupancy)
+                                        bisect; escapes return as a MASK
+                                        and are patched in O(#escapes)
+                                        host numpy (no device compaction —
+                                        XLA-CPU scatters/cumsums are
+                                        scalar loops).
+``pallas``     pallas          no     LEGACY multi-op kernel (debug/ref;
+                                      ``interpret=True`` on CPU)
+``xla``        xla-windowed    yes    legacy multi-op windowed bisect /
+                                      flat rank count (debug/reference;
+                                      non-forced requests below
+                                      ``xla_min_bucket`` downgrade to the
+                                      device oracle)
+``oracle``     (device oracle) yes    full-array searchsorted/pair bisect
+(host numpy)   numpy-oracle    yes    GappedArray.lookup_batch (default
+                                      below ``min_device_batch``)
+=============  ==============  =====  ====================================
 
 Wide keys: beyond f32 exactness (2^24) keys ride an f32 hi/lo pair
 (``split_key_pair``) — lexicographic pair order == numeric order, exact
-for integer keys < 2^48.  The Pallas kernel is narrow-only; the registry
-routes wide indexes to the XLA backend.
+for integer keys < 2^48.  BOTH fused implementations compare pairs end
+to end, so wide keys (e.g. paged-KV composite keys) finally have a
+device kernel path; only the legacy kernel is narrow-only.
 
-Single-pass pipeline contract
------------------------------
+Fused-path contract
+-------------------
 ``engine.lookup(queries, queries_sorted=..., backend=...)`` returns
 ``(payloads, slot, found, fb_count)`` — ``found`` covers first-level AND
 linking-chain hits (the ``LookupResult.found`` mask).
 
-1. **Single pass**: each query is resolved by exactly one bounded window
-   search.  The full-array oracle is evaluated ONLY over the compacted
-   fallback buffer — capacity ``max(q_tile, ~2% of Q)``, shape-static —
-   never over the whole batch.  If the buffer overflows, a host-side
-   escape hatch re-dispatches the batch to the oracle backend (counted
-   in ``engine.stats["oracle_escapes"]``; rare by construction).
-2. **Sort-aware scheduling**: the Pallas path needs ascending queries;
+1. **Single dispatch**: the whole route -> search -> chain epilogue ->
+   payload pipeline runs in one device invocation.  Escaped queries
+   (rank-row staleness, p99-truncated bisect, tile-window misses) are
+   flagged by a bracket validation that makes results exact INDEPENDENT
+   of the routing tables, and re-resolved in O(#escapes): host numpy on
+   the fused XLA path, a compacted fixed-capacity device buffer behind
+   a ``lax.cond`` on the fused Pallas path.
+2. **Small-batch regime**: the fused path is never downgraded — it owns
+   every bucket size (the recorded crossover vs the device oracle in
+   ``BENCH_kernel.json`` is the gate).
+3. **Sort-aware scheduling**: the Pallas paths need ascending queries;
    callers that already issue sorted batches pass ``queries_sorted=True``
-   and skip the argsort + inverse-permutation round trip.  The XLA and
-   oracle backends are permutation-free.
-3. **Shape buckets**: query batches are padded (+inf tail — sorted stays
+   and skip the lexsort/argsort round trip.  The fused XLA and oracle
+   backends are permutation-free.
+4. **Shape buckets**: query batches are padded (+inf tail — sorted stays
    sorted) up to power-of-two buckets so each bucket compiles once.
-4. **Fused epilogue**: slot->payload gather and the CSR linking-array
-   scan run in one stage; the chain scan is a rolled ``lax.fori_loop``
-   bisect — one graph copy regardless of ``max_chain``.
 5. **Wide payloads**: int64 payloads are carried as an i32 hi/lo pair
-   and reconstructed in the epilogue (``IndexArrays.wide``).
+   and reconstructed after the epilogue (``IndexArrays.wide``).
 
 Migration notes
 ---------------
 ``QueryEngine.from_index(idx)`` + manual refreeze-after-mutation is the
 legacy pattern; prefer holding a ``repro.core.Index`` and calling
-``index.lookup`` / ``index.ingest`` — the handle schedules freezes and
-delta updates for you and returns typed results.  ``from_learned_index``
-remains the raw freeze (no headroom, no mirror) for kernel tests and
-benchmarks.
+``index.lookup`` / ``index.ingest`` — the handle schedules freezes,
+delta updates, and incremental refreshes for you and returns typed
+results.  ``from_learned_index`` remains the raw freeze (no headroom,
+no mirror) for kernel tests and benchmarks.
 """
 
 from .ops import (HostMirror, IndexArrays, QueryEngine, batched_lookup,
-                  delta_update, freeze_state, from_learned_index,
-                  keys_need_pair, keys_pair_exact, pair_alias_free,
-                  split_key_pair)
+                  build_radix_router, build_rank_router, delta_update,
+                  freeze_state, from_learned_index, keys_need_pair,
+                  keys_pair_exact, pair_alias_free, split_key_pair)
 from .ops_gap import gap_positions_device, gap_positions_oracle
 from .ref import chain_hit_index, lookup_ref, predict_ref, resolve_chains
 
@@ -94,6 +125,8 @@ __all__ = [
     "IndexArrays",
     "QueryEngine",
     "batched_lookup",
+    "build_radix_router",
+    "build_rank_router",
     "chain_hit_index",
     "delta_update",
     "freeze_state",

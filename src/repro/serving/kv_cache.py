@@ -115,15 +115,17 @@ class PagedKVCache:
         """Batched (request, page) -> physical page; -1 for unmapped.
 
         ``device=None`` lets the handle's capability registry pick
-        (numpy oracle below ``index.min_device_batch``, the device
-        engine above — composite keys beyond 2^24 ride the f32 hi/lo
-        pair, so there is no host-only guard anymore).
+        (numpy oracle below ``index.min_device_batch``, the fused
+        single-dispatch engine above — composite keys beyond 2^24 ride
+        the f32 hi/lo pair through the fused kernel's pair compares, so
+        wide-key decode batches stay on device with no host-only
+        guard).
         """
         keys = ((request_ids.astype(np.int64) << _PAGE_SHIFT)
                 | logical_pages.astype(np.int64)).astype(np.float64)
         backend = None
         if device is True:
-            backend = "xla-windowed"
+            backend = "fused"
         elif device is False:
             backend = "numpy-oracle"
         qsorted = bool(np.all(np.diff(keys) >= 0))

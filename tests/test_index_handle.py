@@ -147,19 +147,29 @@ def test_scalar_ops_bump_epoch_and_device_follows():
 def test_backend_registry_resolution_and_capabilities():
     x = make_keys("uniform_int", 9_000, seed=6)
     idx = Index.build(x, method="pgm", eps=64, gap_rho=0.1)
-    assert set(BACKENDS) == {"pallas", "xla-windowed", "numpy-oracle"}
-    # size-aware default: small batches host, large device
+    assert set(BACKENDS) == {"fused", "pallas", "xla-windowed",
+                             "numpy-oracle"}
+    # size-aware default: small batches host, large device — and the
+    # device default is the fused single-dispatch path
     assert not idx.resolve_backend(10).device
     assert idx.resolve_backend(10_000).device
+    assert idx.resolve_backend(10_000).name == "fused"
     with pytest.raises(ValueError, match="unknown backend"):
         idx.lookup(x[:4], backend="cuda")
-    # wide keys: explicit pallas refused with the failed capability
-    # (+2^30 offsets need >24 mantissa bits; *2^30 would stay f32-exact)
+    # wide keys: explicit LEGACY pallas refused with the failed
+    # capability (+2^30 offsets need >24 mantissa bits; *2^30 would
+    # stay f32-exact)
     wide_keys = np.unique(x + 2.0 ** 30)
     widx = Index.build(wide_keys, method="pgm", eps=64, gap_rho=0.1)
     with pytest.raises(ValueError, match="hi/lo"):
         widx.lookup(wide_keys[:2048], backend="pallas")
-    # ...but the default resolution serves them (xla-windowed)
+    # ...but the default resolution serves them on device (fused)
+    assert widx.resolve_backend(10_000).name == "fused"
+    res = widx.lookup(wide_keys[:2048])
+    assert res.backend == "fused"
+    assert np.array_equal(res.payloads,
+                          np.searchsorted(wide_keys, wide_keys[:2048]))
+    # the legacy multi-op reference stage still serves explicitly
     res = widx.lookup(wide_keys[:2048], backend="xla-windowed")
     assert np.array_equal(res.payloads,
                           np.searchsorted(wide_keys, wide_keys[:2048]))
@@ -211,7 +221,7 @@ def test_keys_beyond_pair_exactness_stay_on_host():
     absent = np.setdiff1d(keys[:2048] + 1.0, keys)
     res = idx.lookup(absent)
     assert not res.found.any() and np.all(res.payloads == -1)
-    for be in ("xla-windowed", "pallas"):
+    for be in ("fused", "xla-windowed", "pallas"):
         with pytest.raises(ValueError, match="alias|hi/lo"):
             idx.lookup(keys[:1024], backend=be)
     # ingesting keys that alias EACH OTHER's pair into a device-backed
