@@ -7,7 +7,14 @@ no-gap baseline that sees all data (the paper's 1.227x overall claim).
 Ingest now goes through the vectorized ``insert_batch`` (batched §5.3
 dynamic insert); each batch also replays sequential per-key ``insert()``
 calls on a copy to report the batched-vs-sequential speedup (the two
-paths are state-identical — asserted in tests/test_dynamic*).
+paths are state-identical — asserted in tests/test_dynamic*), plus the
+per-batch contested-replay fraction (keys the per-key commutativity
+analysis could not clear — they visit the scalar arrival-order replay).
+
+Writes ``BENCH_ingest.json`` at the repo root: the contested fraction +
+batched-vs-sequential sweep, gated by ``benchmarks.run`` (schema always,
+1.25x speedup regression against the recorded trajectory on full runs;
+``--smoke`` validates the committed schema without timing).
 
 Device staleness (``run_device_staleness``): clustered ingest bursts on
 an epoch-versioned ``Index`` whose device state follows via DELTA
@@ -22,6 +29,8 @@ policy refreeze (ROADMAP "stale-window refresh").
 from __future__ import annotations
 
 import copy
+import json
+import pathlib
 import time
 
 import numpy as np
@@ -31,8 +40,11 @@ from repro.core import Index, LearnedIndex
 from .common import measure
 from .datasets import iot
 
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
-def run(n=None, seed=0, method="pgm", eps=128, rho=0.3, batches=5):
+
+def run(n=None, seed=0, method="pgm", eps=128, rho=0.3, batches=5,
+        write=True):
     keys = iot(n if n else None)
     keys = keys[: min(len(keys), 200_000)]  # dynamic path is host-side
     rng = np.random.default_rng(seed)
@@ -72,7 +84,7 @@ def run(n=None, seed=0, method="pgm", eps=128, rho=0.3, batches=5):
                 t_bat = min(t_bat,
                             (time.perf_counter_ns() - t0) / max(len(batch), 1))
             t0 = time.perf_counter_ns()
-            idx.insert_batch(batch, pay)
+            counts = idx.insert_batch(batch, pay)
             t_bat = min(t_bat,
                         (time.perf_counter_ns() - t0) / max(len(batch), 1))
             seen.append(batch)
@@ -84,18 +96,47 @@ def run(n=None, seed=0, method="pgm", eps=128, rho=0.3, batches=5):
             m["insert_seq_ns"] = t_seq
             m["insert_batch_ns"] = t_bat
             m["insert_speedup"] = t_seq / max(t_bat, 1e-9)
+            m["contested_frac"] = counts["contested"] / max(len(batch), 1)
             rows.append({"name": f"{label}.batch{b+1}", **m})
     # aggregate: geometric-mean batched-vs-sequential insert speedup.
-    # NOTE the sequential arm is the CSR-overlay scalar path this same
+    # NOTE the sequential arm is the CSR-overlay scalar path the PR 2
     # refactor made ~3.5x faster (~25 us/key vs ~90 us/key before);
     # against the pre-CSR sequential baseline the batched path is
-    # ~30-40x.  Write-heavy tail batches sit near ~9x, bounded by the
-    # contested-replay fraction (see ROADMAP).
+    # >100x.  The per-key demotion partition keeps the write-heavy tail
+    # batches' contested-replay fraction in the ~1% range (the per-run
+    # closure left 10-15% there, capping those batches near ~9x).
     sp = [r["insert_speedup"] for r in rows]
     rows.append({"name": "insert_speedup.geomean",
                  "us": 0.0,
                  "geomean": float(np.exp(np.mean(np.log(sp)))),
                  "min": float(min(sp)), "max": float(max(sp))})
+    # reduced sweeps (BENCH_FAST / n override) must NOT overwrite the
+    # repo-root trajectory record the regression gate compares against
+    # (same rule as kernel_bench) — toy-size speedups would read as
+    # phantom regressions on the next full run
+    if write and n is None:
+        payload = {
+            "benchmark": "ingest.batched_vs_sequential",
+            "dataset": "iot",
+            "note": ("per-batch §5.3 batched insert vs sequential "
+                     "insert() on a copy (state-identical arms); "
+                     "contested_frac counts scalar-replay-visited keys "
+                     "across all recursive partition rounds"),
+            "rows": [
+                {"batch": f"ingest.{r['name']}",
+                 "contested_frac": r["contested_frac"],
+                 "insert_seq_ns": r["insert_seq_ns"],
+                 "insert_batch_ns": r["insert_batch_ns"],
+                 "speedup": r["insert_speedup"]}
+                for r in rows if "contested_frac" in r
+            ],
+            "speedup_geomean": float(np.exp(np.mean(np.log(sp)))),
+            "contested_frac_max": float(max(
+                r["contested_frac"] for r in rows
+                if "contested_frac" in r)),
+        }
+        (_ROOT / "BENCH_ingest.json").write_text(
+            json.dumps(payload, indent=2))
     rows += run_device_staleness(n=min(n, 120_000) if n else 120_000,
                                  seed=seed)
     return rows

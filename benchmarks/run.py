@@ -6,12 +6,16 @@ Prints ``name,us_per_call,derived`` CSV.  BENCH_N scales dataset size
 regression gate is skipped — sizes differ — but schemas still validate);
 BENCH_NO_GATE=1 skips the gate entirely.
 
-The kernel module writes two trajectory files at the repo root, both
-validated and gated here after the sweep:
+Three trajectory files are written at the repo root (kernel_bench the
+first two, fig11_dynamic the third), all validated and gated here after
+the sweep:
 
 * ``BENCH_kernel.json`` — single-pass engine ns/query (before/after);
 * ``BENCH_api.json``    — ``Index`` handle ingest-to-queryable latency,
-  delta-updated device sync vs full refreeze (bit-identical lookups).
+  delta-updated device sync vs full refreeze (bit-identical lookups);
+* ``BENCH_ingest.json`` — §5.3 batched-vs-sequential insert sweep with
+  per-batch contested-replay fractions (the per-key demotion
+  partition's signature metric).
 
 The gate fails the run when a fresh ns/query (or delta-path latency)
 regresses more than 1.25x against the RECORDED trajectory (the committed
@@ -65,12 +69,25 @@ TRAJECTORIES = {
         {"batch", "mutation_frac", "delta_ms", "refreeze_ms", "speedup",
          "bit_identical"},
     ),
+    # the ingest file gates on the batched-vs-sequential SPEEDUP (both
+    # arms share each run's machine state, so the ratio cancels
+    # container-load swings) — a contested-fraction regression shows up
+    # there directly, since the scalar replay dominates the batched
+    # arm's cost
+    "BENCH_ingest.json": (
+        "speedup", "lower_is_worse",
+        {"batch", "contested_frac", "insert_seq_ns", "insert_batch_ns",
+         "speedup"},
+    ),
 }
 # required TOP-LEVEL fields per trajectory file (beyond "rows"):
 # the kernel file must RECORD its small-batch crossover so the gate can
 # see the fused path losing the regime this sweep exists to guard
 TOP_LEVEL_REQUIRED = {
     "BENCH_kernel.json": {"crossover_vs_oracle_queries"},
+    # the ingest file must RECORD its aggregate speedup and worst-batch
+    # contested fraction so the trajectory shows both at a glance
+    "BENCH_ingest.json": {"speedup_geomean", "contested_frac_max"},
 }
 REGRESSION_FACTOR = 1.25
 

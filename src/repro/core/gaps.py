@@ -44,6 +44,38 @@ __all__ = ["gap_positions", "GappedArray", "build_gapped"]
 _EMPTY = np.iinfo(np.int64).min  # payload marker for unoccupied slots
 
 
+def _group_extreme(rids, vals, n_runs, fill, reducer):
+    """Per-run extreme of ``vals`` grouped by run id (``fill`` for runs
+    with no entries) — one argsort + reduceat over batch-sized arrays."""
+    out = np.full(n_runs, fill)
+    if rids.size:
+        o = np.argsort(rids, kind="stable")
+        r, v = rids[o], vals[o]
+        starts = np.flatnonzero(np.r_[True, r[1:] != r[:-1]])
+        out[r[starts]] = reducer.reduceat(v, starts)
+    return out
+
+
+def _seg_suffix_min(vals, segs):
+    """Per-position min over the value suffix of its segment (positions
+    ascending, segment ids non-decreasing and contiguous).
+
+    Vectorized segmented reverse scan: dense value ranks plus an offset
+    of n per segment make every later-segment entry unbeatable, so ONE
+    global reverse ``minimum.accumulate`` realizes the per-segment
+    reset, and the rank decodes back to the value."""
+    n = vals.shape[0]
+    if n == 0:
+        return vals
+    o = np.argsort(vals, kind="stable")
+    rk = np.empty(n, np.int64)
+    rk[o] = np.arange(n, dtype=np.int64)
+    seg_d = np.cumsum(np.r_[True, segs[1:] != segs[:-1]]) - 1
+    w = rk + seg_d * np.int64(n)
+    wm = np.minimum.accumulate(w[::-1])[::-1]
+    return vals[o[wm - seg_d * np.int64(n)]]
+
+
 def gap_positions(
     x: np.ndarray,
     y: np.ndarray,
@@ -335,6 +367,28 @@ class GappedArray:
             return True
         return self.links.set_payload(ub, key, payload)
 
+    def update_batch(self, keys: np.ndarray, payloads: np.ndarray) -> int:
+        """Batched payload update: slot hits land in ONE vectorized
+        scatter (duplicate keys: last write wins, as sequentially);
+        chain hits fall back to per-key ``set_payload``.  One epoch
+        bump for the whole batch.  Returns the number of keys updated.
+        """
+        keys = np.asarray(keys, np.float64)
+        payloads = np.asarray(payloads, np.int64)
+        if keys.shape[0] == 0:
+            return 0
+        self._invalidate()
+        ub = np.searchsorted(self.slot_key, keys,
+                             side="right").astype(np.int64) - 1
+        ok = ub >= 0
+        hit = ok & (self.slot_key[np.maximum(ub, 0)] == keys)
+        self.payload[ub[hit]] = payloads[hit]
+        n = int(np.count_nonzero(hit))
+        for i in np.flatnonzero(ok & ~hit):
+            n += bool(self.links.set_payload(int(ub[i]), float(keys[i]),
+                                             int(payloads[i])))
+        return n
+
     # ------------------------------------------------------------------
     # batched dynamic path — state-identical to sequential insert()
     # ------------------------------------------------------------------
@@ -346,7 +400,68 @@ class GappedArray:
         x = np.where(self.occupied, self.slot_key, np.inf)
         self.slot_key = np.minimum.accumulate(x[::-1])[::-1]
 
-    def insert_batch(self, keys: np.ndarray, payloads: np.ndarray) -> dict:
+    def batch_chunk(self) -> int:
+        """``insert_batch``'s chunking threshold at the current
+        occupancy.  Precomputed placements only serve batches up to ONE
+        chunk (later chunks repartition against mutated state), so the
+        device ingest-place path gates on this too."""
+        return max(4096, min(16384,
+                             int(np.count_nonzero(self.occupied)) // 8))
+
+    def placement_primitives(self, keys: np.ndarray,
+                             p: Optional[np.ndarray] = None) -> dict:
+        """Per-key placement primitives against the CURRENT state — the
+        inputs of ``insert_batch``'s order-equivalence partition:
+
+        * ``p``       — predicted slot, ``clip(rint(M(x)), 0, m-1)``;
+        * ``free``    — predicted slot unoccupied;
+        * ``ub``      — rightmost occupied slot whose key is <= the
+          batch key (-1 below all occupied keys).  Runs are named by
+          their left-boundary slot index, so this is the key-run id AND
+          the §5.3 chain target in one;
+        * ``pv``      — the predicted slot's run id: the previous
+          occupied slot (-1 for the leading run), recovered from the
+          carried-key construction with one searchsorted (a free slot's
+          carried key marks exactly where its run starts);
+        * ``bracket`` — free AND strictly inside the run's key interval
+          (left-boundary key incl. its chain max < key < carried next
+          key): the key could take its predicted slot.
+
+        The device ingest-placement backend (``repro.kernels.ops_gap``)
+        computes the same dict against the frozen device arrays; this
+        host path is the oracle the device variants must match
+        bit-for-bit (asserted in tests/test_ingest_place.py).
+        """
+        keys = np.asarray(keys, np.float64)
+        m = self.n_slots
+        if p is None:
+            p = np.clip(np.rint(self.mech.predict(keys)), 0, m - 1).astype(
+                np.int64)
+        free = ~self.occupied[p]
+        ub = np.searchsorted(self.slot_key, keys,
+                             side="right").astype(np.int64) - 1
+        # carried key of a free slot == its run's next occupied key; the
+        # run's slots (pv, next_occ] all carry it, so 'left' lands at
+        # pv + 1 (for occupied p this degenerates to its own prev slot,
+        # harmless: pv is only consumed for free keys)
+        nx_key = self.slot_key[p]
+        pv = np.searchsorted(self.slot_key, nx_key,
+                             side="left").astype(np.int64) - 1
+        prev_max = np.where(pv >= 0, self.slot_key[np.maximum(pv, 0)],
+                            -np.inf)
+        if self.links:
+            # CSR chains: the per-slot max is chain_keys[offsets[i+1]-1]
+            # — one vectorized gather instead of a per-key python scan
+            sel = np.flatnonzero(free & (pv >= 0))
+            if sel.size:
+                cm = self.links.chain_max_keys(pv[sel])
+                np.maximum.at(prev_max, sel, cm)
+        bracket = free & (prev_max < keys) & (keys < nx_key)
+        return {"p": p, "free": free, "pv": pv, "ub": ub,
+                "bracket": bracket}
+
+    def insert_batch(self, keys: np.ndarray, payloads: np.ndarray,
+                     placements: Optional[dict] = None) -> dict:
         """Batched §5.3 inserts; final state is bit-identical to calling
         ``insert()`` per key in order (slot_key/occupied/payload/links).
 
@@ -355,10 +470,10 @@ class GappedArray:
         slots — every check and write of ``insert()`` touches only the
         runs of a key's predicted slot and of its key value):
 
-        A. **slot-easy** — predicted slot free and unique, keys
-           co-monotone with slots within their run, order-checks pass
-           against pre-batch neighbors, and no other class touches the
-           run: every arrival order occupies the same slots, so they are
+        A. **slot-easy** — predicted slot free and unique, key bracketed
+           by the run's pre-batch boundary keys, and no hard key can
+           flap its order checks (see the per-key demotion rules below):
+           every arrival order occupies the same slots, so they are
            applied vectorized, with ONE carried-key repair at the end
            (replacing the per-insert slice writes and ``while`` scans).
            A *collision group* (several keys predicting the same free
@@ -370,28 +485,59 @@ class GappedArray:
            provided the group has the run to itself and every member is
            bracketed by the run's boundary keys.
         B. **chain-certain** — predicted slot occupied pre-batch (it can
-           only stay occupied) and the key's run is untouched by class
-           C: the chain target is the single run boundary, and chains
-           are sorted sets, so appends commute; applied grouped per
-           target with one sort per chain (replacing per-insert
-           ``chain.sort()``).
-        C. **contested** — everything else (shared runs, failed or
-           flappable order checks, global-min displacement): re-run
-           through the same partition against the updated state (the
-           argument applies recursively), with a scalar arrival-order
-           replay for small or non-shrinking remainders.
+           only stay occupied), so the chain target is the key-run's
+           left boundary, and chains are sorted sets, so appends
+           commute; applied as ONE vectorized CSR merge.
+        C. **contested** — everything else: re-run through the same
+           partition against the updated state (the argument applies
+           recursively), with a scalar arrival-order replay for small
+           or non-shrinking remainders.
 
-        A run touched by any hard key demotes its class-A candidates,
-        iterated to a fixed point, so classes A/B/C provably cannot
-        observe each other's intermediate states.  Duplicate keys raise
+        Per-key demotion (closure to a fixed point): a class-A candidate
+        ``a`` (run R, slot p_a, key k_a) is demoted exactly when a hard
+        key can observe or perturb its checks under SOME interleaving —
+
+        * **D1 chain capture**: a hard key h chaining into R by key
+          order (class B, or any contested key with key-run R) with
+          k_h > k_a would chain onto a's slot once a occupies, but onto
+          the run boundary before — demote a when k_a < max hard key of
+          R.  (Candidates above every hard key are safe: a chain append
+          below k_a can never break a's order checks.)
+        * **D2 occupier shadow**: a hard FREE key h that could occupy in
+          R (bracketed) at a slot p_h >= p_a with k_h < k_a makes a's
+          slot checks order-dependent — demote a when the slot-suffix
+          min of such keys undercuts k_a.  (The mirrored corner,
+          p_h <= p_a with k_h > k_a, is already D1.)
+        * **D3 leading-run displacement**: any hard key that can reach
+          the global-min displacement path (key below all occupied
+          keys) rewrites the leading run's boundary slot in BOTH key
+          directions — demote every candidate of run -1.
+        * **D4 candidate co-monotonicity**: two candidates sharing a run
+          whose slot order disagrees with their key order flap each
+          other — demote both (recomputed over the LIVE candidate set
+          each round, so pairs separated by demoted keys still meet).
+
+        Class-B keys are refined per-key too: a predicted-occupied key
+        k_b stays class B unless a hard free occupier with key < k_b
+        shares its run (only an occupation below k_b can move its chain
+        target; chain-only contested keys and appends commute).  The
+        demotion closure iterates until no rule fires, so classes A/B
+        and the alive collision groups provably cannot observe the
+        contested replay's intermediate states.  Duplicate keys raise
         ``KeyError`` just like ``insert()`` (state of the current batch
         is unspecified on raise, as with a partial sequential loop).
 
-        Returns ``{"slot": n, "chain": n, "contested": n}`` — slot/chain
-        path counts plus how many keys left the vectorized fast path for
-        class-C re-resolution (the contested remainder; the epoch-
-        versioned ``Index`` handle uses its fraction as a refreeze
-        signal).
+        ``placements`` optionally injects precomputed
+        ``placement_primitives`` (the device ingest-placement path);
+        they must describe the CURRENT pre-batch state, so they are
+        consumed by the first chunk only and never by recursive rounds.
+
+        Returns ``{"slot": n, "chain": n, "contested": n}`` with the
+        invariant ``slot + chain == len(keys)`` (every key lands on
+        exactly one §5.3 path) and ``contested`` counting the keys that
+        visited the scalar arrival-order replay, across ALL recursive
+        rounds (the epoch-versioned ``Index`` handle uses its fraction
+        as a refreeze signal).
         """
         keys = np.asarray(keys, np.float64)
         payloads = np.asarray(payloads, np.int64)
@@ -405,35 +551,47 @@ class GappedArray:
         # chunk large batches: cross-key run contention grows
         # ~quadratically with batch size while the per-chunk vectorized
         # cost is only ~O(m); sequential equality composes over chunks
-        chunk = max(4096, min(16384,
-                              int(np.count_nonzero(self.occupied)) // 8))
+        chunk = self.batch_chunk()
         if n_b > chunk:
             counts = {"slot": 0, "chain": 0, "contested": 0}
             for s in range(0, n_b, chunk):
+                sub_pl = None
+                if placements is not None and s == 0:
+                    sub_pl = {k: v[:chunk] for k, v in placements.items()}
                 c = self.insert_batch(keys[s:s + chunk],
-                                      payloads[s:s + chunk])
+                                      payloads[s:s + chunk],
+                                      placements=sub_pl)
                 counts["slot"] += c["slot"]
                 counts["chain"] += c["chain"]
                 counts["contested"] += c["contested"]
             return counts
         self._invalidate()
-        m = self.n_slots
-        p = np.clip(np.rint(self.mech.predict(keys)), 0, m - 1).astype(
-            np.int64)
-        occ_idx = np.flatnonzero(self.occupied)
-        if occ_idx.size == 0:  # degenerate: empty structure
+        if not np.any(self.occupied):  # degenerate: empty structure
+            m = self.n_slots
+            p0 = np.clip(np.rint(self.mech.predict(keys)), 0,
+                         m - 1).astype(np.int64)
             counts = {"slot": 0, "chain": 0, "contested": 0}
             for i in range(n_b):
                 counts[self._insert_at(float(keys[i]), int(payloads[i]),
-                                       int(p[i]))] += 1
+                                       int(p0[i]))] += 1
             return counts
-        occ_keys = self.slot_key[occ_idx]
-        # run ids: index (into occ arrays) of the next occupied slot
-        run_p = np.searchsorted(occ_idx, p, side="left")
-        run_k = np.searchsorted(occ_keys, keys, side="right")
-        free = ~self.occupied[p]
+        pr = (placements if placements is not None
+              else self.placement_primitives(keys))
+        p = np.asarray(pr["p"], np.int64)
+        free = np.asarray(pr["free"], bool)
+        pv = np.asarray(pr["pv"], np.int64)
+        ub = np.asarray(pr["ub"], np.int64)
+        bracket = np.asarray(pr["bracket"], bool)
 
-        # --- initial class-A candidates + collision groups -------------
+        # compressed run ids over the (<= 2B) runs the batch touches;
+        # rid_p is only meaningful for free keys (clip keeps the masked
+        # gathers in range for occupied ones)
+        uniq_runs = np.unique(np.concatenate([pv[free], ub]))
+        n_runs = int(uniq_runs.size)
+        rid_p = np.minimum(np.searchsorted(uniq_runs, pv), n_runs - 1)
+        rid_k = np.searchsorted(uniq_runs, ub)
+
+        # --- collision groups ------------------------------------------
         order = np.argsort(p, kind="stable")  # stable: arrival order
         po = p[order]
         dup_adj = np.r_[False, po[1:] == po[:-1]]
@@ -455,28 +613,7 @@ class GappedArray:
                                               np.flatnonzero(gstart),
                                               gpos.size]))
             is_loser[order[gpos]] = ~is_winner[order[gpos]]
-        cand = free & (~is_dup | is_winner)
-        # co-monotone with slots inside the run + bracketed by the run's
-        # pre-batch boundary keys (incl. the left boundary's chain max)
-        ko, run_o, co = keys[order], run_p[order], cand[order]
-        same_run = run_o[1:] == run_o[:-1]
-        mono_bad = same_run & (ko[1:] <= ko[:-1]) & co[1:] & co[:-1]
-        bad_runs = set(run_o[1:][mono_bad].tolist())
-        pv = np.where(run_p > 0, occ_idx[np.maximum(run_p - 1, 0)], -1)
-        nx_key = np.where(run_p < occ_idx.size,
-                          occ_keys[np.minimum(run_p, occ_keys.size - 1)],
-                          np.inf)
-        prev_max = np.where(pv >= 0, self.slot_key[np.maximum(pv, 0)],
-                            -np.inf)
-        if self.links:
-            # CSR chains: the per-slot max is chain_keys[offsets[i+1]-1]
-            # — one vectorized gather instead of a per-key python scan
-            sel = np.flatnonzero((cand | is_loser) & (pv >= 0))
-            if sel.size:
-                cm = self.links.chain_max_keys(pv[sel])
-                np.maximum.at(prev_max, sel, cm)
-        bracket = (prev_max < keys) & (keys < nx_key)
-        cand &= bracket
+        cand = free & (~is_dup | is_winner) & bracket
 
         # group validity: every member bracketed in the winner's run,
         # no duplicate keys inside the group, no members below the
@@ -488,8 +625,8 @@ class GappedArray:
         if np.any(is_winner):
             member = is_winner | is_loser
             bad_w = np.unique(w_of[member & (
-                ~bracket | (run_p != run_p[w_of])
-                | ((run_p == 0) & (keys < keys[w_of]))
+                ~bracket | (pv != pv[w_of])
+                | ((pv == -1) & (keys < keys[w_of]))
             )])
             group_ok[bad_w] = False
             mo = np.lexsort((keys, p))
@@ -497,85 +634,94 @@ class GappedArray:
             mp, mk = p[mo][msel], keys[mo][msel]
             kdup = np.r_[False, (mp[1:] == mp[:-1]) & (mk[1:] == mk[:-1])]
             group_ok[w_of[mo[msel][kdup]]] = False
-            runs_w = run_p[is_winner]
-            n_runs0 = occ_idx.size + 1
-            groups_per_run = np.bincount(runs_w, minlength=n_runs0)
+            groups_per_run = np.bincount(rid_p[is_winner],
+                                         minlength=n_runs)
             singles_per_run = np.bincount(
-                run_p[cand & ~is_winner], minlength=n_runs0)
-            crowded = (groups_per_run[run_p] > 1) | \
-                (singles_per_run[run_p] > 0)
+                rid_p[cand & ~is_winner], minlength=n_runs)
+            crowded = (groups_per_run[rid_p] > 1) | \
+                (singles_per_run[rid_p] > 0)
             group_ok &= ~(is_winner & crowded)
             cand &= ~(is_winner & ~group_ok)
 
-        # --- demotion closure ------------------------------------------
-        # Predicted-occupied keys (class-B shaped) may COEXIST with
-        # candidates in a run when every such chain key sits below every
-        # candidate key: the chain target stays the run's left boundary
-        # and the candidates' order checks are unchanged by the appends,
-        # so all interleavings commute.  Otherwise the run is demoted.
-        n_runs = occ_idx.size + 1
+        # duplicate of an occupied slot's own key -> KeyError, as
+        # insert() (sequentially EVERY such key raises at its arrival:
+        # occupied-slot keys only leave by deletion; state of the
+        # partial batch is unspecified on raise).  Checked for all keys
+        # because the vectorized chain merge only dedups against CHAIN
+        # keys, not the first-level array.
+        b_dup = (ub >= 0) & (self.slot_key[np.maximum(ub, 0)] == keys)
+        if np.any(b_dup):
+            raise KeyError(f"duplicate key {keys[np.flatnonzero(b_dup)[0]]!r}")
 
-        def group_extreme(runs, vals, fill, reducer):
-            out = np.full(n_runs, fill)
-            if runs.size:
-                o = np.argsort(runs, kind="stable")
-                r, v = runs[o], vals[o]
-                starts = np.flatnonzero(np.r_[True, r[1:] != r[:-1]])
-                out[r[starts]] = reducer.reduceat(v, starts)
-            return out
-
-        bsel = ~free & (run_k > 0)
-        max_b = group_extreme(run_k[bsel], keys[bsel], -np.inf, np.maximum)
-        glob_min = ~free & (run_k == 0)  # global-min displacement: run 0
+        # --- per-key demotion closure (rules D1-D4, see docstring) -----
         while True:
             loser_alive = is_loser & group_ok[w_of] & cand[w_of]
-            # contested: flappable slot checks (alive-group losers are
-            # accounted for — they commute with their winner)
-            c0 = ~cand & free & ~loser_alive
-            touched = np.zeros(n_runs, bool)
-            touched[run_k[c0]] = True
-            touched[run_p[c0]] = True
-            if np.any(glob_min):
-                touched[0] = True
-            if bad_runs:
-                touched[list(bad_runs)] = True
-                bad_runs = set()
-            min_a = group_extreme(run_p[cand], keys[cand], np.inf,
-                                  np.minimum)
-            touched |= max_b >= min_a
-            demote = cand & touched[run_p]
+            hard = ~cand & ~loser_alive  # class B/C-bound keys
+            # D1: max hard key chaining into each run (by key-run)
+            max_h = _group_extreme(rid_k[hard], keys[hard], n_runs,
+                                   -np.inf, np.maximum)
+            demote = cand & (keys < max_h[rid_p])
+            # D3: a hard key below all occupied keys can displace the
+            # leading run's boundary slot
+            if np.any(hard & (ub == -1)):
+                demote |= cand & (pv == -1)
+            # D2: hard occupier at a slot >= the candidate's with a
+            # smaller key (slot-suffix min per run, slot-sorted)
+            occh = hard & free & bracket
+            if np.any(occh):
+                usel = cand | occh
+                ui = order[usel[order]]
+                hk = np.where(occh[ui], keys[ui], np.inf)
+                sm = _seg_suffix_min(hk, rid_p[ui])
+                d2u = cand[ui] & (sm < keys[ui])
+                demote[ui[d2u]] = True
+            # D4: candidate pairs in one run whose slot order disagrees
+            # with their key order (recomputed on the live set — pairs
+            # separated by demoted keys become adjacent)
+            ai = order[cand[order]]
+            if ai.size > 1:
+                same = rid_p[ai][1:] == rid_p[ai][:-1]
+                badp = same & (keys[ai][1:] <= keys[ai][:-1])
+                demote[ai[1:][badp]] = True
+                demote[ai[:-1][badp]] = True
             if not np.any(demote):
                 break
             cand &= ~demote
 
-        # --- class B / C partition -------------------------------------
-        hard = ~cand
+        # --- class B / C partition (per-key, see docstring) ------------
+        # Chain-certain covers BOTH hard shapes that provably always
+        # chain at their pre-batch upper bound: predicted-slot-occupied
+        # keys (classic class B) AND free-but-bracket-failing keys —
+        # their order checks can only tighten as inserts land (new
+        # occupants carry keys above the failing boundary, displacement
+        # keeps the boundary max), so they can never occupy.  The only
+        # hazard left for either shape is a hard occupier BELOW them in
+        # their key-run (an occupation that could capture the chain
+        # target mid-replay) — the min_o guard.
         loser_alive = is_loser & group_ok[w_of] & cand[w_of]
-        c0 = hard & free & ~loser_alive
-        contested = np.zeros(n_runs, bool)
-        contested[run_p[c0]] = True
-        contested[run_k[c0]] = True
-        b_mask = hard & ~free & (run_k > 0) & ~contested[run_k]
-        # duplicate of an occupied slot's own key -> KeyError (as insert)
-        b_dup = b_mask & (occ_keys[np.maximum(run_k - 1, 0)] == keys)
-        if np.any(b_dup):
-            raise KeyError(f"duplicate key {keys[np.flatnonzero(b_dup)[0]]!r}")
-        c_mask = hard & ~b_mask & ~loser_alive
+        hard = ~cand & ~loser_alive
+        occh = hard & free & bracket
+        min_o = _group_extreme(rid_p[occh], keys[occh], n_runs, np.inf,
+                               np.minimum)
+        b_mask = hard & ~(free & bracket) & (ub >= 0) & \
+            ~(min_o[rid_k] < keys)
+        c_mask = hard & ~b_mask
 
         # --- apply A: vectorized occupation + one carried repair -------
-        pe = p[cand]
-        n_slot = int(pe.size)
+        ai = np.flatnonzero(cand)
+        n_slot = int(ai.size)
         if n_slot:
+            pe = p[ai]
             self.occupied[pe] = True
-            self.payload[pe] = payloads[cand]
-            self.slot_key[pe] = keys[cand]
+            self.payload[pe] = payloads[ai]
+            self.slot_key[pe] = keys[ai]
             self._repair_carried()
 
         # --- apply B (+ alive-group losers): grouped chain appends -----
         n_chain = 0
         bi = np.flatnonzero(b_mask)
         li = np.flatnonzero(loser_alive)
-        targets = occ_idx[run_k[bi] - 1]
+        targets = ub[bi]
         if li.size:  # losers chain on the winner's slot or the boundary
             l_t = np.where(keys[li] > keys[w_of[li]], p[li], pv[li])
             bi = np.concatenate([bi, li])
@@ -592,13 +738,16 @@ class GappedArray:
         # equivalence argument applies recursively, and contention shrinks
         # geometrically per round.  Sequential replay only when a round
         # makes no progress (pathological all-contested batches).
+        # Count invariant: slot + chain == n_b over all rounds;
+        # "contested" counts exactly the replay-visited keys.
         ci = np.flatnonzero(c_mask)
-        counts = {"slot": n_slot, "chain": n_chain, "contested": int(ci.size)}
+        counts = {"slot": n_slot, "chain": n_chain, "contested": 0}
         if ci.size == n_b or ci.size <= 1024:
             # no progress (pathological all-contested batch) or a small
             # tail: scalar replay in arrival order beats another O(m)
             # round; chain appends buffer in the CSRLinks pending
             # overlay and merge as one flush
+            counts["contested"] = int(ci.size)
             ins_at = self._insert_at
             for k, pl, pp in zip(keys[ci].tolist(), payloads[ci].tolist(),
                                  p[ci].tolist()):
@@ -607,6 +756,7 @@ class GappedArray:
             sub = self.insert_batch(keys[ci], payloads[ci])
             counts["slot"] += sub["slot"]
             counts["chain"] += sub["chain"]
+            counts["contested"] += sub["contested"]
         # merge the replay tail's buffered chain appends now: the flush
         # belongs to this batch, not to the next reader (e.g. the epoch
         # handle's timed device sync)
@@ -617,10 +767,17 @@ class GappedArray:
         """Batched §5.3 deletes — a host-side sweep over ``delete()``
         (deletes are the rare arm of dynamic workloads; each chain
         removal is one CSR memmove).  Returns the number of keys
-        actually removed."""
+        actually removed.
+
+        Like ``insert_batch``, the CSRLinks pending overlay is flushed
+        before returning: deletes of unoccupied-path keys never touch
+        the flush-first link mutators, so without this a batch running
+        after buffered scalar inserts would leave the merge bill to the
+        next reader (e.g. the epoch handle's timed device sync)."""
         removed = 0
         for k in np.asarray(keys, np.float64):
             removed += bool(self.delete(float(k)))
+        self.links.flush()
         return removed
 
     # ------------------------------------------------------------------

@@ -17,8 +17,11 @@ Epoch protocol
 Every host mutation bumps ``index.epoch`` (delegated to the gapped
 array's version counter, so scalar ``insert``/``delete``/``update``
 through any path count too).  The frozen device state records the epoch
-it was built against; a device-backend lookup first brings the device
-forward:
+it was built against; when it is AT the host epoch, ``ingest`` computes
+the batch's placement primitives on the device first (the kernels
+ingest-place backend — see ``repro.kernels`` "Ingest backend contract";
+host-oracle fallback whenever exactness cannot be guaranteed), then a
+device-backend lookup first brings the device forward:
 
 * **delta update** (the common case): scatter only the changed
   slot_key/payload entries and CSR-link tail regions into the resident
@@ -535,15 +538,65 @@ class Index:
                 "dynamic ops need gap insertion (build with gap_rho > 0)"
             )
 
+    def _device_placements(self, keys) -> Optional[dict]:
+        """Compute the batch's placement primitives on the frozen device
+        arrays (the kernels ingest-place backend), escape rows patched
+        from the host oracle in O(#escapes).  Returns None whenever the
+        device cannot serve the batch EXACTLY — device state behind the
+        host epoch, non-PLM ``predict`` (rmi routes through its root
+        model, btree has no slots), keys beyond per-key pair exactness,
+        or slot counts past f32/i32 indexing — and the host partition
+        runs as before.  Bit-identity with the host oracle is the
+        contract (see kernels.__init__ "Ingest backend contract")."""
+        if (self._engine is None or self._device_epoch != self.epoch
+                or self.method not in ("pgm", "fiting")
+                or self.gapped is None
+                or keys.shape[0] < self.min_device_batch
+                # past one partition chunk, insert_batch recomputes the
+                # later chunks against mutated state anyway — computing
+                # (and escape-patching) device primitives for rows that
+                # would be discarded is pure waste, and the report's
+                # placement label would lie
+                or keys.shape[0] > self.gapped.batch_chunk()
+                or self.gapped.n_slots >= (1 << 24)):
+            return None
+        from ..kernels import ops as _ops
+        if self._engine.arrays.key_wide:
+            # wide freeze: the stored set must be per-key pair-exact
+            # (not merely alias-free — a pair-ROUNDED stored key could
+            # land on the other side of a batch key) and so must the
+            # batch, so device pair compares equal host f64 compares
+            self._key_caps()  # refresh the cache to this epoch
+            cached = self._keycap_cache
+            if not (cached is not None and cached[0] == self.epoch
+                    and cached[3] and _ops.keys_pair_exact(keys)):
+                return None
+        elif _ops.keys_need_pair(keys):
+            return None  # wide batch against a narrow (plain-f32) freeze
+        prims, esc = self._engine.ingest_place(keys)
+        n_esc = int(np.count_nonzero(esc))
+        if n_esc:
+            sub = self.gapped.placement_primitives(keys[esc])
+            for f, v in prims.items():
+                v[esc] = sub[f]
+        self.stats["ingest_place_escapes"] = (
+            self.stats.get("ingest_place_escapes", 0) + n_esc)
+        return prims
+
     def ingest(self, keys, payloads) -> IngestReport:
-        """Batched insert; delta-updates the frozen device state in place
-        (full refreeze only past the policy thresholds — see module doc).
+        """Batched insert; placements computed on the frozen device
+        arrays when the engine is at the host epoch (the ingest-place
+        backend; host-oracle fallback otherwise), then the device state
+        is delta-updated in place (full refreeze only past the policy
+        thresholds — see module doc).
         """
         self._need_gapped()
         t0 = time.perf_counter()
         keys = np.atleast_1d(np.asarray(keys, np.float64))
         payloads = np.atleast_1d(np.asarray(payloads, np.int64))
-        counts = self.gapped.insert_batch(keys, payloads)
+        prims = self._device_placements(keys)
+        placement = "host" if prims is None else "device"
+        counts = self.gapped.insert_batch(keys, payloads, placements=prims)
         self._key_caps_after_batch(keys)
         self._log_touch(keys)
         self.stats["ingests"] += 1
@@ -576,7 +629,8 @@ class Index:
         return IngestReport(
             n=int(keys.shape[0]), slot=counts["slot"], chain=counts["chain"],
             contested=counts["contested"], epoch=self.epoch, device=device,
-            device_elems=elems, seconds=time.perf_counter() - t0)
+            device_elems=elems, seconds=time.perf_counter() - t0,
+            placement=placement)
 
     def _roll_caps(self) -> None:
         """Advance the keycap cache to the current epoch UNCHANGED —
@@ -631,6 +685,15 @@ class Index:
         self._need_gapped()
         out = self.gapped.update(key, payload)
         self._roll_caps()  # payload-only: key capabilities unchanged
+        return out
+
+    def update_batch(self, keys: np.ndarray, payloads: np.ndarray) -> int:
+        """Batched payload update (ONE epoch bump; payload-only, so the
+        next device sync is a pure payload-scatter delta)."""
+        self._need_gapped()
+        out = self.gapped.update_batch(np.asarray(keys, np.float64),
+                                       np.asarray(payloads, np.int64))
+        self._roll_caps()
         return out
 
     # ------------------------------------------------------------------

@@ -62,9 +62,15 @@ class IngestReport:
     """Result of ``Index.ingest`` (one batch of (key, payload) pairs).
 
     * ``n`` — batch size; ``slot`` / ``chain`` — §5.3 placement path
-      counts (gap slot vs linking chain); ``contested`` — keys that left
-      the vectorized fast path for re-resolution (the contested
-      remainder driving the refreeze policy).
+      counts (gap slot vs linking chain).  Invariant (asserted):
+      ``slot + chain == n`` — every ingested key lands on exactly one
+      path.
+    * ``contested`` — how many keys visited the scalar arrival-order
+      replay, summed over ALL recursive partition rounds (the contested
+      remainder driving the refreeze policy); always ``<= n``.
+    * ``placement`` — where the placement primitives were computed:
+      ``"host"`` (numpy partition) or ``"device"`` (the ingest-place
+      kernel/fused-XLA backend against the frozen device arrays).
     * ``epoch`` — host epoch after the ingest.
     * ``device`` — how the frozen device state was brought forward:
       ``"none"`` (no device state materialized yet — it will freeze
@@ -84,6 +90,17 @@ class IngestReport:
     device: str = "none"
     device_elems: int = 0
     seconds: float = 0.0
+    placement: str = "host"
+
+    def __post_init__(self):
+        if self.slot + self.chain != self.n:
+            raise AssertionError(
+                f"IngestReport count invariant violated: slot={self.slot} "
+                f"+ chain={self.chain} != n={self.n}")
+        if not 0 <= self.contested <= self.n:
+            raise AssertionError(
+                f"IngestReport contested={self.contested} outside "
+                f"[0, n={self.n}]")
 
     @property
     def contested_fraction(self) -> float:

@@ -78,6 +78,39 @@ for integer keys < 2^48.  BOTH fused implementations compare pairs end
 to end, so wide keys (e.g. paged-KV composite keys) finally have a
 device kernel path; only the legacy kernel is narrow-only.
 
+Ingest backend contract (device-side §5.3 placement)
+----------------------------------------------------
+Writes have a device stage too: ``ops_gap.ingest_place`` (surfaced as
+``QueryEngine.ingest_place``) computes an insert batch's placement
+primitives — predicted slot, occupancy, run boundaries (``pv``/``ub``),
+order-check bracket — directly against the frozen device arrays, so
+``Index.ingest`` ships (slot, key, payload) placements into the CSR
+merge instead of re-deriving everything in host numpy.  Same split as
+the fused lookup: a Pallas kernel on TPU (``gap_place.ingest_place_call``,
+frozen tables VMEM-resident), the fused-XLA graph on CPU/GPU — BOTH run
+one shared per-key body (``gap_place.ingest_place_body``), so they are
+bit-identical by construction.  The contract with the host:
+
+* ``GappedArray.placement_primitives`` is the ORACLE — the device
+  result, after the escape patch, must equal it bit-for-bit (property-
+  tested in tests/test_ingest_place.py); the host partition then
+  consumes either transparently (``insert_batch(..., placements=)``).
+* Exactness is gated, not assumed: the handle only routes placement to
+  the device when the stored AND batch keys are per-key pair-exact
+  (integer keys < 2^48 — every compare equals the host f64 compare),
+  the mechanism's ``predict`` is its exported PLM (pgm/fiting), the
+  device state is at the host epoch, and the slot count fits i32/f32
+  indexing (< 2^24).  Anything else silently stays on the host oracle.
+* Slot prediction runs in double-f32 (pair slopes/intercepts carried in
+  ``IndexArrays.seg_slope_lo``/``seg_icept_lo``); keys whose prediction
+  lands within a padded error band of a .5 rounding boundary return an
+  escape MASK and are re-derived host-side in O(#escapes) — the same
+  stale-safe escape philosophy as the fused lookup, applied to writes.
+* The contested remainder (class C) still replays on the host: scalar
+  §5.3 inserts are pointer-chasing by nature; the device's job is the
+  O(batch x log) predict/search/classify stage, the host's the few
+  order-dependent keys the per-key commutativity analysis cannot clear.
+
 Fused-path contract
 -------------------
 ``engine.lookup(queries, queries_sorted=..., backend=...)`` returns
@@ -117,7 +150,8 @@ from .ops import (HostMirror, IndexArrays, QueryEngine, batched_lookup,
                   build_radix_router, build_rank_router, delta_update,
                   freeze_state, from_learned_index, keys_need_pair,
                   keys_pair_exact, pair_alias_free, split_key_pair)
-from .ops_gap import gap_positions_device, gap_positions_oracle
+from .ops_gap import (gap_positions_device, gap_positions_oracle,
+                      ingest_place)
 from .ref import chain_hit_index, lookup_ref, predict_ref, resolve_chains
 
 __all__ = [
@@ -133,6 +167,7 @@ __all__ = [
     "from_learned_index",
     "gap_positions_device",
     "gap_positions_oracle",
+    "ingest_place",
     "keys_need_pair",
     "keys_pair_exact",
     "lookup_ref",

@@ -1,20 +1,38 @@
-"""Eq. 3 gap-position manipulation — Pallas TPU kernel.
+"""Gap-insertion device kernels — Pallas TPU.
 
-Computes the result-driven target position for every key,
+Two kernels live here:
+
+1. ``gap_place_call`` — Eq. 3 gap-position manipulation: the
+   result-driven target position for every key,
 
     y^g_i = base[seg(x_i)] + (x_i - x0[seg(x_i)]) * scale[seg(x_i)]
 
-where per-segment constants fold the paper's Eq. 3 terms
-(``base = y_k1 + S_k``, ``scale = (y_km - y_k1)(1+rho)/(x_km - x_k1)``,
-``x0 = x_k1``; host-side prep in ``ops_gap.prepare_gap_tables``).
-Structure mirrors the lookup kernel's routing stage: keys tiled over the
-grid, segment tables VMEM-resident, branchless rank-routing via chunked
-masked counts, one fused multiply-add — O(n) with n/key_tile grid steps,
-each reading key_tile*4 B of keys and writing the same in positions.
+   where per-segment constants fold the paper's Eq. 3 terms
+   (``base = y_k1 + S_k``, ``scale = (y_km - y_k1)(1+rho)/(x_km-x_k1)``,
+   ``x0 = x_k1``; host-side prep in ``ops_gap.prepare_gap_tables``).
+   Structure mirrors the lookup kernel's routing stage: keys tiled over
+   the grid, segment tables VMEM-resident, branchless rank-routing via
+   chunked masked counts, one fused multiply-add — O(n) with n/key_tile
+   grid steps.  This makes the §5.4 combined pipeline (sample -> fit ->
+   *place all n keys*) device-resident for billion-key stores.
 
-This makes the §5.4 combined pipeline (sample -> fit -> *place all n
-keys*) device-resident for billion-key stores: the only O(n) stage runs
-at HBM bandwidth instead of host memory bandwidth.
+2. ``ingest_place_call`` — the §5.3 dynamic-ingest placement stage:
+   for a batch of insert keys, compute the per-key placement primitives
+   (predicted slot, slot occupancy, run boundaries, order-check
+   bracket) directly against the FROZEN device arrays, so
+   ``Index.ingest`` ships placements back for the CSR merge instead of
+   re-deriving everything in host numpy.  The per-key body
+   (``ingest_place_body``) is shared verbatim with the fused-XLA
+   variant in ``ops_gap`` — one numerics contract, two dispatch
+   strategies (see ``ops_gap.ingest_place`` for the exactness story:
+   f32 hi/lo pair compares end to end, double-f32 prediction with a
+   rounding-band escape patched on host in O(#escapes)).
+
+Double-f32 ("pair") arithmetic: slopes/intercepts and wide keys are
+carried as f32 (hi, lo) pairs; ``_dd_mul``/``_dd_add2`` below implement
+the classic Dekker/Knuth error-free transforms WITHOUT an fma (XLA-CPU
+has no guaranteed fused multiply-add), giving ~2^-45-relative products
+— far inside the host-patch escape band.
 """
 
 from __future__ import annotations
@@ -24,6 +42,199 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# double-f32 (pair) arithmetic — error-free transforms, no fma needed
+# ---------------------------------------------------------------------------
+
+_SPLITTER = 4097.0  # 2^12 + 1 (Veltkamp split for f32; python scalar so
+#                     Pallas kernels don't capture a traced constant)
+
+
+def _two_sum(a, b):
+    """Knuth two-sum: s + e == a + b exactly."""
+    s = a + b
+    bb = s - a
+    e = (a - (s - bb)) + (b - bb)
+    return s, e
+
+
+def _two_prod(a, b):
+    """Dekker two-product via Veltkamp splitting: p + e == a * b."""
+    p = a * b
+    ca = _SPLITTER * a
+    ah = ca - (ca - a)
+    al = a - ah
+    cb = _SPLITTER * b
+    bh = cb - (cb - b)
+    bl = b - bh
+    e = ((ah * bh - p) + ah * bl + al * bh) + al * bl
+    return p, e
+
+
+def _dd_add2(ah, al, bh, bl):
+    """(ah, al) + (bh, bl), renormalized."""
+    s, e = _two_sum(ah, bh)
+    e = e + (al + bl)
+    return _two_sum(s, e)
+
+
+def _dd_sub2(ah, al, bh, bl):
+    return _dd_add2(ah, al, -bh, -bl)
+
+
+def _dd_mul(ah, al, bh, bl):
+    """(ah, al) * (bh, bl), renormalized (drops the al*bl term)."""
+    p, e = _two_prod(ah, bh)
+    e = e + (ah * bl + al * bh)
+    return _two_sum(p, e)
+
+
+# ---------------------------------------------------------------------------
+# pair compares + fixed-trip bisects (lexicographic (hi, lo) order ==
+# numeric f64 order for pair-split keys — kernels.ops.split_key_pair)
+# ---------------------------------------------------------------------------
+
+
+def _p_le(kh, kl, qh, ql):
+    return (kh < qh) | ((kh == qh) & (kl <= ql))
+
+
+def _p_lt(kh, kl, qh, ql):
+    return (kh < qh) | ((kh == qh) & (kl < ql))
+
+
+def _p_eq(kh, kl, qh, ql):
+    return (kh == qh) & (kl == ql)
+
+
+def _bisect_pair(kh, kl, qh, ql, trips, strict):
+    """Rightmost index with key {<,<=} query over the whole array
+    (-1 when none) — branchless fixed-trip bisect, pair-aware."""
+    n = kh.shape[0]
+    cmp = _p_lt if strict else _p_le
+    lo0 = jnp.full(qh.shape, -1, jnp.int32)
+    hi0 = jnp.full(qh.shape, n - 1, jnp.int32)
+
+    def body(_, carry):
+        lo, hi = carry
+        upd = lo < hi
+        mid = (lo + hi + 1) >> 1
+        midc = jnp.clip(mid, 0, n - 1)
+        go = cmp(jnp.take(kh, midc), jnp.take(kl, midc), qh, ql)
+        lo = jnp.where(upd & go, mid, lo)
+        hi = jnp.where(upd, jnp.where(go, hi, mid - 1), hi)
+        return lo, hi
+
+    lo, _ = jax.lax.fori_loop(0, trips, body, (lo0, hi0))
+    return lo
+
+
+def ingest_place_body(
+    x_hi, x_lo,                       # (B,) f32 pair of batch keys
+    segk_hi, segk_lo,                 # (Kpad,) f32 segment first keys
+    slope_hi, slope_lo,               # (Kpad,) f32 pair of slopes
+    icept_hi, icept_lo,               # (Kpad,) f32 pair of intercepts
+    slot_hi, slot_lo,                 # (Mpad,) f32 pair, +inf padded
+    link_offsets,                     # (>= Mpad+1,) i32 CSR offsets
+    link_hi, link_lo,                 # (Lpad,) f32 pair of chain keys
+    *,
+    n_slots: int,
+):
+    """Per-key §5.3 placement primitives against frozen device arrays.
+
+    Returns ``(p, pv, ub, free, bracket, escape)`` — the device image of
+    ``GappedArray.placement_primitives`` (the host oracle):
+
+    * predicted slot ``p = clip(rint(slope*(x - seg_key) + icept))`` in
+      double-f32, with ``escape`` flagging keys whose prediction lands
+      within the pair-arithmetic error band of a rounding boundary (the
+      host re-derives those few exactly);
+    * ``free`` from the carried-key construction: a slot is occupied iff
+      its key strictly precedes its right neighbor's;
+    * ``ub``/``pv`` — key-run and slot-run left boundaries via pair
+      bisects (exact: the Index handle gates this path on pair-exact
+      key sets);
+    * ``bracket`` — boundary-key order checks incl. the left boundary's
+      chain max, gathered from the CSR link tables.
+
+    Pure jnp on purpose: the Pallas kernel calls it per key tile over
+    VMEM-resident tables, the fused-XLA variant over the whole batch —
+    bit-identical by construction.
+    """
+    k_pad = segk_hi.shape[0]
+    m_pad = slot_hi.shape[0]
+    seg_trips = int(max(k_pad, 2) - 1).bit_length() + 1
+    slot_trips = int(max(m_pad, 2) - 1).bit_length() + 1
+
+    # --- segment routing (searchsorted-right - 1, clipped like host) ---
+    seg = _bisect_pair(segk_hi, segk_lo, x_hi, x_lo, seg_trips,
+                       strict=False)
+    seg = jnp.clip(seg, 0, k_pad - 1)
+
+    # --- double-f32 prediction + rint with escape band -----------------
+    fk_h = jnp.take(segk_hi, seg)
+    fk_l = jnp.take(segk_lo, seg)
+    dx_h, dx_l = _dd_sub2(x_hi, x_lo, fk_h, fk_l)
+    sl_h = jnp.take(slope_hi, seg)
+    sl_l = jnp.take(slope_lo, seg)
+    ic_h = jnp.take(icept_hi, seg)
+    ic_l = jnp.take(icept_lo, seg)
+    m_h, m_l = _dd_mul(sl_h, sl_l, dx_h, dx_l)
+    y_h, y_l = _dd_add2(m_h, m_l, ic_h, ic_l)
+    rh = jnp.round(y_h)
+    d = (y_h - rh) + y_l  # |y_h - rh| <= 0.5 -> Sterbenz-exact
+    step = jnp.where(d > 0.5, 1, jnp.where(d < -0.5, -1, 0)).astype(
+        jnp.int32)
+    rh_c = jnp.clip(rh, -1.0, float(n_slots))  # i32-safe (host clips too)
+    p = jnp.clip(rh_c.astype(jnp.int32) + step, 0, n_slots - 1)
+    # escape band: double-f32 carries ~2^-45 relative error; flag any
+    # prediction within a (hugely padded) 2^-30-relative band of the
+    # .5 rounding boundary and let the host recompute it in f64
+    tol = (jnp.abs(sl_h * dx_h) + jnp.abs(ic_h) + 4.0) * jnp.float32(2e-9)
+    escape = jnp.abs(jnp.abs(d) - 0.5) < tol
+    escape |= ~jnp.isfinite(y_h)  # f32 range overflow: host re-derives
+    # clip edges: rint(f64) could land on the far side of the clip
+    escape |= (rh <= 0.0) & (jnp.abs(d) > 0.4)
+    escape |= (rh >= n_slots - 1) & (jnp.abs(d) > 0.4)
+
+    # --- occupancy from the carried-key construction -------------------
+    nx_h = jnp.take(slot_hi, p)
+    nx_l = jnp.take(slot_lo, p)
+    # right neighbor; a table frozen by _freeze_numpy always has an
+    # +inf tail block past n_slots, but do not RELY on it — an exactly
+    # m-sized table would otherwise self-compare the last slot and
+    # misread an occupied last slot as free
+    r_valid = p + 1 < m_pad
+    r_i = jnp.minimum(p + 1, m_pad - 1)
+    r_h = jnp.where(r_valid, jnp.take(slot_hi, r_i), jnp.inf)
+    r_l = jnp.where(r_valid, jnp.take(slot_lo, r_i), 0.0)
+    free = _p_eq(nx_h, nx_l, r_h, r_l)
+
+    # --- run boundaries: key-run ub, slot-run pv -----------------------
+    ub = _bisect_pair(slot_hi, slot_lo, x_hi, x_lo, slot_trips,
+                      strict=False)
+    pv = _bisect_pair(slot_hi, slot_lo, nx_h, nx_l, slot_trips,
+                      strict=True)
+
+    # --- bracket: prev boundary key (incl. chain max) < key < next -----
+    pv_safe = jnp.maximum(pv, 0)
+    pm_h = jnp.take(slot_hi, pv_safe)
+    pm_l = jnp.take(slot_lo, pv_safe)
+    s0 = jnp.take(link_offsets, pv_safe)
+    e0 = jnp.take(link_offsets, pv_safe + 1)
+    has_chain = e0 > s0
+    if link_hi.shape[0]:
+        ci = jnp.clip(e0 - 1, 0, link_hi.shape[0] - 1)
+        cm_h = jnp.take(link_hi, ci)
+        cm_l = jnp.take(link_lo, ci)
+        bigger = has_chain & _p_lt(pm_h, pm_l, cm_h, cm_l)
+        pm_h = jnp.where(bigger, cm_h, pm_h)
+        pm_l = jnp.where(bigger, cm_l, pm_l)
+    prev_ok = (pv < 0) | _p_lt(pm_h, pm_l, x_hi, x_lo)
+    bracket = free & prev_ok & _p_lt(x_hi, x_lo, nx_h, nx_l)
+    return p, pv, ub, free, bracket, escape
 
 
 def _gap_place_kernel(
@@ -86,3 +297,85 @@ def gap_place_call(
         out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
         interpret=interpret,
     )(keys_padded, seg_first_key, base, x0, scale)
+
+
+# ---------------------------------------------------------------------------
+# §5.3 dynamic-ingest placement kernel
+# ---------------------------------------------------------------------------
+
+
+def _ingest_place_kernel(
+    x_hi_ref, x_lo_ref,               # (key_tile,) f32 batch-key pair
+    segk_hi_ref, segk_lo_ref,         # (Kpad,) segment tables
+    slope_hi_ref, slope_lo_ref,
+    icept_hi_ref, icept_lo_ref,
+    slot_hi_ref, slot_lo_ref,         # (Mpad,) frozen slot keys
+    off_ref,                          # (Opad,) i32 CSR offsets
+    link_hi_ref, link_lo_ref,         # (Lpad,) chain keys
+    p_ref, pv_ref, ub_ref,            # out (key_tile,) i32
+    flags_ref,                        # out (key_tile,) i32 bitmask
+    *,
+    n_slots: int,
+):
+    """One key tile of ``ingest_place_body`` over VMEM-resident tables.
+
+    The frozen tables ride whole-array BlockSpecs (slot keys at f32 are
+    4 B/slot — ~4 MiB/M slots, VMEM-resident like the lookup kernel's
+    segment tables; beyond that the fused-XLA variant serves).  Flags
+    pack free(1) | bracket(2) | escape(4).
+    """
+    p, pv, ub, free, bracket, escape = ingest_place_body(
+        x_hi_ref[:], x_lo_ref[:],
+        segk_hi_ref[:], segk_lo_ref[:],
+        slope_hi_ref[:], slope_lo_ref[:],
+        icept_hi_ref[:], icept_lo_ref[:],
+        slot_hi_ref[:], slot_lo_ref[:],
+        off_ref[:], link_hi_ref[:], link_lo_ref[:],
+        n_slots=n_slots,
+    )
+    p_ref[:] = p
+    pv_ref[:] = pv.astype(jnp.int32)
+    ub_ref[:] = ub.astype(jnp.int32)
+    flags_ref[:] = (free.astype(jnp.int32)
+                    + 2 * bracket.astype(jnp.int32)
+                    + 4 * escape.astype(jnp.int32))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("key_tile", "n_slots", "interpret"))
+def ingest_place_call(
+    x_hi, x_lo,            # (Bpad,) f32 pair, Bpad % key_tile == 0
+    segk_hi, segk_lo,
+    slope_hi, slope_lo,
+    icept_hi, icept_lo,
+    slot_hi, slot_lo,
+    link_offsets,          # i32
+    link_hi, link_lo,
+    *,
+    key_tile: int = 512,
+    n_slots: int,
+    interpret: bool = False,
+):
+    n = x_hi.shape[0]
+    assert n % key_tile == 0
+    grid = (n // key_tile,)
+    kernel = functools.partial(_ingest_place_kernel, n_slots=n_slots)
+    whole = lambda a: pl.BlockSpec(a.shape, lambda i: (0,))  # noqa: E731
+    out32 = jax.ShapeDtypeStruct((n,), jnp.int32)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((key_tile,), lambda i: (i,)),
+            pl.BlockSpec((key_tile,), lambda i: (i,)),
+            whole(segk_hi), whole(segk_lo),
+            whole(slope_hi), whole(slope_lo),
+            whole(icept_hi), whole(icept_lo),
+            whole(slot_hi), whole(slot_lo),
+            whole(link_offsets), whole(link_hi), whole(link_lo),
+        ],
+        out_specs=[pl.BlockSpec((key_tile,), lambda i: (i,))] * 4,
+        out_shape=[out32, out32, out32, out32],
+        interpret=interpret,
+    )(x_hi, x_lo, segk_hi, segk_lo, slope_hi, slope_lo, icept_hi,
+      icept_lo, slot_hi, slot_lo, link_offsets, link_hi, link_lo)

@@ -167,6 +167,12 @@ class IndexArrays:
     seg_first_key_lo: jax.Array  # (Kpad,) f32 when key_wide else (0,)
     seg_slope: jax.Array         # (Kpad,) f32
     seg_icept: jax.Array         # (Kpad,) f32
+    # f32 residuals of the f64 slopes/intercepts (double-f32 pairs) —
+    # the ingest-place backend predicts insert slots on device to the
+    # host's rounding behavior (ops_gap.ingest_place); lookup paths
+    # never read them (window search absorbs prediction error)
+    seg_slope_lo: jax.Array      # (Kpad,) f32
+    seg_icept_lo: jax.Array      # (Kpad,) f32
     slot_key: jax.Array          # (Mpad,) f32, +inf padded
     slot_key_lo: jax.Array       # (Mpad,) f32 when key_wide else (0,)
     payload: jax.Array           # (Mpad,) i32 — low 32 payload bits
@@ -192,7 +198,8 @@ class _CapacityError(Exception):
     """Frozen capacity/static exceeded — delta declined, refreeze."""
 
 
-_NP_FIELDS = ("seg_first_key", "seg_first_key_lo", "seg_slope", "seg_icept",
+_NP_FIELDS = ("seg_first_key", "seg_first_key_lo", "seg_slope",
+              "seg_icept", "seg_slope_lo", "seg_icept_lo",
               "slot_key", "slot_key_lo", "payload", "payload_hi",
               "link_offsets", "link_keys", "link_keys_lo", "link_payloads",
               "link_payload_hi")
@@ -300,6 +307,16 @@ def _freeze_numpy(index, *, w_tile: int = 2048, seg_chunk: int = 512,
                               np.float32(0)),
         "seg_icept": _pad_pow(np.asarray(plm.icept, np.float32), seg_chunk,
                               np.float32(n_slots - 1)),
+        # double-f32 residuals (slope - f32(slope), icept - f32(icept))
+        # for the ingest-place backend's on-device slot prediction
+        "seg_slope_lo": _pad_pow(
+            (np.asarray(plm.slope, np.float64)
+             - np.asarray(plm.slope, np.float32).astype(np.float64)
+             ).astype(np.float32), seg_chunk, np.float32(0)),
+        "seg_icept_lo": _pad_pow(
+            (np.asarray(plm.icept, np.float64)
+             - np.asarray(plm.icept, np.float32).astype(np.float64)
+             ).astype(np.float32), seg_chunk, np.float32(0)),
         "slot_key": skp,
         "slot_key_lo": sklp if key_wide else none32f,
         "payload": pay_lo,
@@ -1836,6 +1853,18 @@ class QueryEngine:
             vals[top] = np.searchsorted(sk, kmax, side="right")
         self._rank_np[rows] = vals
         self._rank_table = jnp.asarray(self._rank_np)
+
+    def ingest_place(self, keys):
+        """Device §5.3 ingest placement against the frozen arrays: the
+        per-key primitives ``GappedArray.insert_batch`` consumes, plus
+        the escape mask for the O(#escapes) host patch (see
+        ``ops_gap.ingest_place``).  Served by the Pallas kernel on TPU
+        and the fused-XLA graph elsewhere, like ``fused`` lookups."""
+        from .ops_gap import ingest_place as _place
+        return _place(self.arrays, keys,
+                      impl=("pallas" if self.fused_impl == "pallas"
+                            else "xla"),
+                      interpret=self.interpret)
 
     def bucket(self, n: int) -> int:
         b = self.min_bucket

@@ -1,13 +1,17 @@
-"""Host prep + jit wrapper + jnp oracle for the gap-place kernel."""
+"""Host prep + jit wrappers + jnp oracles for the gap-insertion device
+kernels (Eq. 3 gap placement AND the §5.3 dynamic-ingest placement
+stage — see ``ingest_place`` for the latter's contract)."""
 
 from __future__ import annotations
 
+import functools
 from typing import Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .gap_place import gap_place_call
+from .gap_place import gap_place_call, ingest_place_body, ingest_place_call
 from .ops import _pad_pow
 
 
@@ -69,3 +73,96 @@ def gap_positions_oracle(x: np.ndarray, plm, rho: float) -> np.ndarray:
     x = np.asarray(x, np.float64)
     return gap_positions(x, np.arange(x.shape[0], dtype=np.float64), plm,
                          rho)
+
+
+# ---------------------------------------------------------------------------
+# §5.3 dynamic-ingest placement backend (device primitives for
+# GappedArray.insert_batch — registered in the kernels backend table)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n_slots",))
+def _ingest_place_xla(x_hi, x_lo, segk_hi, segk_lo, slope_hi, slope_lo,
+                      icept_hi, icept_lo, slot_hi, slot_lo, link_offsets,
+                      link_hi, link_lo, *, n_slots):
+    """Fused-XLA variant: the SAME per-key body the Pallas kernel runs,
+    over the whole batch in one lean dispatch (the CPU/GPU half of the
+    ingest-place backend, mirroring the fused lookup's split)."""
+    return ingest_place_body(
+        x_hi, x_lo, segk_hi, segk_lo, slope_hi, slope_lo, icept_hi,
+        icept_lo, slot_hi, slot_lo, link_offsets, link_hi, link_lo,
+        n_slots=n_slots)
+
+
+def ingest_place(arrays, keys, *, impl: str = "xla",
+                 interpret: bool = True, key_tile: int = 512):
+    """Device §5.3 ingest placement: per-key placement primitives for an
+    insert batch, computed against the FROZEN device arrays.
+
+    Returns ``(primitives, escape)`` where ``primitives`` is the numpy
+    dict ``GappedArray.insert_batch`` consumes (``p``/``free``/``pv``/
+    ``ub``/``bracket`` — the same contract as the host oracle
+    ``GappedArray.placement_primitives``) and ``escape`` flags keys
+    whose double-f32 prediction landed inside the rounding-band guard;
+    the caller (``Index.ingest``) re-derives THOSE rows host-side in
+    O(#escapes) and the patched primitives are bit-identical to the
+    host oracle.
+
+    Exactness contract (gated by the Index handle): every stored and
+    batch key must be pair-exact (reconstructed exactly by its f32
+    hi/lo split — all integer keys < 2^48), so every pair compare below
+    equals the host's f64 compare; narrow (f32-exact) indexes run with
+    zero lo arrays.  ``impl`` picks the Pallas kernel ("pallas", the
+    TPU half) or the fused-XLA graph ("xla" — CPU/GPU); both run ONE
+    shared per-key body, so they are bit-identical by construction.
+    """
+    from .ops import split_key_pair
+
+    keys = np.asarray(keys, np.float64)
+    x_hi, x_lo = split_key_pair(keys)
+    key_wide = bool(arrays.key_wide)
+    segk_hi = arrays.seg_first_key
+    segk_lo = (arrays.seg_first_key_lo if key_wide
+               else jnp.zeros_like(segk_hi))
+    slot_hi = arrays.slot_key
+    slot_lo = (arrays.slot_key_lo if key_wide
+               else jnp.zeros_like(slot_hi))
+    link_hi = arrays.link_keys
+    link_lo = (arrays.link_keys_lo if key_wide
+               else jnp.zeros_like(link_hi))
+    if int(link_hi.shape[0]) == 0:  # tileable non-empty chain tables
+        link_hi = jnp.full((1,), jnp.inf, jnp.float32)
+        link_lo = jnp.zeros((1,), jnp.float32)
+    n_b = keys.shape[0]
+    if impl == "pallas":
+        pad = (-n_b) % key_tile
+        xh = jnp.asarray(np.concatenate(
+            [x_hi, np.full(pad, np.inf, np.float32)]))
+        xl = jnp.asarray(np.concatenate([x_lo, np.zeros(pad, np.float32)]))
+        p, pv, ub, flags = ingest_place_call(
+            xh, xl, segk_hi, segk_lo, arrays.seg_slope,
+            arrays.seg_slope_lo, arrays.seg_icept, arrays.seg_icept_lo,
+            slot_hi, slot_lo, arrays.link_offsets, link_hi, link_lo,
+            key_tile=key_tile, n_slots=arrays.n_slots,
+            interpret=interpret)
+        flags = np.asarray(flags)[:n_b]
+        free = (flags & 1).astype(bool)
+        bracket = (flags & 2).astype(bool)
+        escape = (flags & 4).astype(bool)
+    else:
+        p, pv, ub, free, bracket, escape = _ingest_place_xla(
+            jnp.asarray(x_hi), jnp.asarray(x_lo), segk_hi, segk_lo,
+            arrays.seg_slope, arrays.seg_slope_lo, arrays.seg_icept,
+            arrays.seg_icept_lo, slot_hi, slot_lo, arrays.link_offsets,
+            link_hi, link_lo, n_slots=arrays.n_slots)
+        free = np.asarray(free)[:n_b]
+        bracket = np.asarray(bracket)[:n_b]
+        escape = np.asarray(escape)[:n_b]
+    prims = {  # writable copies: the caller patches escape rows in place
+        "p": np.asarray(p)[:n_b].astype(np.int64),
+        "free": np.array(free, dtype=bool),
+        "pv": np.asarray(pv)[:n_b].astype(np.int64),
+        "ub": np.asarray(ub)[:n_b].astype(np.int64),
+        "bracket": np.array(bracket, dtype=bool),
+    }
+    return prims, np.array(escape, dtype=bool)

@@ -83,10 +83,15 @@ class PagedKVCache:
                     logical_pages: np.ndarray) -> np.ndarray:
         """Allocate many (request, page) mappings in one shot.
 
-        Skeleton keys are claimed via update; fresh keys go through ONE
-        ``index.ingest`` (§5.3 batched dynamic insert), which also
-        delta-updates the frozen device buffers so the engine stays hot.
-        Returns the physical pages.
+        Skeleton keys are claimed through ONE vectorized
+        ``index.update_batch`` (payload-only scatter, one epoch bump);
+        fresh keys go through ONE ``index.ingest`` — whose placement
+        stage runs on the frozen device arrays when the engine is at
+        the host epoch (the kernels ingest-place backend; composite
+        keys are integers < 2^48, so they are pair-exact and the
+        device compares are exact) — and then delta-updates the frozen
+        device buffers so the engine stays hot.  Returns the physical
+        pages.
         """
         request_ids = np.atleast_1d(np.asarray(request_ids, np.int64))
         logical_pages = np.atleast_1d(np.asarray(logical_pages, np.int64))
@@ -100,8 +105,8 @@ class PagedKVCache:
         phys = np.array([self.free_pages.pop() for _ in range(n)],
                         np.int64)
         existing = self.index.gapped.contains_batch(kf)  # skeleton: claim
-        for k, ph in zip(kf[existing], phys[existing]):
-            self.index.update(float(k), int(ph))
+        if np.any(existing):
+            self.index.update_batch(kf[existing], phys[existing])
         fresh = ~existing
         if np.any(fresh):
             self.index.ingest(kf[fresh], phys[fresh])

@@ -1,0 +1,169 @@
+"""Device-side §5.3 ingest placement + per-key contested demotion.
+
+Three contracts (the hypothesis property versions live in
+test_ingest_place_props.py, importorskip-guarded like the other
+suites; these deterministic companions always run):
+
+* the per-key demotion partition is STATE-identical to sequential
+  ``insert()`` on adversarial shared-run batches;
+* the device ingest-place backend (fused-XLA and the Pallas kernel in
+  interpret mode) is bit-identical to the host oracle
+  ``GappedArray.placement_primitives`` after the O(#escapes) patch;
+* the ``IngestReport`` count invariant (slot + chain == n, contested ==
+  replay-visited <= n) holds across recursive contested rounds.
+"""
+
+import copy
+
+import numpy as np
+import pytest
+
+from conftest import make_keys
+from repro.core import Index, LearnedIndex
+from repro.kernels.ops_gap import ingest_place
+
+
+def _state_equal(g1, g2):
+    return (np.array_equal(g1.slot_key, g2.slot_key)
+            and np.array_equal(g1.occupied, g2.occupied)
+            and np.array_equal(g1.payload, g2.payload)
+            and g1.n_keys == g2.n_keys
+            and dict(g1.links) == dict(g2.links))
+
+
+# ---------------------------------------------------------------------------
+# per-key demotion == sequential insert() on adversarial shared-run batches
+# ---------------------------------------------------------------------------
+
+
+def test_count_invariant_across_recursive_rounds():
+    """Force the recursive contested branch (1024 < contested < n) and
+    check the invariant composes over rounds: one run crowded with
+    collision groups (all contested) + a well-spread easy remainder."""
+    rng = np.random.default_rng(7)
+    init = np.arange(0, 4_000_000, 1000, dtype=np.float64)  # sparse
+    idx = LearnedIndex.build(init, method="pgm", eps=32, gap_rho=0.3)
+    # ~3000 keys crammed into a handful of runs -> contested via
+    # crowding; plus ~3000 spread keys -> slot-easy
+    crowded = np.unique(rng.choice(np.arange(1, 4000, dtype=np.float64),
+                                   3000, replace=False)) + 0.5
+    spread = np.setdiff1d(
+        rng.choice(4_000_000, 4000, replace=False).astype(np.float64),
+        np.concatenate([init, crowded]))[:3000]
+    batch = np.concatenate([crowded, spread])
+    batch = batch[rng.permutation(batch.size)]
+    seq = copy.deepcopy(idx)
+    pay = np.arange(batch.size)
+    for i, k in enumerate(batch):
+        seq.insert(float(k), int(pay[i]))
+    counts = idx.insert_batch(batch, pay)
+    assert counts["slot"] + counts["chain"] == batch.size
+    assert 0 <= counts["contested"] <= batch.size
+    assert counts["contested"] >= 1  # the crowded runs really contested
+    assert _state_equal(seq.gapped, idx.gapped)
+    # and the typed report enforces it
+    from repro.core.results import IngestReport
+    with pytest.raises(AssertionError):
+        IngestReport(n=10, slot=5, chain=6, contested=0, epoch=0)
+    with pytest.raises(AssertionError):
+        IngestReport(n=10, slot=5, chain=5, contested=11, epoch=0)
+
+
+def test_delete_batch_flushes_pending_overlay():
+    """delete_batch owns its flush (same semantics as insert_batch) —
+    buffered scalar chain inserts must not bill the next reader."""
+    x = make_keys("iot", 6_000, seed=3)
+    idx = LearnedIndex.build(x, method="pgm", eps=64, gap_rho=0.1)
+    rng = np.random.default_rng(3)
+    mids = np.setdiff1d(x[:-1] + np.diff(x) * 0.5, x)[:400]
+    for i, k in enumerate(mids):  # scalar path: buffers in the overlay
+        idx.insert(float(k), 1000 + i)
+    ga = idx.gapped
+    assert ga.links._pend_n > 0  # the overlay really is pending
+    removed = ga.delete_batch(rng.choice(x, 200, replace=False))
+    assert removed == 200
+    assert ga.links._pend_n == 0  # flushed by THIS batch, not a reader
+
+
+# ---------------------------------------------------------------------------
+# device ingest placement: bit-identity with the host oracle
+# ---------------------------------------------------------------------------
+
+
+def _mids(keys, rng, n):
+    mids = np.setdiff1d(keys[:-1] + np.rint(np.diff(keys) * 0.5), keys)
+    return rng.permutation(mids)[:n]
+
+
+@pytest.mark.parametrize("width,method", [
+    (2 ** 22, "pgm"), (2 ** 40, "pgm"), (2 ** 22, "fiting"),
+])
+def test_device_placements_bit_identical(width, method):
+    rng = np.random.default_rng(0)
+    keys = np.unique(rng.choice(width, 25_000, replace=False)
+                     ).astype(np.float64)
+    idx = Index.build(keys, method=method, eps=64, gap_rho=0.2)
+    idx.sync_device()
+    # one partition chunk (4096 floor) — bigger batches are split and
+    # re-derived host-side past the first chunk, so the handle gates
+    # the device path on batch_chunk()
+    batch = _mids(keys, rng, 4_000)
+    prims = idx._device_placements(batch)
+    assert prims is not None  # pair-exact integer keys: device serves
+    host = idx.gapped.placement_primitives(batch)
+    for f in prims:
+        assert np.array_equal(prims[f], host[f]), f
+    # end state: device-placed ingest == host-partition insert_batch
+    other = copy.deepcopy(idx)
+    rep = idx.ingest(batch, 1_000_000 + np.arange(batch.size))
+    assert rep.placement == "device"
+    assert rep.slot + rep.chain == rep.n
+    other.gapped.insert_batch(batch, 1_000_000 + np.arange(batch.size))
+    assert _state_equal(idx.gapped, other.gapped)
+
+
+def test_pallas_ingest_place_matches_fused_xla():
+    """The Pallas kernel (interpret mode on CPU) and the fused-XLA
+    variant run ONE shared body — bit-identical outputs, incl. the
+    escape mask."""
+    rng = np.random.default_rng(1)
+    keys = np.unique(rng.choice(2 ** 40, 20_000, replace=False)
+                     ).astype(np.float64)
+    idx = Index.build(keys, method="pgm", eps=64, gap_rho=0.25)
+    idx.sync_device()
+    batch = _mids(keys, rng, 4_000)
+    px, ex = ingest_place(idx._engine.arrays, batch, impl="xla")
+    pp, ep = ingest_place(idx._engine.arrays, batch, impl="pallas",
+                          interpret=True, key_tile=256)
+    for f in px:
+        assert np.array_equal(px[f], pp[f]), f
+    assert np.array_equal(ex, ep)
+
+
+def test_device_placement_gates():
+    """Stale device epoch / non-PLM predict / tiny batches fall back to
+    the host oracle (placement == 'host'), never to wrong primitives."""
+    rng = np.random.default_rng(2)
+    keys = np.unique(rng.choice(2 ** 22, 20_000, replace=False)
+                     ).astype(np.float64)
+    idx = Index.build(keys, method="pgm", eps=64, gap_rho=0.2)
+    batch = _mids(keys, rng, 2_000)
+    # no engine yet -> host
+    assert idx._device_placements(batch) is None
+    rep = idx.ingest(batch, np.arange(batch.size))
+    assert rep.placement == "host" and rep.slot + rep.chain == rep.n
+    # engine frozen at the current epoch -> device serves the next batch
+    batch2 = _mids(np.sort(np.concatenate([keys, batch])), rng, 2_000)
+    idx.sync_device()
+    assert idx.device_epoch == idx.epoch
+    rep2 = idx.ingest(batch2, np.arange(batch2.size))
+    assert rep2.placement == "device"
+    # scalar mutation leaves the device stale -> host again
+    more = _mids(np.sort(np.concatenate(
+        [keys, batch, batch2])), rng, 1_500)
+    idx.insert(float(more[0]), 7)
+    assert idx._device_placements(more[1:]) is None
+    # rmi's predict is not its exported plm -> never device-placed
+    idx_rmi = Index.build(keys, method="rmi", n_leaf=64, gap_rho=0.2)
+    idx_rmi.sync_device()
+    assert idx_rmi._device_placements(batch) is None

@@ -1,0 +1,80 @@
+"""Property tests (hypothesis, importorskip-guarded like the other
+suites) for the per-key contested demotion and the device ingest-place
+backend — the deterministic companions live in test_ingest_place.py."""
+
+import copy
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import Index, LearnedIndex
+
+
+def _state_equal(g1, g2):
+    return (np.array_equal(g1.slot_key, g2.slot_key)
+            and np.array_equal(g1.occupied, g2.occupied)
+            and np.array_equal(g1.payload, g2.payload)
+            and g1.n_keys == g2.n_keys
+            and dict(g1.links) == dict(g2.links))
+
+
+def _mids(keys, rng, n):
+    mids = np.setdiff1d(keys[:-1] + np.rint(np.diff(keys) * 0.5), keys)
+    return rng.permutation(mids)[:n]
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n0=st.integers(60, 1200),
+       n_ins=st.integers(10, 700),
+       dense=st.integers(2, 5),
+       eps=st.sampled_from([4, 16, 64]),
+       rho=st.sampled_from([0.02, 0.1, 0.4]))
+def test_property_per_key_demotion_state_identical(seed, n0, n_ins, dense,
+                                                   eps, rho):
+    """Dense integer grids force shared runs, slot collisions, crowded
+    collision groups, and global-min displacements — the shapes the
+    per-key demotion rules (D1-D4 + chain-certain) must arbitrate."""
+    rng = np.random.default_rng(seed)
+    span = n0 * dense
+    allk = rng.choice(span, size=min(span, n0 + n_ins),
+                      replace=False).astype(np.float64)
+    init = np.sort(allk[:n0])
+    ins = allk[n0:]
+    if ins.size == 0:
+        return
+    idx = LearnedIndex.build(init, method="pgm", eps=eps, gap_rho=rho)
+    seq = copy.deepcopy(idx)
+    pay = 10_000 + np.arange(ins.size)
+    for i, k in enumerate(ins):
+        seq.insert(float(k), int(pay[i]))
+    counts = idx.insert_batch(ins, pay)
+    assert counts["slot"] + counts["chain"] == ins.size
+    assert 0 <= counts["contested"] <= ins.size
+    assert _state_equal(seq.gapped, idx.gapped)
+
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(600, 4000),
+       wide=st.booleans(), rho=st.sampled_from([0.05, 0.2]))
+def test_property_device_placements_match_host(seed, n, wide, rho):
+    rng = np.random.default_rng(seed)
+    span = 2 ** 40 if wide else 2 ** 22
+    keys = np.unique(rng.choice(span, n, replace=False)).astype(np.float64)
+    if keys.size < 16:
+        return
+    idx = Index.build(keys, method="pgm", eps=16, gap_rho=rho)
+    idx.min_device_batch = 1
+    idx.sync_device()
+    batch = _mids(keys, rng, min(n, 1500))
+    if batch.size == 0:
+        return
+    prims = idx._device_placements(batch)
+    assert prims is not None
+    host = idx.gapped.placement_primitives(batch)
+    for f in prims:
+        assert np.array_equal(prims[f], host[f]), f
+
+
