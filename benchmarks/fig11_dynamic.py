@@ -14,7 +14,11 @@ analysis could not clear — they visit the scalar arrival-order replay).
 Writes ``BENCH_ingest.json`` at the repo root: the contested fraction +
 batched-vs-sequential sweep, gated by ``benchmarks.run`` (schema always,
 1.25x speedup regression against the recorded trajectory on full runs;
-``--smoke`` validates the committed schema without timing).
+``--smoke`` validates the committed schema without timing).  The file
+also carries the fused single-dispatch ingest sweep
+(``run_fused_dispatch``): ONE fused device dispatch (placement + slot
+scatter + CSR merge + rank/bound refresh) vs the two-dispatch
+place-then-delta path, per batch size, on a device-resident handle.
 
 Device staleness (``run_device_staleness``): clustered ingest bursts on
 an epoch-versioned ``Index`` whose device state follows via DELTA
@@ -110,6 +114,12 @@ def run(n=None, seed=0, method="pgm", eps=128, rho=0.3, batches=5,
                  "us": 0.0,
                  "geomean": float(np.exp(np.mean(np.log(sp)))),
                  "min": float(min(sp)), "max": float(max(sp))})
+    # fused single-dispatch ingest sweep: its rows join the ingest
+    # trajectory file below (fresh batch names — the regression gate
+    # starts guarding them from the first recorded full run onward);
+    # the geomean above stays the host batched-vs-sequential aggregate
+    rows += run_fused_dispatch(n=min(n, 120_000) if n else 120_000,
+                               seed=seed)
     # reduced sweeps (BENCH_FAST / n override) must NOT overwrite the
     # repo-root trajectory record the regression gate compares against
     # (same rule as kernel_bench) — toy-size speedups would read as
@@ -121,7 +131,10 @@ def run(n=None, seed=0, method="pgm", eps=128, rho=0.3, batches=5,
             "note": ("per-batch §5.3 batched insert vs sequential "
                      "insert() on a copy (state-identical arms); "
                      "contested_frac counts scalar-replay-visited keys "
-                     "across all recursive partition rounds"),
+                     "across all recursive partition rounds; "
+                     "fused_dispatch rows compare ONE fused device "
+                     "dispatch (insert_batch_ns) against the "
+                     "two-dispatch place+delta path (insert_seq_ns)"),
             "rows": [
                 {"batch": f"ingest.{r['name']}",
                  "contested_frac": r["contested_frac"],
@@ -139,6 +152,77 @@ def run(n=None, seed=0, method="pgm", eps=128, rho=0.3, batches=5,
             json.dumps(payload, indent=2))
     rows += run_device_staleness(n=min(n, 120_000) if n else 120_000,
                                  seed=seed)
+    return rows
+
+
+def run_fused_dispatch(n=120_000, seed=0, batch_sizes=(512, 2048, 8192),
+                       reps=3):
+    """Fused single-dispatch ingest vs the two-dispatch path, per batch.
+
+    Both arms start from the same device-resident ``Index`` and apply
+    the same well-spread midpoint batch; both end device-queryable:
+
+    * fused arm (``insert_batch_ns``): ONE device dispatch — placement,
+      slot scatter, CSR merge, rank/bound refresh in one graph, device
+      buffers adopted (``IngestReport.device == "fused"``);
+    * two-dispatch arm (``insert_seq_ns``): ``fused_ingest_enabled =
+      False`` — device placement dispatch, host partition, then the
+      delta-update dispatch to re-sync the device buffers.
+
+    Batches are strided midpoints, so the in-graph closure check accepts
+    (contested_frac is the two-dispatch arm's measured fraction — the
+    fused arm only ever commits contested-free batches); placement
+    ESCAPE rows (the ~1e-4 rounding-band ambiguity, per-key and
+    batch-independent) are pre-screened out, since one escape aborts
+    the graph and this sweep measures the accepted-batch path.  Timing
+    is interleaved best-of-``reps`` on fresh copies (arm state moves
+    forward each rep, so copies are rebuilt outside the timer; the
+    first rep absorbs graph compilation on each new shape bucket).
+    """
+    from repro.kernels.ops_gap import ingest_place
+
+    keys = np.unique(np.round(iot(n) * 64.0))  # f32-pair-exact grid
+    base = Index.build(keys, method="pgm", eps=64, gap_rho=0.15)
+    base.sync_device()
+    mids = np.setdiff1d(keys[:-1] + np.rint(np.diff(keys) * 0.5), keys)
+    rows = []
+    for n_b in batch_sizes:
+        if n_b > base.gapped.batch_chunk() or n_b > len(mids):
+            continue
+        batch = mids[:: max(1, len(mids) // n_b)][:n_b]
+        _, esc = ingest_place(base._engine.arrays, batch)
+        batch = batch[~np.asarray(esc, bool)]
+        n_b = len(batch)
+        pays = 20_000_000 + np.arange(n_b)
+
+        def arm(fused: bool):
+            a = copy.deepcopy(base)       # deepcopy drops the engine...
+            a.fused_ingest_enabled = fused
+            a.sync_device()               # ...refreeze outside the timer
+            t0 = time.perf_counter_ns()
+            rep = a.ingest(batch, pays)
+            return (time.perf_counter_ns() - t0) / n_b, rep, a
+
+        t_fused = t_two = float("inf")
+        rep_f = rep_t = idx_f = idx_t = None
+        for _ in range(reps):
+            dt, rep_f, idx_f = arm(True)
+            t_fused = min(t_fused, dt)
+            dt, rep_t, idx_t = arm(False)
+            t_two = min(t_two, dt)
+        assert rep_f.device == "fused", rep_f.device
+        # both arms end bit-identical and device-queryable
+        assert np.array_equal(idx_f.gapped.slot_key, idx_t.gapped.slot_key)
+        res = idx_f.lookup(batch, backend="fused", queries_sorted=True)
+        assert np.array_equal(np.asarray(res.payloads), pays)
+        rows.append({
+            "name": f"fused_dispatch.batch{n_b}",
+            "overall_ns": t_fused,
+            "contested_frac": rep_t.contested / n_b,
+            "insert_seq_ns": t_two,
+            "insert_batch_ns": t_fused,
+            "insert_speedup": t_two / max(t_fused, 1e-9),
+        })
     return rows
 
 
@@ -168,6 +252,11 @@ def run_device_staleness(n=120_000, seed=0, rounds=4, probe_n=8_192):
         idx = Index.build(keys, method="pgm", eps=64, gap_rho=0.15)
         idx.refreeze_contested_frac = 1.1   # policy off: pure delta
         idx.refreeze_link_growth = 10.0
+        # this experiment measures the DELTA-sync arm's staleness; the
+        # fused single-dispatch path refreshes rank rows/bounds in-graph
+        # and would never let the tables drift (run_fused_dispatch covers
+        # that path)
+        idx.fused_ingest_enabled = False
         idx.sync_device()
         return idx
 

@@ -6,6 +6,14 @@ Prints ``name,us_per_call,derived`` CSV.  BENCH_N scales dataset size
 regression gate is skipped — sizes differ — but schemas still validate);
 BENCH_NO_GATE=1 skips the gate entirely.
 
+``--nightly`` is the full-timing mode: the reduced-sweep and no-gate
+escape hatches are ignored, every module runs at full size, the timing
+harness triples its best-of reps (exported as BENCH_NIGHTLY=1, consumed
+by kernel_bench's ``_reps``) for lower-variance trajectory records, and
+the regression gate always runs.  ``--smoke`` stays the cheap tier-1
+entry: committed-schema validation plus tiny-shape read-path AND
+fused-ingest bit-identity checks, no timing, no file writes.
+
 Three trajectory files are written at the repo root (kernel_bench the
 first two, fig11_dynamic the third), all validated and gated here after
 the sweep:
@@ -158,9 +166,11 @@ def smoke() -> None:
     """``python -m benchmarks.run --smoke`` — cheap CI gate called from
     scripts/tier1.sh: validates the COMMITTED trajectory schemas (so
     benchmark schema drift fails tier-1 without paying for a timed
-    sweep) and runs a tiny-shape engine sanity check (fused / oracle /
-    both Pallas kernels bit-identical; fused scheduling engaged).  No
-    timing, no gate, no file writes."""
+    sweep) and runs tiny-shape sanity checks — read path (fused /
+    oracle / both Pallas kernels bit-identical; fused scheduling
+    engaged) and write path (fused single-dispatch ingest bit-identical
+    to sequential insert(); adopted device buffers answer the new
+    keys).  No timing, no gate, no file writes."""
     # same validator the timed sweep uses, pointed at the COMMITTED
     # files (no recorded baseline -> no regression compare)
     errors = check_trajectories({}, regressions=False)
@@ -195,6 +205,37 @@ def smoke() -> None:
     if not np.array_equal(np.asarray(out), np.asarray(out_o)):
         errors.append("smoke: engine fused lookup diverged from oracle")
 
+    # tiny-shape fused-ingest sanity: the single-dispatch write path
+    # commits bit-identically to sequential insert() and the adopted
+    # device buffers answer the new keys exactly
+    import copy
+
+    mids = np.setdiff1d(keys[:-1] + np.rint(np.diff(keys) * 0.5), keys)
+    batch = mids[:: max(1, len(mids) // 600)][:512]
+    pays = 30_000_000 + np.arange(len(batch))
+    a = copy.deepcopy(idx)
+    a.fused_ingest_enabled = True  # force the fused arm (CPU auto: off)
+    a.sync_device()
+    rep = a.ingest(batch, pays)
+    if rep.device != "fused":
+        errors.append(f"smoke: ingest took device={rep.device!r}, "
+                      "expected the fused single dispatch")
+    b = copy.deepcopy(idx)
+    for k, p in zip(batch, pays):
+        b.insert(float(k), int(p))
+    ga, gb = a.gapped, b.gapped
+    if not (np.array_equal(ga.slot_key, gb.slot_key)
+            and np.array_equal(ga.occupied, gb.occupied)
+            and np.array_equal(ga.payload[ga.occupied],
+                               gb.payload[gb.occupied])
+            and np.array_equal(ga.lookup_batch(batch),
+                               gb.lookup_batch(batch))):
+        errors.append("smoke: fused ingest state diverged from "
+                      "sequential insert()")
+    res = a.lookup(batch, backend="fused", queries_sorted=True)
+    if not np.array_equal(np.asarray(res.payloads), pays):
+        errors.append("smoke: post-fused-ingest device lookup diverged")
+
     for e in errors:
         print(f"# SMOKE: {e}", file=sys.stderr)
     if errors:
@@ -207,6 +248,12 @@ def main() -> None:
     if "--smoke" in sys.argv[1:]:
         smoke()
         return
+    nightly = "--nightly" in sys.argv[1:]
+    if nightly:
+        # full-timing mode: no reduced sweep, no gate opt-out, 3x reps
+        os.environ["BENCH_NIGHTLY"] = "1"
+        os.environ.pop("BENCH_FAST", None)
+        os.environ.pop("BENCH_NO_GATE", None)
     fast = os.environ.get("BENCH_FAST", "0") == "1"
     gate = os.environ.get("BENCH_NO_GATE", "0") != "1"
     n = 60_000 if fast else None

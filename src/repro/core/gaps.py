@@ -460,6 +460,55 @@ class GappedArray:
         return {"p": p, "free": free, "pv": pv, "ub": ub,
                 "bracket": bracket}
 
+    def verify_placements(self, keys: np.ndarray, prims: dict) -> np.ndarray:
+        """Host-side f64 certification of device-computed placement
+        primitives, for wide key sets the per-key pair-exactness gate
+        refuses but whose pair mapping is ALIAS-FREE over the stored
+        set: returns the mask of rows whose ``p``/``ub``/``pv`` could
+        not be certified (the caller recomputes those per-key), and
+        overwrites ``free``/``bracket`` in place with exact host
+        recomputations (cheap gathers once ``p`` is certified — cheaper
+        than certifying the device's pair-rounded interval tests).
+
+        The checks are sound, not heuristic: ``p`` is compared against
+        the exact host prediction, and ``ub``/``pv`` are accepted only
+        when the f64 slot keys bracket them exactly the way their
+        defining ``searchsorted`` would — a bracketing check uniquely
+        identifies the searchsorted answer, duplicate (carried) slot
+        key values included.
+        """
+        keys = np.asarray(keys, np.float64)
+        m = self.n_slots
+        sk = self.slot_key
+        p = np.asarray(prims["p"], np.int64)
+        ub = np.asarray(prims["ub"], np.int64)
+        pv = np.asarray(prims["pv"], np.int64)
+        p_true = np.clip(np.rint(self.mech.predict(keys)), 0,
+                         m - 1).astype(np.int64)
+        bad = p != p_true
+        # ub: rightmost slot with key <= k  <=>  sk[ub] <= k < sk[ub+1]
+        # (sentinels: ub == -1 iff k < sk[0]; +inf above the top slot)
+        lo_ok = np.where(ub >= 0, sk[np.clip(ub, 0, m - 1)] <= keys,
+                         keys < sk[0])
+        hi = np.where(ub + 1 < m, sk[np.clip(ub + 1, 0, m - 1)], np.inf)
+        bad |= ~((ub >= -1) & (ub < m) & lo_ok & (keys < hi))
+        # pv: searchsorted(sk, nx, 'left') - 1  <=>  sk[pv] < nx <= sk[pv+1]
+        nx = sk[p_true]
+        pl_ok = np.where(pv >= 0, sk[np.clip(pv, 0, m - 1)] < nx, True)
+        ph = np.where(pv + 1 < m, sk[np.clip(pv + 1, 0, m - 1)], np.inf)
+        bad |= ~((pv >= -1) & (pv < m) & pl_ok & (nx <= ph))
+        # free/bracket: exact recomputation (same as placement_primitives)
+        free = ~self.occupied[p_true]
+        prev_max = np.where(pv >= 0, sk[np.clip(pv, 0, m - 1)], -np.inf)
+        if self.links:
+            sel = np.flatnonzero(free & (pv >= 0) & ~bad)
+            if sel.size:
+                cm = self.links.chain_max_keys(pv[sel])
+                np.maximum.at(prev_max, sel, cm)
+        prims["free"] = free
+        prims["bracket"] = free & (prev_max < keys) & (keys < nx)
+        return bad
+
     def insert_batch(self, keys: np.ndarray, payloads: np.ndarray,
                      placements: Optional[dict] = None) -> dict:
         """Batched §5.3 inserts; final state is bit-identical to calling

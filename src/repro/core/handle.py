@@ -138,6 +138,17 @@ class Index:
     refreeze_contested_frac: float = 0.25
     refreeze_link_growth: float = 0.10
     min_device_batch: int = 512
+    # single-dispatch device-resident ingest (fused place + slot scatter
+    # + CSR merge + rank/bound refresh in ONE dispatch, device buffers
+    # adopted from the graph's outputs).  None = AUTO: on for Pallas
+    # (accelerator) engines, where one kernel beats two dispatches +
+    # host round trips; off for the fused-XLA CPU engine, where the
+    # graph's fixed O(state) cost (full-array carried-key repair scan,
+    # functional whole-buffer updates) loses to the sparse host delta
+    # at steady state (measured in BENCH_ingest fused_dispatch rows).
+    # True/False force the arm either way; the staleness benchmarks pin
+    # False to keep exercising the delta machinery in isolation.
+    fused_ingest_enabled: Optional[bool] = None
     # delta updates refresh window bounds for touched segments only;
     # past this fraction of all segments the refresh is skipped (stale
     # bounds are sound — the refreeze policy catches sustained growth)
@@ -238,6 +249,7 @@ class Index:
             refreeze_contested_frac=self.refreeze_contested_frac,
             refreeze_link_growth=self.refreeze_link_growth,
             min_device_batch=self.min_device_batch,
+            fused_ingest_enabled=self.fused_ingest_enabled,
             refresh_segments_frac=self.refresh_segments_frac,
             stats=dict(self.stats),
         )
@@ -561,16 +573,25 @@ class Index:
                 or self.gapped.n_slots >= (1 << 24)):
             return None
         from ..kernels import ops as _ops
+        verify = False
         if self._engine.arrays.key_wide:
             # wide freeze: the stored set must be per-key pair-exact
             # (not merely alias-free — a pair-ROUNDED stored key could
             # land on the other side of a batch key) and so must the
-            # batch, so device pair compares equal host f64 compares
+            # batch, so device pair compares equal host f64 compares.
+            # A merely ALIAS-FREE wide set no longer refuses outright:
+            # its device primitives are certified row-by-row on the
+            # host (exact f64 bracketing checks, see
+            # GappedArray.verify_placements) with failing rows
+            # recomputed per-key — reported as "device-verified"
             self._key_caps()  # refresh the cache to this epoch
             cached = self._keycap_cache
             if not (cached is not None and cached[0] == self.epoch
                     and cached[3] and _ops.keys_pair_exact(keys)):
-                return None
+                if not (cached is not None and cached[0] == self.epoch
+                        and cached[2]):
+                    return None  # aliasing set: only the host is exact
+                verify = True
         elif _ops.keys_need_pair(keys):
             return None  # wide batch against a narrow (plain-f32) freeze
         prims, esc = self._engine.ingest_place(keys)
@@ -581,7 +602,130 @@ class Index:
                 v[esc] = sub[f]
         self.stats["ingest_place_escapes"] = (
             self.stats.get("ingest_place_escapes", 0) + n_esc)
+        if verify:
+            bad = self.gapped.verify_placements(keys, prims)
+            n_bad = int(np.count_nonzero(bad))
+            if n_bad:
+                sub = self.gapped.placement_primitives(keys[bad])
+                for f, v in prims.items():
+                    v[bad] = sub[f]
+            self.stats["ingest_place_verify_patched"] = (
+                self.stats.get("ingest_place_verify_patched", 0) + n_bad)
+        self._placement_mode = "device-verified" if verify else "device"
         return prims
+
+    def _fused_eligible(self, keys, payloads) -> bool:
+        """Gates for the single-dispatch fused ingest: the device-
+        placement gates (epoch, PLM mechanism, one-chunk batch, per-key
+        pair exactness — verified mode is NOT eligible: its host
+        certification would defeat the zero-host-intermediate point)
+        PLUS the fused graph's own statics: i32 sort/index range, a
+        nonzero frozen link image for the CSR merge, and payloads
+        within the frozen narrow width."""
+        ga = self.gapped
+        if (self._engine is None or self._device_epoch != self.epoch
+                or self.method not in ("pgm", "fiting") or ga is None
+                or keys.shape[0] < self.min_device_batch
+                or keys.shape[0] > ga.batch_chunk()
+                or ga.n_slots >= (1 << 22)
+                or ga.n_keys == 0):
+            return False
+        arrays = self._engine.arrays
+        if int(arrays.link_keys.shape[0]) == 0:
+            return False
+        from ..kernels import ops as _ops
+        if not arrays.wide and payloads.size and (
+                int(payloads.min()) < _ops._I32_MIN
+                or int(payloads.max()) > _ops._I32_MAX):
+            return False
+        if arrays.key_wide:
+            self._key_caps()
+            cached = self._keycap_cache
+            if not (cached is not None and cached[0] == self.epoch
+                    and cached[3] and _ops.keys_pair_exact(keys)):
+                return False
+        elif _ops.keys_need_pair(keys):
+            return False
+        return True
+
+    def _fused_dispatch(self, keys, payloads):
+        """Issue the ONE fused device dispatch; returns ``(prims, ok,
+        state)``.  On an in-graph abort (``ok`` False) the primitives
+        are escape-patched and handed to the host partition — exactly
+        the two-dispatch path's inputs, from the dispatch already paid
+        for, so an abort never wastes the round trip."""
+        prims, esc, ok, reasons, state = self._engine.fused_ingest(
+            keys, payloads)
+        self._placement_mode = "device"
+        if ok:
+            return prims, True, state
+        from ..kernels.ops_gap import FUSED_ABORT_BITS
+        ab = self.stats.setdefault("fused_aborts", {})
+        for i, name in enumerate(FUSED_ABORT_BITS):
+            if reasons >> i & 1:
+                ab[name] = ab.get(name, 0) + 1
+        n_esc = int(np.count_nonzero(esc))
+        if n_esc:
+            sub = self.gapped.placement_primitives(keys[esc])
+            for f, v in prims.items():
+                v[esc] = sub[f]
+        self.stats["ingest_place_escapes"] = (
+            self.stats.get("ingest_place_escapes", 0) + n_esc)
+        return prims, False, None
+
+    def _commit_fused(self, keys, payloads, prims, state, t0):
+        """Commit an accepted fused dispatch.  Host state advances
+        through the normal partition fed the SAME dispatch's primitives
+        (the host stays authoritative and bit-identical to sequential
+        ``insert()``); device state advances by ADOPTING the dispatch's
+        output buffers — nothing is diffed, rebuilt, or re-uploaded.
+        The mirror is marked source-advanced/image-dirty, so a later
+        HOST-side delta lazily rebuilds its padded images first."""
+        from ..kernels import ops as _ops
+        eng = self._engine
+        cand = np.asarray(prims["free"], bool) & np.asarray(
+            prims["bracket"], bool)
+        counts = self.gapped.insert_batch(keys, payloads, placements=prims)
+        self._key_caps_after_batch(keys)
+        self.stats["ingests"] += 1
+        if (counts["contested"] != 0 or counts["slot"] != state["n_slot"]
+                or counts["chain"] != state["n_chain"]):
+            # unreachable by the closure-trivial acceptance argument
+            # (the graph aborts on every shape the partition could
+            # demote) — if it ever fires, distrust the graph image and
+            # refreeze instead of adopting it
+            self._log_touch(keys)
+            self.refreeze()
+            return IngestReport(
+                n=int(keys.shape[0]), slot=counts["slot"],
+                chain=counts["chain"], contested=counts["contested"],
+                epoch=self.epoch, device="refreeze",
+                seconds=time.perf_counter() - t0, placement="device")
+        # adopt the in-graph refreshed state + catch the host mirrors up
+        err_lo = eng.err_lo
+        err_hi = (eng.err_hi if eng.err_hi is not None
+                  else np.zeros_like(err_lo))
+        seg = state["seg"][cand]
+        dlt = state["dlt"][cand].astype(np.float32)
+        np.minimum.at(err_lo, seg, dlt - np.float32(1.0))
+        np.maximum.at(err_hi, seg, dlt + np.float32(1.0))
+        eng.adopt_fused_state(state, err_lo, err_hi)
+        eng.refresh_rank_rows(keys, self.gapped.slot_key, upload=False)
+        self._device_epoch = self.epoch
+        self._pending_touch = []
+        self._mirror.sources = _ops._snapshot_sources(self)
+        self._mirror.images = None  # lazily rebuilt by the next delta
+        self.stats["fused_ingests"] = (
+            self.stats.get("fused_ingests", 0) + 1)
+        device = "fused"
+        if self._link_growth_fraction() > self.refreeze_link_growth:
+            self.refreeze()  # capacity-growth policy still applies
+            device = "refreeze"
+        return IngestReport(
+            n=int(keys.shape[0]), slot=counts["slot"],
+            chain=counts["chain"], contested=0, epoch=self.epoch,
+            device=device, device_elems=0,
+            seconds=time.perf_counter() - t0, placement="device")
 
     def ingest(self, keys, payloads) -> IngestReport:
         """Batched insert; placements computed on the frozen device
@@ -589,13 +733,35 @@ class Index:
         backend; host-oracle fallback otherwise), then the device state
         is delta-updated in place (full refreeze only past the policy
         thresholds — see module doc).
+
+        On an eligible device-resident engine the ENTIRE ingest is one
+        fused dispatch: placement, slot scatter + carried repair, the
+        chain arm's CSR merge, and the rank-row/window-bound refresh
+        run in a single graph whose outputs the engine adopts directly
+        (``device == "fused"``).  The graph self-vetoes on any shape
+        the host partition could demote (collision groups, contested
+        rows, capacity overflows, duplicates) — those batches fall back
+        to the host partition REUSING the same dispatch's primitives.
         """
         self._need_gapped()
         t0 = time.perf_counter()
         keys = np.atleast_1d(np.asarray(keys, np.float64))
         payloads = np.atleast_1d(np.asarray(payloads, np.int64))
-        prims = self._device_placements(keys)
-        placement = "host" if prims is None else "device"
+        prims = None
+        placement = "host"
+        enabled = self.fused_ingest_enabled
+        if enabled is None:  # auto: the fused write graph pays off on
+            enabled = (      # accelerator engines (see the field doc)
+                getattr(self._engine, "fused_impl", "xla") == "pallas")
+        if enabled and self._fused_eligible(keys, payloads):
+            prims, ok, state = self._fused_dispatch(keys, payloads)
+            placement = "device"
+            if ok:
+                return self._commit_fused(keys, payloads, prims, state, t0)
+        if prims is None:
+            prims = self._device_placements(keys)
+            placement = ("host" if prims is None
+                         else getattr(self, "_placement_mode", "device"))
         counts = self.gapped.insert_batch(keys, payloads, placements=prims)
         self._key_caps_after_batch(keys)
         self._log_touch(keys)

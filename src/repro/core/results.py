@@ -69,12 +69,19 @@ class IngestReport:
       replay, summed over ALL recursive partition rounds (the contested
       remainder driving the refreeze policy); always ``<= n``.
     * ``placement`` — where the placement primitives were computed:
-      ``"host"`` (numpy partition) or ``"device"`` (the ingest-place
-      kernel/fused-XLA backend against the frozen device arrays).
+      ``"host"`` (numpy partition), ``"device"`` (the ingest-place
+      kernel/fused-XLA backend against the frozen device arrays, exact
+      by the per-key pair-exactness gate), or ``"device-verified"``
+      (device primitives against a merely alias-free wide key set,
+      validated row-by-row on the host in f64 with failing rows
+      recomputed per-key — the widened-gate mode).
     * ``epoch`` — host epoch after the ingest.
     * ``device`` — how the frozen device state was brought forward:
       ``"none"`` (no device state materialized yet — it will freeze
-      lazily on the next device lookup), ``"delta"`` (in-place scatter of
+      lazily on the next device lookup), ``"fused"`` (the single-
+      dispatch ingest wrote the device buffers in-graph — placement,
+      slot scatter, CSR merge, and rank/bound refresh in ONE dispatch;
+      nothing was re-uploaded), ``"delta"`` (in-place scatter of
       changed slot/payload entries + CSR link tail appends), or
       ``"refreeze"`` (full rebuild: a threshold crossed or a capacity /
       dtype static changed).

@@ -78,29 +78,70 @@ for integer keys < 2^48.  BOTH fused implementations compare pairs end
 to end, so wide keys (e.g. paged-KV composite keys) finally have a
 device kernel path; only the legacy kernel is narrow-only.
 
-Ingest backend contract (device-side §5.3 placement)
-----------------------------------------------------
-Writes have a device stage too: ``ops_gap.ingest_place`` (surfaced as
-``QueryEngine.ingest_place``) computes an insert batch's placement
-primitives — predicted slot, occupancy, run boundaries (``pv``/``ub``),
-order-check bracket — directly against the frozen device arrays, so
-``Index.ingest`` ships (slot, key, payload) placements into the CSR
-merge instead of re-deriving everything in host numpy.  Same split as
-the fused lookup: a Pallas kernel on TPU (``gap_place.ingest_place_call``,
-frozen tables VMEM-resident), the fused-XLA graph on CPU/GPU — BOTH run
-one shared per-key body (``gap_place.ingest_place_body``), so they are
-bit-identical by construction.  The contract with the host:
+Ingest backend contract (device-side §5.3, single dispatch)
+-----------------------------------------------------------
+Writes can be a single fused dispatch, like reads.  On an eligible
+device-resident engine with the fused write graph enabled
+(``Index.fused_ingest_enabled`` — auto: ON for Pallas/accelerator
+engines, where one kernel beats two dispatches plus host round trips;
+OFF for the fused-XLA CPU engine, where the graph's fixed O(state)
+cost — full-array carried-key repair scan, functional whole-buffer
+updates — loses to the sparse host delta at steady state, measured in
+BENCH_ingest's ``fused_dispatch`` rows), ``Index.ingest`` issues ONE
+device invocation (``ops_gap.fused_ingest``, surfaced as
+``QueryEngine.fused_ingest``) whose graph chains four stages with no
+host round trip between them:
+
+1. **placement** — the shared per-key body
+   (``gap_place.ingest_place_body``; composed from the Pallas kernel on
+   TPU, inlined in the fused-XLA graph elsewhere) computes predicted
+   slot, occupancy, run boundaries (``pv``/``ub``), bracket, escape;
+2. **slot arm** — scatter the bracketed-free keys/payloads into their
+   slots and repair the carried keys with one reverse pair-min scan
+   (the associative-scan twin of ``GappedArray._repair_carried``);
+3. **chain arm** — a device CSR merge: one pair bisect positions the
+   sorted chain keys, a prefix-sum shift relocates every old entry, and
+   the offsets advance by a cumsum — the in-graph twin of the host
+   ``CSRLinks._merge`` single-allocation merge (no ``np.insert``);
+4. **read-table refresh** — the touched bucket->rank rows recompute
+   against the NEW slot keys and the touched segments' window bounds
+   widen in-graph, so the committed engine needs no separate
+   ``refresh_rank_rows``/``refresh_bounds`` upload.
+
+The graph is **closure-trivial or abort**: it detects, in-graph, every
+shape the host partition's demotion closure could act on — collision
+groups, contested rows, D1/D4 demotions, duplicates (in-batch, slot,
+or chain), chain/link capacity overflows, placement escapes — and on
+any hit returns ``ok=False`` with the buffers UNTOUCHED.  Accepted
+batches provably partition as ``slot = free & bracket``/``chain =
+rest`` at the target ``ub``, which is exactly what the graph committed;
+the handle then advances the authoritative host state through the
+normal partition fed the same dispatch's primitives, adopts the device
+output buffers (``QueryEngine.adopt_fused_state`` — nothing diffed or
+re-uploaded; the mirror goes source-advanced/image-dirty and rebuilds
+its padded images lazily on the next host-side delta), and reports
+``device="fused"``.  Aborted batches reuse those primitives on the
+host-partition + delta path — an abort never wastes the dispatch.
+
+The two-dispatch path (place, then delta sync) remains for everything
+the fused gates refuse: ``ops_gap.ingest_place`` / ``QueryEngine
+.ingest_place`` computes the primitives alone, with the same contract:
 
 * ``GappedArray.placement_primitives`` is the ORACLE — the device
   result, after the escape patch, must equal it bit-for-bit (property-
   tested in tests/test_ingest_place.py); the host partition then
   consumes either transparently (``insert_batch(..., placements=)``).
-* Exactness is gated, not assumed: the handle only routes placement to
-  the device when the stored AND batch keys are per-key pair-exact
-  (integer keys < 2^48 — every compare equals the host f64 compare),
-  the mechanism's ``predict`` is its exported PLM (pgm/fiting), the
-  device state is at the host epoch, and the slot count fits i32/f32
-  indexing (< 2^24).  Anything else silently stays on the host oracle.
+* Exactness is gated, not assumed: placement routes to the device when
+  the stored AND batch keys are per-key pair-exact (integer keys <
+  2^48 — every compare equals the host f64 compare), the mechanism's
+  ``predict`` is its exported PLM (pgm/fiting), the device state is at
+  the host epoch, and the slot count fits i32/f32 indexing.  A merely
+  ALIAS-FREE wide stored set (continuous keys, pairwise distinguishable
+  but not per-key reconstructible) no longer refuses outright: the
+  device primitives are certified row-by-row on the host with exact
+  f64 bracketing checks (``GappedArray.verify_placements``) and failing
+  rows recomputed per-key — reported as ``placement="device-verified"``
+  (this mode is NOT fused-eligible: certification is host work).
 * Slot prediction runs in double-f32 (pair slopes/intercepts carried in
   ``IndexArrays.seg_slope_lo``/``seg_icept_lo``); keys whose prediction
   lands within a padded error band of a .5 rounding boundary return an
@@ -150,8 +191,8 @@ from .ops import (HostMirror, IndexArrays, QueryEngine, batched_lookup,
                   build_radix_router, build_rank_router, delta_update,
                   freeze_state, from_learned_index, keys_need_pair,
                   keys_pair_exact, pair_alias_free, split_key_pair)
-from .ops_gap import (gap_positions_device, gap_positions_oracle,
-                      ingest_place)
+from .ops_gap import (fused_ingest, gap_positions_device,
+                      gap_positions_oracle, ingest_place)
 from .ref import chain_hit_index, lookup_ref, predict_ref, resolve_chains
 
 __all__ = [
@@ -165,6 +206,7 @@ __all__ = [
     "delta_update",
     "freeze_state",
     "from_learned_index",
+    "fused_ingest",
     "gap_positions_device",
     "gap_positions_oracle",
     "ingest_place",

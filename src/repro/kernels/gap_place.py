@@ -341,6 +341,278 @@ def _ingest_place_kernel(
                     + 4 * escape.astype(jnp.int32))
 
 
+_I32MAX = 2 ** 31 - 1  # sort sentinel: above any slot/link index
+
+
+def _p_min(a, b):
+    """Pair lexicographic min (associative_scan combine fn)."""
+    ah, al = a
+    bh, bl = b
+    take = _p_le(ah, al, bh, bl)
+    return jnp.where(take, ah, bh), jnp.where(take, al, bl)
+
+
+def fused_ingest_body(
+    x_hi, x_lo,                       # (B,) f32 pair, +inf padded
+    pay_lo, pay_hi,                   # (B,) i32 payload pair (-1 padded)
+    segk_hi, segk_lo,                 # (Kpad,) segment tables
+    slope_hi, slope_lo,
+    icept_hi, icept_lo,
+    slot_hi, slot_lo,                 # (Mpad,) frozen slot keys
+    spay_lo, spay_hi,                 # (Mpad,) i32 slot payload pair
+    link_offsets,                     # (O,) i32 CSR offsets (tail=total)
+    link_hi, link_lo,                 # (Lpad,) chain keys (+inf padded)
+    lpay_lo, lpay_hi,                 # (Lpad,) i32 chain payload pair
+    rank_table,                       # (R+1,) i32 fused-lookup rank rows
+    rank_bounds_hi, rank_bounds_lo,   # (R+1,) f32 pair of bucket bounds
+    rank_scale,                       # (3,) f32 (kmin_hi, kmin_lo, scale)
+    elo, ehi,                         # (k_pad,) f32 per-seg window bounds
+    *,
+    n_slots: int,
+    max_chain: int,
+    key_wide: bool,
+    use_pallas: bool = False,
+    interpret: bool = True,
+    key_tile: int = 512,
+):
+    """The single-dispatch §5.3 ingest graph: placement -> partition ->
+    slot scatter + carried repair -> CSR-merge scatter -> rank-row /
+    window-bound refresh, all in ONE jitted XLA graph (the Pallas
+    placement kernel composes inside it on TPU — still one dispatch).
+
+    The graph serves exactly the batches whose host demotion closure is
+    TRIVIAL — no collision groups (no two batch keys predict the same
+    slot when either is free), no demotion rule fires on the first
+    round, no contested remainder — which it detects in-graph and
+    reports via ``reasons``; everything else returns the placement
+    primitives untouched with ``ok=False`` so ``Index.ingest`` replays
+    the batch through the host partition + delta path (the primitives
+    are NOT wasted: they are the same ``ingest_place`` output the
+    two-dispatch path would have computed).  On the accepted batches the
+    split is provably the host's fixed point (``cand = free & bracket``,
+    every other key chains at its pre-batch ``ub``), so the produced
+    device images are bit-identical to freezing the post-batch host
+    state:
+
+    * slot arm — masked scatter of the key pair + payload pair at
+      ``p[cand]``, then the carried-key repair as a reverse pair-min
+      ``associative_scan`` (== ``_repair_carried``: pair lex order is
+      numeric order for pair-exact splits);
+    * chain arm — device CSR merge: chain entries are key-sorted
+      (target order == key order by the global CSR key invariant), a
+      strict pair bisect gives each its ``np.insert`` position, old
+      elements shift by ``searchsorted(pos, i, 'right')``, offsets gain
+      a prefix-sum of per-slot counts — single-allocation, no host
+      ``np.insert``;
+    * refresh arm — touched bucket rows of the fused lookup's rank
+      table are re-bisected against the NEW slot keys in-graph, and the
+      per-segment window bounds are widened by a scatter-min/max of the
+      inserted keys' (slot - predict) residuals.  Both tables are
+      stale-SOUND, so the f32 bound rounding here only moves the
+      fallback rate, never correctness.
+
+    Every state output is gated on ``ok`` (aborted graphs return the
+    old arrays untouched).  Duplicate keys — in-batch, vs a slot key,
+    or vs a chain key — abort, and the host replay raises the same
+    ``KeyError`` the sequential path would.
+    """
+    B = x_hi.shape[0]
+    m_pad = slot_hi.shape[0]
+    O = link_offsets.shape[0]
+    l_pad = link_hi.shape[0]
+    k_pad = segk_hi.shape[0]
+    iota = jnp.arange(B, dtype=jnp.int32)
+
+    # ---- stage 1: placement primitives (shared per-key body) ----------
+    if use_pallas:
+        p, pv, ub, flags = ingest_place_call(
+            x_hi, x_lo, segk_hi, segk_lo, slope_hi, slope_lo,
+            icept_hi, icept_lo, slot_hi, slot_lo, link_offsets,
+            link_hi, link_lo, key_tile=min(key_tile, B),
+            n_slots=n_slots, interpret=interpret)
+        free = (flags & 1) != 0
+        bracket = (flags & 2) != 0
+        escape = (flags & 4) != 0
+    else:
+        p, pv, ub, free, bracket, escape = ingest_place_body(
+            x_hi, x_lo, segk_hi, segk_lo, slope_hi, slope_lo,
+            icept_hi, icept_lo, slot_hi, slot_lo, link_offsets,
+            link_hi, link_lo, n_slots=n_slots)
+    p = p.astype(jnp.int32)
+    pv = pv.astype(jnp.int32)
+    ub = ub.astype(jnp.int32)
+    valid = jnp.isfinite(x_hi)
+    free &= valid
+    bracket &= valid
+    escape &= valid
+
+    # ---- stage 2: batch key ranks + in-batch duplicate detection ------
+    # all later key compares among batch keys become i32 rank compares
+    # (exact for the distinct keys dup detection guarantees)
+    xs_hi, xs_lo, perm = jax.lax.sort((x_hi, x_lo, iota), num_keys=2,
+                                      is_stable=True)
+    both_fin = jnp.isfinite(xs_hi[1:]) & jnp.isfinite(xs_hi[:-1])
+    dup_batch = jnp.any(both_fin & _p_eq(xs_hi[:-1], xs_lo[:-1],
+                                         xs_hi[1:], xs_lo[1:]))
+    rank = jnp.zeros(B, jnp.int32).at[perm].set(iota)
+
+    # ---- stage 3: closure-trivial partition + abort detection ---------
+    # collision groups: any free key sharing a predicted slot with any
+    # other batch key aborts (the host winner/loser machinery owns it)
+    pa = jnp.where(valid, p, _I32MAX)
+    ps_a, free_a = jax.lax.sort((pa, free.astype(jnp.int32)),
+                                num_keys=1, is_stable=True)
+    eq = (ps_a[1:] == ps_a[:-1]) & (ps_a[1:] != _I32MAX)
+    isdup_s = jnp.concatenate([eq, jnp.zeros(1, bool)]) \
+        | jnp.concatenate([jnp.zeros(1, bool), eq])
+    grp_abort = jnp.any(isdup_s & (free_a > 0))
+
+    cand = free & bracket
+    hard = valid & ~cand
+
+    # batch key == stored slot key -> the host raises KeyError
+    ubc = jnp.clip(ub, 0, m_pad - 1)
+    bdup_any = jnp.any(valid & (ub >= 0) & _p_eq(
+        jnp.take(slot_hi, ubc), jnp.take(slot_lo, ubc), x_hi, x_lo))
+
+    # leading-run displacement / contested (host rule D3 + class C)
+    c_abort = jnp.any(hard & (ub < 0))
+
+    # D1 (chain capture): a hard key chaining into a candidate's run
+    # with a LARGER key would demote the candidate on the host
+    runmax = jnp.full(n_slots + 1, -1, jnp.int32)
+    runmax = runmax.at[jnp.where(hard, ub + 1, 0)].max(
+        jnp.where(hard, rank, -1))
+    d1_any = jnp.any(cand & (rank < jnp.take(
+        runmax, jnp.clip(pv + 1, 0, n_slots))))
+
+    # D4 (co-monotonicity): adjacent candidates of one run whose slot
+    # order disagrees with key order demote on the host
+    pc = jnp.where(cand, p, _I32MAX)
+    ps_c, rk_c, pv_c = jax.lax.sort(
+        (pc, rank, jnp.where(cand, pv, -2)), num_keys=1, is_stable=True)
+    d4_any = jnp.any((ps_c[1:] != _I32MAX) & (ps_c[:-1] != _I32MAX)
+                     & (pv_c[1:] == pv_c[:-1]) & (rk_c[1:] <= rk_c[:-1]))
+    # (D2 cannot fire here: its occupier set is hard & free & bracket,
+    # empty once collision groups are excluded — cand == free & bracket)
+
+    # ---- stage 4: chain-arm counts + capacity checks ------------------
+    cnt = jnp.zeros(O, jnp.int32).at[jnp.where(hard, ub + 1, 0)].add(
+        jnp.where(hard, 1, 0))
+    n_chain = jnp.sum(hard.astype(jnp.int32))
+    n_slot = jnp.sum(cand.astype(jnp.int32))
+    L_old = link_offsets[n_slots]
+    ub1 = jnp.clip(ub + 1, 0, O - 1)
+    old_len = jnp.take(link_offsets, ub1) \
+        - jnp.take(link_offsets, jnp.clip(ub, 0, O - 1))
+    chain_over = jnp.any(hard & (old_len + jnp.take(cnt, ub1) > max_chain))
+    link_over = L_old + n_chain > l_pad
+
+    # ---- stage 5: device CSR merge (the np.insert replacement) --------
+    # chain entries sorted by key == sorted by (target, key): per-slot
+    # chain key ranges ascend with the slot (global CSR invariant)
+    ch_hi = jnp.where(hard, x_hi, jnp.inf)
+    ch_lo = jnp.where(hard, x_lo, 0.0)
+    sh, sl_, spl, sph, jflag = jax.lax.sort(
+        (ch_hi, ch_lo, pay_lo, pay_hi, hard.astype(jnp.int32)),
+        num_keys=2, is_stable=True)
+    jmask = jflag > 0
+    link_trips = int(max(l_pad, 2) - 1).bit_length() + 1
+    pos = _bisect_pair(link_hi, link_lo, sh, sl_, link_trips,
+                       strict=True) + 1
+    posc = jnp.clip(pos, 0, l_pad - 1)
+    edup_any = jnp.any(jmask & (pos < L_old) & _p_eq(
+        jnp.take(link_hi, posc), jnp.take(link_lo, posc), sh, sl_))
+    cj = jnp.cumsum(jmask.astype(jnp.int32)) - 1
+    dst_new = jnp.where(jmask, pos + cj, l_pad)
+    pos_eff = jnp.where(jmask, pos, l_pad + 1)  # sorted: jmask is a prefix
+    old_i = jnp.arange(l_pad, dtype=jnp.int32)
+    dst_old = old_i + jnp.searchsorted(pos_eff, old_i,
+                                       side="right").astype(jnp.int32)
+    new_lhi = jnp.full(l_pad, jnp.inf, jnp.float32) \
+        .at[dst_old].set(link_hi, mode="drop") \
+        .at[dst_new].set(sh, mode="drop")
+    new_llo = jnp.zeros(l_pad, jnp.float32) \
+        .at[dst_old].set(link_lo, mode="drop") \
+        .at[dst_new].set(sl_, mode="drop")
+    new_lpl = jnp.full(l_pad, -1, jnp.int32) \
+        .at[dst_old].set(lpay_lo, mode="drop") \
+        .at[dst_new].set(spl, mode="drop")
+    new_lph = jnp.full(l_pad, -1, jnp.int32) \
+        .at[dst_old].set(lpay_hi, mode="drop") \
+        .at[dst_new].set(sph, mode="drop")
+    new_off = link_offsets + jnp.cumsum(cnt)
+
+    # ---- stage 6: slot arm — scatter + carried-key repair -------------
+    nb_hi = jnp.concatenate([slot_hi[1:], jnp.full(1, jnp.inf,
+                                                   jnp.float32)])
+    nb_lo = jnp.concatenate([slot_lo[1:], jnp.zeros(1, jnp.float32)])
+    occ_old = _p_lt(slot_hi, slot_lo, nb_hi, nb_lo)
+    idx_c = jnp.where(cand, p, m_pad)
+    occ_new = occ_old.at[idx_c].set(True, mode="drop")
+    sc_hi = slot_hi.at[idx_c].set(x_hi, mode="drop")
+    sc_lo = slot_lo.at[idx_c].set(x_lo, mode="drop")
+    new_shi, new_slo = jax.lax.associative_scan(
+        _p_min,
+        (jnp.where(occ_new, sc_hi, jnp.inf),
+         jnp.where(occ_new, sc_lo, 0.0)),
+        reverse=True)
+    new_pl = spay_lo.at[idx_c].set(pay_lo, mode="drop")
+    new_ph = spay_hi.at[idx_c].set(pay_hi, mode="drop")
+
+    # ---- stage 7: rank-row refresh against the NEW slot keys ----------
+    r_size = rank_table.shape[0] - 1
+    if key_wide:
+        xb = (x_hi - rank_scale[0]) + (x_lo - rank_scale[1])
+    else:
+        xb = x_hi - rank_scale[0]
+    b = jnp.clip(xb * rank_scale[2], 0.0,
+                 float(r_size - 1)).astype(jnp.int32)
+    rows = jnp.clip(jnp.concatenate([b - 1, b, b + 1]), 0, r_size)
+    rows_ok = jnp.concatenate([valid] * 3) & (rows < r_size)
+    slot_trips = int(max(m_pad, 2) - 1).bit_length() + 1
+    vals = _bisect_pair(new_shi, new_slo,
+                        jnp.take(rank_bounds_hi, rows),
+                        jnp.take(rank_bounds_lo, rows),
+                        slot_trips, strict=True) + 1
+    new_rank = rank_table.at[jnp.where(rows_ok, rows, r_size + 1)].set(
+        vals, mode="drop")
+
+    # ---- stage 8: window-bound widening for the inserted keys ---------
+    seg_trips = int(max(k_pad, 2) - 1).bit_length() + 1
+    seg = jnp.clip(_bisect_pair(segk_hi, segk_lo, x_hi, x_lo, seg_trips,
+                                strict=False), 0, k_pad - 1)
+    y1 = jnp.take(slope_hi, seg) * (x_hi - jnp.take(segk_hi, seg)) \
+        + jnp.take(icept_hi, seg)
+    dlt = p.astype(jnp.float32) - y1
+    segc = jnp.where(cand, seg, k_pad)
+    new_elo = elo.at[segc].min(dlt - 1.0, mode="drop")
+    new_ehi = ehi.at[segc].max(dlt + 1.0, mode="drop")
+
+    # ---- abort gating -------------------------------------------------
+    reasons = (jnp.any(escape).astype(jnp.int32)
+               + 2 * dup_batch.astype(jnp.int32)
+               + 4 * grp_abort.astype(jnp.int32)
+               + 8 * bdup_any.astype(jnp.int32)
+               + 16 * c_abort.astype(jnp.int32)
+               + 32 * d1_any.astype(jnp.int32)
+               + 64 * d4_any.astype(jnp.int32)
+               + 128 * chain_over.astype(jnp.int32)
+               + 256 * link_over.astype(jnp.int32)
+               + 512 * edup_any.astype(jnp.int32))
+    ok = reasons == 0
+    gate = lambda new, old: jnp.where(ok, new, old)  # noqa: E731
+    return (p, pv, ub, free, bracket, escape, ok, reasons,
+            n_slot, n_chain, seg, dlt,
+            gate(new_shi, slot_hi), gate(new_slo, slot_lo),
+            gate(new_pl, spay_lo), gate(new_ph, spay_hi),
+            gate(new_off, link_offsets),
+            gate(new_lhi, link_hi), gate(new_llo, link_lo),
+            gate(new_lpl, lpay_lo), gate(new_lph, lpay_hi),
+            gate(new_rank, rank_table),
+            gate(new_elo, elo), gate(new_ehi, ehi))
+
+
 @functools.partial(
     jax.jit, static_argnames=("key_tile", "n_slots", "interpret"))
 def ingest_place_call(

@@ -1523,6 +1523,53 @@ def _snapshot_sources(index) -> dict:
             "link_payloads": np.array(lpay, np.int64)}
 
 
+def _images_from_sources(sources: dict, statics: dict) -> dict:
+    """Rebuild the padded device-dtype delta images from a host source
+    snapshot — the lazy companion to the eager copy ``freeze_state``
+    makes.  A fused on-device ingest commit advances ``mirror.sources``
+    and marks ``images = None`` (the authoritative padded state lives
+    in the engine's device buffers, written by the dispatch itself);
+    the first HOST-side delta after such a commit lands here and pays
+    the padding cost then — never on the fused hot path.
+    """
+    w_tile = statics["w_tile"]
+    sk_hi, sk_lo = split_key_pair(sources["slot_key"])
+    skp = _pad_pow(sk_hi, w_tile, np.float32(np.inf))
+    skp = np.concatenate([skp, np.full(w_tile, np.inf, np.float32)])
+    sklp = np.concatenate([_pad_pow(sk_lo, w_tile, np.float32(0)),
+                           np.zeros(w_tile, np.float32)])
+    pay_lo, pay_hi = _split_i64(sources["payload"])
+    m_extra = skp.shape[0] - pay_lo.shape[0]
+    pay_lo = np.concatenate([pay_lo, np.full(m_extra, -1, np.int32)])
+    pay_hi = np.concatenate([pay_hi, np.full(m_extra, -1, np.int32)])
+    offsets = sources["offsets"]
+    offp = np.concatenate(
+        [offsets, np.full(skp.shape[0] + w_tile - offsets.shape[0],
+                          offsets[-1])]).astype(np.int32)
+    link_cap = statics["link_cap"]
+    lk_hi, lk_lo = split_key_pair(sources["link_keys"])
+    l_extra = link_cap - lk_hi.shape[0]
+    lk_hi = np.concatenate([lk_hi, np.full(l_extra, np.inf, np.float32)])
+    lk_lo = np.concatenate([lk_lo, np.zeros(l_extra, np.float32)])
+    lpay_lo, lpay_hi = _split_i64(sources["link_payloads"])
+    lpay_lo = np.concatenate([lpay_lo, np.full(l_extra, -1, np.int32)])
+    lpay_hi = np.concatenate([lpay_hi, np.full(l_extra, -1, np.int32)])
+    none32f = np.zeros(0, np.float32)
+    none32i = np.zeros(0, np.int32)
+    images = {
+        "slot_key": skp,
+        "slot_key_lo": sklp if statics["key_wide"] else none32f,
+        "payload": pay_lo,
+        "payload_hi": pay_hi if statics["wide"] else none32i,
+        "link_offsets": offp,
+        "link_keys": lk_hi,
+        "link_keys_lo": lk_lo if statics["key_wide"] else none32f,
+        "link_payloads": lpay_lo,
+        "link_payload_hi": lpay_hi if statics["wide"] else none32i,
+    }
+    return {f: img for f, img in images.items() if img.size}
+
+
 def _diff_grown(old: np.ndarray, new: np.ndarray) -> np.ndarray:
     """Changed indices between two source arrays that may differ in
     length; positions past the new length are unread on device (the
@@ -1605,6 +1652,12 @@ def delta_update(arrays: IndexArrays, mirror: HostMirror, index,
     # caller's gate — repro.core.Index checks it per epoch (_key_caps)
     # and drops the device state instead of syncing; a full check here
     # would cost an O(n log n) merge per delta.
+
+    if mirror.images is None:
+        # a fused on-device ingest commit advanced the sources without
+        # touching host images (device buffers were written in-dispatch)
+        # — rebuild them lazily, only now that a host delta needs them
+        mirror.images = _images_from_sources(src, st)
 
     updates = {}
 
@@ -1807,13 +1860,19 @@ class QueryEngine:
             self._host_cache = cached
         return cached[1]
 
-    def refresh_rank_rows(self, touched_keys, slot_key, slot_key_lo=None):
+    def refresh_rank_rows(self, touched_keys, slot_key, slot_key_lo=None,
+                          upload=True):
         """Incrementally refresh the fused path's rank table after a
         delta update: only the buckets covering the touched key values
         recompute their boundary ranks against the CURRENT (host) slot
         keys.  A skipped/stale row is sound — the fused search's bracket
         validation turns it into compacted fallbacks, never wrong
         results — so this is purely a fallback-rate knob.
+
+        ``upload=False`` refreshes only the host copy (``_rank_np``):
+        the fused single-dispatch ingest already wrote the refreshed
+        rows into the device table in-graph, so the commit path only
+        needs the host mirror caught up for FUTURE incremental calls.
         """
         touched = np.asarray(touched_keys, np.float64)
         kmin, scale, r_size = self._rank_meta
@@ -1852,7 +1911,8 @@ class QueryEngine:
             kmax = float(fin[-1]) if fin.size else kmin
             vals[top] = np.searchsorted(sk, kmax, side="right")
         self._rank_np[rows] = vals
-        self._rank_table = jnp.asarray(self._rank_np)
+        if upload:
+            self._rank_table = jnp.asarray(self._rank_np)
 
     def ingest_place(self, keys):
         """Device §5.3 ingest placement against the frozen arrays: the
@@ -1865,6 +1925,67 @@ class QueryEngine:
                       impl=("pallas" if self.fused_impl == "pallas"
                             else "xla"),
                       interpret=self.interpret)
+
+    def _rank_bounds(self):
+        """Device-resident f32-pair bucket-boundary keys for the fused
+        ingest graph's in-dispatch rank-row refresh.  Lazy (~2x(r+1)
+        f32, built once per engine): lookups never touch it, and rebuild
+        is only needed on refreeze — which makes a new engine anyway."""
+        cached = getattr(self, "_rank_bounds_pair", None)
+        if cached is None:
+            kmin, scale, r_size = self._rank_meta
+            bounds = kmin + np.arange(int(r_size) + 1,
+                                      dtype=np.float64) / scale
+            bh, bl = split_key_pair(bounds)
+            cached = (jnp.asarray(bh), jnp.asarray(bl))
+            self._rank_bounds_pair = cached
+        return cached
+
+    def fused_ingest(self, keys, payloads):
+        """Single-dispatch §5.3 ingest against the frozen arrays: ONE
+        jitted graph computes placement primitives, the slot-arm
+        scatter + carried-key repair, the device CSR merge for the
+        chain arm, and the rank-row/window-bound refresh (see
+        ``ops_gap.fused_ingest``).  Returns ``(prims, escape, ok,
+        reasons, state)`` — on ``ok`` the caller commits ``state`` via
+        ``adopt_fused_state``; on abort the primitives are still valid
+        for the host-partition fallback, so the dispatch is never
+        wasted."""
+        from .ops_gap import fused_ingest as _fused
+        bh, bl = self._rank_bounds()
+        return _fused(
+            self.arrays, keys, payloads, rank_table=self._rank_table,
+            rank_bounds_hi=bh, rank_bounds_lo=bl,
+            rank_scale=self._rank_scale, elo=self._elo, ehi=self._ehi,
+            max_chain=self.arrays.max_chain, impl=self.fused_impl,
+            interpret=self.interpret, min_bucket=self.min_bucket)
+
+    def adopt_fused_state(self, state: dict, err_lo=None,
+                          err_hi=None) -> None:
+        """Install the fused dispatch's output buffers (same shapes and
+        statics — compiled executables stay valid), including the
+        in-graph refreshed rank table and window bounds.  Fields whose
+        frozen image is zero-length (narrow key/payload lo/hi splits)
+        are skipped: the graph computes them from zeros and they must
+        stay zero-length in ``IndexArrays``.  ``err_lo``/``err_hi`` are
+        the caller-updated HOST bound mirrors; the width-derived jit
+        statics are re-derived from them exactly as ``refresh_bounds``
+        does (no re-upload — the device copies were written in-graph).
+        """
+        updates = {f: state[f] for f in _DELTA_FIELDS
+                   if int(getattr(self.arrays, f).shape[0])}
+        self.arrays = dataclasses.replace(self.arrays, **updates)
+        self._rank_table = state["rank_table"]
+        self._elo = state["elo"]
+        self._ehi = state["ehi"]
+        if err_lo is not None:
+            err_lo = np.asarray(err_lo, np.float32)
+            err_hi = np.asarray(err_hi, np.float32)
+            self.err_lo = err_lo
+            self.err_hi = err_hi
+            self._trips = _bisect_trips(err_lo, err_hi)
+            self._flat_w = _flat_width(err_lo, err_hi)
+            self._fused_flat_w = _fused_flat_width(err_lo, err_hi)
 
     def bucket(self, n: int) -> int:
         b = self.min_bucket

@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .gap_place import gap_place_call, ingest_place_body, ingest_place_call
+from .gap_place import (fused_ingest_body, gap_place_call,
+                        ingest_place_body, ingest_place_call)
 from .ops import _pad_pow
 
 
@@ -166,3 +167,122 @@ def ingest_place(arrays, keys, *, impl: str = "xla",
         "bracket": np.array(bracket, dtype=bool),
     }
     return prims, np.array(escape, dtype=bool)
+
+
+# ---------------------------------------------------------------------------
+# single-dispatch fused ingest (placement + partition + slot scatter +
+# device CSR merge + rank/bound refresh — ONE graph, see
+# gap_place.fused_ingest_body for the correctness contract)
+# ---------------------------------------------------------------------------
+
+# abort-reason bit names (the graph's ``reasons`` bitmask), for stats
+FUSED_ABORT_BITS = (
+    "escape", "dup_batch", "collision_group", "slot_dup", "contested",
+    "d1_demote", "d4_demote", "chain_overflow", "link_overflow",
+    "chain_dup",
+)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_slots", "max_chain", "key_wide", "use_pallas", "interpret",
+    "key_tile"))
+def _fused_ingest_xla(
+        x_hi, x_lo, pay_lo, pay_hi, segk_hi, segk_lo, slope_hi, slope_lo,
+        icept_hi, icept_lo, slot_hi, slot_lo, spay_lo, spay_hi,
+        link_offsets, link_hi, link_lo, lpay_lo, lpay_hi, rank_table,
+        rank_bounds_hi, rank_bounds_lo, rank_scale, elo, ehi, *,
+        n_slots, max_chain, key_wide, use_pallas, interpret, key_tile):
+    """The one device dispatch ``Index.ingest`` issues on the fused
+    path (the dispatch-counting shim in tests/test_fused_ingest.py
+    monkeypatches exactly this symbol)."""
+    return fused_ingest_body(
+        x_hi, x_lo, pay_lo, pay_hi, segk_hi, segk_lo, slope_hi, slope_lo,
+        icept_hi, icept_lo, slot_hi, slot_lo, spay_lo, spay_hi,
+        link_offsets, link_hi, link_lo, lpay_lo, lpay_hi, rank_table,
+        rank_bounds_hi, rank_bounds_lo, rank_scale, elo, ehi,
+        n_slots=n_slots, max_chain=max_chain, key_wide=key_wide,
+        use_pallas=use_pallas, interpret=interpret, key_tile=key_tile)
+
+
+def fused_ingest(arrays, keys, payloads, *, rank_table, rank_bounds_hi,
+                 rank_bounds_lo, rank_scale, elo, ehi, max_chain,
+                 impl: str = "xla", interpret: bool = True,
+                 min_bucket: int = 256, key_tile: int = 512):
+    """Single-dispatch device-resident ingest.
+
+    Pads the batch to a power-of-two bucket (+inf keys / -1 payloads —
+    each bucket compiles once, like the fused lookup), runs the fused
+    graph, and returns ``(prims, escape, ok, reasons, state)``:
+
+    * ``prims``/``escape`` — the usual ``ingest_place`` contract (valid
+      whether or not the graph committed, so an aborted batch reuses
+      them on the host partition path at no extra dispatch);
+    * ``ok`` — True iff the graph produced the post-batch device
+      images; ``reasons`` is the abort bitmask (``FUSED_ABORT_BITS``);
+    * ``state`` — dict of NEW device arrays (slot/payload/link images,
+      rank table, window bounds) plus the downloaded ``seg``/``dlt``
+      residuals the caller mirrors into its host bound copies.  All
+      entries are live device buffers — nothing round-trips through
+      host numpy on the ok path.
+    """
+    from .ops import _split_i64, split_key_pair
+
+    keys = np.asarray(keys, np.float64)
+    payloads = np.asarray(payloads, np.int64)
+    n_b = keys.shape[0]
+    bucket = max(min_bucket, 1 << max(n_b - 1, 1).bit_length())
+    pad = bucket - n_b
+    x_hi, x_lo = split_key_pair(keys)
+    x_hi = np.concatenate([x_hi, np.full(pad, np.inf, np.float32)])
+    x_lo = np.concatenate([x_lo, np.zeros(pad, np.float32)])
+    p_lo, p_hi = _split_i64(payloads)
+    p_lo = np.concatenate([p_lo, np.full(pad, -1, np.int32)])
+    p_hi = np.concatenate([p_hi, np.full(pad, -1, np.int32)])
+
+    key_wide = bool(arrays.key_wide)
+    wide = bool(arrays.wide)
+    zeros_f = lambda a: jnp.zeros_like(a)  # noqa: E731
+    segk_lo = arrays.seg_first_key_lo if key_wide \
+        else zeros_f(arrays.seg_first_key)
+    slot_lo = arrays.slot_key_lo if key_wide else zeros_f(arrays.slot_key)
+    link_lo = arrays.link_keys_lo if key_wide \
+        else zeros_f(arrays.link_keys)
+    spay_hi = arrays.payload_hi if wide else zeros_f(arrays.payload)
+    lpay_hi = arrays.link_payload_hi if wide \
+        else zeros_f(arrays.link_payloads)
+
+    outs = _fused_ingest_xla(
+        jnp.asarray(x_hi), jnp.asarray(x_lo), jnp.asarray(p_lo),
+        jnp.asarray(p_hi), arrays.seg_first_key, segk_lo,
+        arrays.seg_slope, arrays.seg_slope_lo, arrays.seg_icept,
+        arrays.seg_icept_lo, arrays.slot_key, slot_lo, arrays.payload,
+        spay_hi, arrays.link_offsets, arrays.link_keys, link_lo,
+        arrays.link_payloads, lpay_hi, rank_table, rank_bounds_hi,
+        rank_bounds_lo, rank_scale, elo, ehi,
+        n_slots=arrays.n_slots, max_chain=int(max_chain),
+        key_wide=key_wide, use_pallas=(impl == "pallas"),
+        interpret=interpret, key_tile=key_tile)
+    (p, pv, ub, free, bracket, escape, ok, reasons, n_slot, n_chain,
+     seg, dlt) = outs[:12]
+    (slot_key, slot_key_lo, payload, payload_hi, link_offsets, link_keys,
+     link_keys_lo, link_payloads, link_payload_hi, new_rank, new_elo,
+     new_ehi) = outs[12:]
+    prims = {  # writable copies: escape rows are patched in place
+        "p": np.asarray(p)[:n_b].astype(np.int64),
+        "free": np.array(np.asarray(free)[:n_b], dtype=bool),
+        "pv": np.asarray(pv)[:n_b].astype(np.int64),
+        "ub": np.asarray(ub)[:n_b].astype(np.int64),
+        "bracket": np.array(np.asarray(bracket)[:n_b], dtype=bool),
+    }
+    state = {
+        "slot_key": slot_key, "slot_key_lo": slot_key_lo,
+        "payload": payload, "payload_hi": payload_hi,
+        "link_offsets": link_offsets, "link_keys": link_keys,
+        "link_keys_lo": link_keys_lo, "link_payloads": link_payloads,
+        "link_payload_hi": link_payload_hi, "rank_table": new_rank,
+        "elo": new_elo, "ehi": new_ehi,
+        "n_slot": int(n_slot), "n_chain": int(n_chain),
+        "seg": np.asarray(seg)[:n_b], "dlt": np.asarray(dlt)[:n_b],
+    }
+    return (prims, np.array(np.asarray(escape)[:n_b], dtype=bool),
+            bool(ok), int(reasons), state)

@@ -85,13 +85,16 @@ class PagedKVCache:
 
         Skeleton keys are claimed through ONE vectorized
         ``index.update_batch`` (payload-only scatter, one epoch bump);
-        fresh keys go through ONE ``index.ingest`` — whose placement
-        stage runs on the frozen device arrays when the engine is at
-        the host epoch (the kernels ingest-place backend; composite
-        keys are integers < 2^48, so they are pair-exact and the
-        device compares are exact) — and then delta-updates the frozen
-        device buffers so the engine stays hot.  Returns the physical
-        pages.
+        fresh keys go through ONE ``index.ingest`` — on engines with
+        the fused write graph enabled (``Index.fused_ingest_enabled``,
+        auto-on for Pallas) that is a single fused dispatch (placement
+        + slot scatter + CSR merge + rank/bound refresh in one graph;
+        composite keys are integers < 2^48, so they are pair-exact and
+        the device compares are exact); otherwise the two-dispatch
+        place-then-delta path.  The physical-page claim
+        is a vectorized tail slice of the free list (same pages, same
+        order as the old one-pop-per-page loop — the last host-side
+        per-element copy on this path).  Returns the physical pages.
         """
         request_ids = np.atleast_1d(np.asarray(request_ids, np.int64))
         logical_pages = np.atleast_1d(np.asarray(logical_pages, np.int64))
@@ -102,16 +105,15 @@ class PagedKVCache:
             raise MemoryError("KV cache out of pages")
         keys = (request_ids << _PAGE_SHIFT) | logical_pages
         kf = keys.astype(np.float64)
-        phys = np.array([self.free_pages.pop() for _ in range(n)],
-                        np.int64)
+        phys = np.array(self.free_pages[: -n - 1: -1], np.int64)
+        del self.free_pages[-n:]
         existing = self.index.gapped.contains_batch(kf)  # skeleton: claim
         if np.any(existing):
             self.index.update_batch(kf[existing], phys[existing])
         fresh = ~existing
         if np.any(fresh):
             self.index.ingest(kf[fresh], phys[fresh])
-        for k, ph in zip(keys.tolist(), phys.tolist()):
-            self.allocated[k] = ph
+        self.allocated.update(zip(keys.tolist(), phys.tolist()))
         return phys
 
     def lookup_batch(self, request_ids: np.ndarray,

@@ -1,0 +1,86 @@
+"""Hypothesis properties for the fused single-dispatch ingest path
+(optional dep — the whole module skips when hypothesis is absent; the
+deterministic companions in test_fused_ingest.py always run).
+
+* fused-or-abort: for random spread/clustered/mixed batches, whichever
+  arm the handle takes (one-dispatch fused commit, or in-graph abort +
+  host-partition fallback reusing the dispatch's primitives), the final
+  host state is bit-identical to sequential ``insert()`` and the device
+  answers the committed batch exactly;
+* queue demux: any submission pattern through ``MicroBatchQueue``
+  resolves each ticket to exactly what that caller would have gotten
+  alone.
+"""
+
+import copy
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+given = hypothesis.given
+settings = hypothesis.settings
+st = hypothesis.strategies
+
+from test_fused_ingest import _build, _mids, _state_equal  # noqa: E402
+
+_BASE = {}
+
+
+def _base():
+    if not _BASE:
+        _BASE["idx"], _BASE["keys"], _ = _build(n=12_000, seed=11)
+    return _BASE["idx"], _BASE["keys"]
+
+
+@settings(max_examples=10, deadline=None)
+@given(data=st.data())
+def test_prop_fused_or_abort_matches_sequential(data):
+    base, keys = _base()
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 16)))
+    n_b = data.draw(st.integers(512, 1_500))
+    mode = data.draw(st.sampled_from(["spread", "clustered", "mixed"]))
+    mids = _mids(keys)
+    if mode == "spread":
+        batch = mids[:: max(1, len(mids) // n_b)][:n_b]
+    elif mode == "clustered":
+        lo = int(rng.integers(0, max(1, len(mids) - n_b)))
+        batch = mids[lo: lo + n_b]
+    else:
+        half = n_b // 2
+        lo = int(rng.integers(0, max(1, len(mids) - half)))
+        batch = np.unique(np.concatenate(
+            [mids[:: max(1, len(mids) // half)][:half],
+             mids[lo: lo + half]]))
+    pays = 6_000_000 + np.arange(batch.size)
+    idx = copy.deepcopy(base)
+    idx.sync_device()
+    seq = copy.deepcopy(base)
+    rep = idx.ingest(batch, pays)
+    if rep.device == "fused":
+        assert rep.contested == 0
+    for i, k in enumerate(batch):
+        seq.insert(float(k), int(pays[i]))
+    assert _state_equal(idx.gapped, seq.gapped)
+    # device answers the committed batch exactly on either arm
+    res = idx.lookup(batch, backend="fused", queries_sorted=True)
+    assert np.array_equal(np.asarray(res.payloads), pays)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sizes=st.lists(st.integers(1, 40), min_size=1, max_size=12),
+       seed=st.integers(0, 2 ** 16))
+def test_prop_queue_demux_matches_per_caller(sizes, seed):
+    from repro.serving.engine import MicroBatchQueue
+
+    base, keys = _base()
+    rng = np.random.default_rng(seed)
+    q = MicroBatchQueue(base, min_bucket=32)
+    parts = [rng.choice(keys, sz) for sz in sizes]
+    tickets = [q.submit_lookup(p) for p in parts]
+    q.flush()
+    assert q.stats["lookup_dispatches"] == 1
+    for t, p in zip(tickets, parts):
+        res = q.result(t)
+        assert np.array_equal(np.asarray(res.payloads),
+                              base.gapped.lookup_batch(p))

@@ -179,6 +179,7 @@ def test_delta_refresh_tracks_refreeze_fallback_rate():
     idx = Index.build(keys, method="pgm", eps=64, gap_rho=0.15)
     idx.refreeze_contested_frac = 1.1
     idx.refreeze_link_growth = 10.0
+    idx.fused_ingest_enabled = False  # this test measures the DELTA arm
     idx.sync_device()
     mids = np.setdiff1d(keys[:-1] + np.rint(np.diff(keys) * 0.5), keys)
     lo = len(mids) // 4

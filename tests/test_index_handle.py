@@ -46,6 +46,7 @@ def test_epoch_delta_rounds_state_identical_to_rebuild(seed):
     rng = np.random.default_rng(seed)
     x = make_keys("uniform_int", 20_000, seed=seed)
     idx = Index.build(x, method="pgm", eps=64, gap_rho=0.25)
+    idx.fused_ingest_enabled = False  # pin to the delta arm under test
     pool = np.setdiff1d(
         np.unique(rng.integers(1, 2 ** 22, 40_000)).astype(np.float64), x)
     rng.shuffle(pool)
@@ -102,6 +103,7 @@ def test_delta_and_refreeze_lookups_bit_identical():
     # disable the policy thresholds so this run exercises the delta arm
     idx_delta.refreeze_contested_frac = 1.1
     idx_delta.refreeze_link_growth = 10.0
+    idx_delta.fused_ingest_enabled = False
     mids = np.setdiff1d(x[:-1] + np.diff(x) * rng.random(len(x) - 1), x)
     # warm round: grows the frozen chain/link capacities (may refreeze)
     idx_delta.ingest(mids[800:1600], np.arange(800))
