@@ -125,6 +125,7 @@ def run(n=None, seed=0, method="pgm", eps=128, rho=0.3, batches=5,
     # (same rule as kernel_bench) — toy-size speedups would read as
     # phantom regressions on the next full run
     if write and n is None:
+        probe = _abort_probe()
         payload = {
             "benchmark": "ingest.batched_vs_sequential",
             "dataset": "iot",
@@ -147,12 +148,38 @@ def run(n=None, seed=0, method="pgm", eps=128, rho=0.3, batches=5,
             "contested_frac_max": float(max(
                 r["contested_frac"] for r in rows
                 if "contested_frac" in r)),
+            # fused-abort telemetry (IngestReport.abort_reasons /
+            # .fused_aborts): the crafted crowded-batch probe's veto,
+            # answering "how often does the write graph refuse, and
+            # why" from this file alone (the sweep rows above are
+            # pre-screened committing batches, aborts there are 0)
+            "fused_aborts_total": int(probe.fused_aborts),
+            "fused_abort_reasons": sorted(probe.abort_reasons),
         }
         (_ROOT / "BENCH_ingest.json").write_text(
             json.dumps(payload, indent=2))
     rows += run_device_staleness(n=min(n, 120_000) if n else 120_000,
                                  seed=seed)
     return rows
+
+
+def _abort_probe(n=40_000):
+    """Craft a batch the fused write graph must VETO (a contiguous run
+    crammed with new keys trips the in-graph closure check) and return
+    its ``IngestReport`` — the per-batch ``abort_reasons`` and the
+    engine's cumulative ``fused_aborts`` ride the trajectory file so
+    the veto rate is answerable from ``BENCH_ingest.json`` alone."""
+    keys = np.arange(0, 100 * n, 100, dtype=np.float64)
+    idx = Index.build(keys, method="pgm", eps=32, gap_rho=0.2)
+    idx.fused_ingest_enabled = True
+    idx.sync_device()
+    batch = np.setdiff1d(
+        np.arange(5_001, 5_001 + 620, dtype=np.float64), keys)[:512]
+    rep = idx.ingest(batch, np.arange(batch.size))
+    assert rep.device != "fused" and rep.abort_reasons, (
+        "abort probe no longer aborts — rebuild it around a shape the "
+        "closure check refuses")
+    return rep
 
 
 def run_fused_dispatch(n=120_000, seed=0, batch_sizes=(512, 2048, 8192),

@@ -14,16 +14,18 @@ the regression gate always runs.  ``--smoke`` stays the cheap tier-1
 entry: committed-schema validation plus tiny-shape read-path AND
 fused-ingest bit-identity checks, no timing, no file writes.
 
-Three trajectory files are written at the repo root (kernel_bench the
-first two, fig11_dynamic the third), all validated and gated here after
-the sweep:
+Four trajectory files are written at the repo root (kernel_bench the
+first two, fig11_dynamic the third, shard_bench the fourth), all
+validated and gated here after the sweep:
 
 * ``BENCH_kernel.json`` — single-pass engine ns/query (before/after);
 * ``BENCH_api.json``    — ``Index`` handle ingest-to-queryable latency,
   delta-updated device sync vs full refreeze (bit-identical lookups);
 * ``BENCH_ingest.json`` — §5.3 batched-vs-sequential insert sweep with
   per-batch contested-replay fractions (the per-key demotion
-  partition's signature metric).
+  partition's signature metric) plus the fused-abort telemetry;
+* ``BENCH_shard.json``  — sharded fan-out vs single-device sweep
+  (shards x queries), router mispredict fraction, rebalance cost.
 
 The gate fails the run when a fresh ns/query (or delta-path latency)
 regresses more than 1.25x against the RECORDED trajectory (the committed
@@ -45,7 +47,7 @@ import traceback
 os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
 
 from . import (fig4_tradeoff, fig6_sampling, fig7_segments, fig8_nsafe,
-               fig9_gaps, fig11_dynamic, kernel_bench, table1)
+               fig9_gaps, fig11_dynamic, kernel_bench, shard_bench, table1)
 from .common import emit
 
 _ROOT = pathlib.Path(__file__).resolve().parents[1]
@@ -59,6 +61,7 @@ MODULES = [
     ("fig9", fig9_gaps),
     ("fig11", fig11_dynamic),
     ("kernel", kernel_bench),
+    ("shard", shard_bench),
 ]
 
 # trajectory schema: file -> (metric key, direction, required row keys).
@@ -87,6 +90,15 @@ TRAJECTORIES = {
         {"batch", "contested_frac", "insert_seq_ns", "insert_batch_ns",
          "speedup"},
     ),
+    # the shard file gates on the fan-out-vs-single-device SPEEDUP
+    # (shared machine state per run, the ratio cancels container-load
+    # swings): it guards the dispatch overhead of the route/exchange/
+    # unsort choreography around the fused per-shard search
+    "BENCH_shard.json": (
+        "speedup", "lower_is_worse",
+        {"batch", "shards", "queries", "sharded_ns_per_q",
+         "single_ns_per_q", "speedup", "router_mispredict_frac"},
+    ),
 }
 # required TOP-LEVEL fields per trajectory file (beyond "rows"):
 # the kernel file must RECORD its small-batch crossover so the gate can
@@ -94,8 +106,14 @@ TRAJECTORIES = {
 TOP_LEVEL_REQUIRED = {
     "BENCH_kernel.json": {"crossover_vs_oracle_queries"},
     # the ingest file must RECORD its aggregate speedup and worst-batch
-    # contested fraction so the trajectory shows both at a glance
-    "BENCH_ingest.json": {"speedup_geomean", "contested_frac_max"},
+    # contested fraction so the trajectory shows both at a glance, plus
+    # the fused-abort telemetry (how often the write graph vetoed, and
+    # why on the crafted crowded-batch probe)
+    "BENCH_ingest.json": {"speedup_geomean", "contested_frac_max",
+                          "fused_aborts_total", "fused_abort_reasons"},
+    # the shard file must RECORD the rebalance (split) cost and the
+    # worst router mispredict fraction alongside the per-row sweep
+    "BENCH_shard.json": {"rebalance_ms", "router_mispredict_frac_max"},
 }
 REGRESSION_FACTOR = 1.25
 
@@ -235,6 +253,24 @@ def smoke() -> None:
     res = a.lookup(batch, backend="fused", queries_sorted=True)
     if not np.array_equal(np.asarray(res.payloads), pays):
         errors.append("smoke: post-fused-ingest device lookup diverged")
+
+    # tiny-shape sharded sanity: the fan-out (degenerate D=1 on the
+    # single smoke device) and the grouped host route both answer
+    # bit-identically to the single-device handle above
+    sharded = Index.build(keys, shards=3, method="pgm", eps=64,
+                          gap_rho=0.2)
+    res_f = sharded.lookup(q, backend="fanout")
+    res_h = sharded.lookup(q[:200])
+    want = idx.lookup(q)
+    if not (np.array_equal(np.asarray(res_f.payloads),
+                           np.asarray(want.payloads))
+            and np.array_equal(np.asarray(res_f.found),
+                               np.asarray(want.found))):
+        errors.append("smoke: sharded fan-out diverged from the "
+                      "single-device handle")
+    if not np.array_equal(np.asarray(res_h.payloads),
+                          np.asarray(want.payloads)[:200]):
+        errors.append("smoke: sharded grouped-host route diverged")
 
     for e in errors:
         print(f"# SMOKE: {e}", file=sys.stderr)

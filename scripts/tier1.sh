@@ -4,8 +4,15 @@
 # gate (schema + tiny-shape sanity, no timing) so trajectory schema
 # drift fails tier-1 cheaply.  Extra args pass through to pytest,
 # e.g.  scripts/tier1.sh -k handle  or  scripts/tier1.sh -x.
+#
+# The XLA flags are scoped to the pytest COMMAND only: 8 host devices
+# so tests/test_sharded_index.py exercises the real shard_map
+# all-to-all fan-out (every test must also pass at 1 device), while
+# the smoke step keeps the real single CPU device that the committed
+# benchmark baselines were measured on.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-python -m pytest -q "$@"
+XLA_FLAGS="--xla_force_host_platform_device_count=8 --xla_cpu_multi_thread_eigen=false" \
+  python -m pytest -q "$@"
 python -m benchmarks.run --smoke

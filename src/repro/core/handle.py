@@ -180,13 +180,34 @@ class Index:
         sample_rate: float = 1.0,
         gap_rho: float = 0.0,
         rng: Optional[np.random.Generator] = None,
+        payloads: Optional[np.ndarray] = None,
+        shards: Optional[int] = None,
         **mech_kwargs,
-    ) -> "Index":
+    ):
+        """Build an index.  ``payloads`` overrides the stored payload
+        per key (default: the key's position, ``arange(n)``) — gapped
+        builds only.  ``shards=`` is the escape hatch into the
+        range-partitioned ``repro.dist.ShardedIndex`` (same call
+        surface, per-shard gap-inserted builds + learned router)."""
+        if shards is not None:
+            from ..dist.sharded import ShardedIndex
+            return ShardedIndex.build(
+                keys, shards=int(shards), method=method,
+                sample_rate=sample_rate, gap_rho=gap_rho, rng=rng,
+                payloads=payloads, **mech_kwargs)
         keys = np.asarray(keys, np.float64)
         if keys.ndim != 1 or keys.shape[0] < 2:
             raise ValueError("need a 1-D array of at least two keys")
         if not bool(np.all(np.diff(keys) > 0)):
             raise ValueError("keys must be sorted, strictly increasing (unique)")
+        if payloads is not None:
+            payloads = np.asarray(payloads, np.int64)
+            if payloads.shape != keys.shape:
+                raise ValueError("payloads must match keys 1:1")
+            if gap_rho <= 0.0:
+                raise ValueError("explicit payloads need a gapped build "
+                                 "(gap_rho > 0); static builds store "
+                                 "positions")
         factory = _mechanism_factory(method, **mech_kwargs)
         t0 = time.perf_counter()
         if gap_rho > 0.0:
@@ -198,7 +219,8 @@ class Index:
                 rkw["eps"] = max(4.0, float(mech_kwargs["eps"]) / 16.0)
                 refit_factory = _mechanism_factory(method, **rkw)
             ga = _gaps.build_gapped(
-                factory, keys, rho=gap_rho, sample_rate=sample_rate, rng=rng,
+                factory, keys, payloads=payloads, rho=gap_rho,
+                sample_rate=sample_rate, rng=rng,
                 refit_factory=refit_factory,
             )
             mech = ga.mech
@@ -661,9 +683,16 @@ class Index:
             return prims, True, state
         from ..kernels.ops_gap import FUSED_ABORT_BITS
         ab = self.stats.setdefault("fused_aborts", {})
-        for i, name in enumerate(FUSED_ABORT_BITS):
-            if reasons >> i & 1:
-                ab[name] = ab.get(name, 0) + 1
+        names = [name for i, name in enumerate(FUSED_ABORT_BITS)
+                 if reasons >> i & 1]
+        for name in names:
+            ab[name] = ab.get(name, 0) + 1
+        # per-batch reason + engine-lifetime counter ride the
+        # IngestReport (the abort telemetry the split-commit question
+        # in ROADMAP needs answered from BENCH_ingest.json)
+        self._last_abort_reasons = tuple(names)
+        self.stats["fused_abort_total"] = (
+            self.stats.get("fused_abort_total", 0) + 1)
         n_esc = int(np.count_nonzero(esc))
         if n_esc:
             sub = self.gapped.placement_primitives(keys[esc])
@@ -725,7 +754,8 @@ class Index:
             n=int(keys.shape[0]), slot=counts["slot"],
             chain=counts["chain"], contested=0, epoch=self.epoch,
             device=device, device_elems=0,
-            seconds=time.perf_counter() - t0, placement="device")
+            seconds=time.perf_counter() - t0, placement="device",
+            fused_aborts=self.stats.get("fused_abort_total", 0))
 
     def ingest(self, keys, payloads) -> IngestReport:
         """Batched insert; placements computed on the frozen device
@@ -749,6 +779,7 @@ class Index:
         payloads = np.atleast_1d(np.asarray(payloads, np.int64))
         prims = None
         placement = "host"
+        self._last_abort_reasons = ()
         enabled = self.fused_ingest_enabled
         if enabled is None:  # auto: the fused write graph pays off on
             enabled = (      # accelerator engines (see the field doc)
@@ -796,7 +827,9 @@ class Index:
             n=int(keys.shape[0]), slot=counts["slot"], chain=counts["chain"],
             contested=counts["contested"], epoch=self.epoch, device=device,
             device_elems=elems, seconds=time.perf_counter() - t0,
-            placement=placement)
+            placement=placement,
+            abort_reasons=getattr(self, "_last_abort_reasons", ()),
+            fused_aborts=self.stats.get("fused_abort_total", 0))
 
     def _roll_caps(self) -> None:
         """Advance the keycap cache to the current epoch UNCHANGED —

@@ -87,6 +87,16 @@ class IngestReport:
       dtype static changed).
     * ``device_elems`` — elements scattered on the delta path.
     * ``seconds`` — wall time of the whole ingest (host + device sync).
+    * ``abort_reasons`` — names of the in-graph abort bits the fused
+      single-dispatch write tripped on for THIS batch (empty when no
+      fused dispatch ran or it committed): ``contested`` / ``d1_demote``
+      / ``chain_overflow`` / ... (``kernels.ops_gap.FUSED_ABORT_BITS``).
+      An aborted batch still lands (host partition path), so a non-empty
+      tuple plus ``device != "fused"`` reads as "fused tried, vetoed".
+    * ``fused_aborts`` — the ENGINE's cumulative fused-abort counter
+      after this ingest (``Index.stats["fused_abort_total"]``), so a
+      benchmark row answers "how often does the write graph veto" from
+      the report stream alone.
     """
 
     n: int
@@ -98,6 +108,8 @@ class IngestReport:
     device_elems: int = 0
     seconds: float = 0.0
     placement: str = "host"
+    abort_reasons: tuple = ()
+    fused_aborts: int = 0
 
     def __post_init__(self):
         if self.slot + self.chain != self.n:

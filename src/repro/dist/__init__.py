@@ -1,5 +1,9 @@
 # Sharding policy: logical axis names -> mesh PartitionSpecs.
 # partitioning.py is the only module that spells a mesh axis name.
+#
+# sharded.py (range-partitioned ShardedIndex + learned ShardRouter) is
+# re-exported LAZILY: it pulls in core/kernels, and eager import here
+# would cycle through repro.core -> repro.kernels -> repro.dist.
 
 from .partitioning import (
     activation_constrainer,
@@ -15,4 +19,16 @@ __all__ = [
     "param_pspecs",
     "param_shardings",
     "pspec_for_axes",
+    "ShardRouter",
+    "ShardedIndex",
+    "ShardedIngestReport",
 ]
+
+_LAZY = ("ShardRouter", "ShardedIndex", "ShardedIngestReport")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from . import sharded as _sharded
+        return getattr(_sharded, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -12,7 +12,12 @@ ops.py:    the fused XLA pipeline, the legacy multi-op pipeline,
            ``QueryEngine``, and the epoch-versioned freeze/delta-update
            + incremental bound/rank refresh entry points
 ref.py:    pure-jnp oracle the kernels are validated against + the
-           shared ``chain_hit_index`` fori_loop CSR scan (pair aware).
+           shared ``chain_hit_index`` fori_loop CSR scan (pair aware)
+shard_fanout.py: the multi-device fan-out — stacked per-shard frozen
+           images mesh-placed via ``repro.dist.partitioning``, one
+           ``shard_map`` graph chaining route -> all-to-all exchange ->
+           the per-shard fused search -> inverse-permutation gather
+           (see "Shard fan-out contract" below).
 
 The ``Index`` handle contract (who calls what)
 ----------------------------------------------
@@ -152,6 +157,40 @@ the fused gates refuse: ``ops_gap.ingest_place`` / ``QueryEngine
   O(batch x log) predict/search/classify stage, the host's the few
   order-dependent keys the per-key commutativity analysis cannot clear.
 
+Shard fan-out contract (multi-device read path)
+-----------------------------------------------
+``repro.dist.ShardedIndex`` extends the decision table one level up:
+``backend="fanout"`` (the default for batches >= ``min_device_batch``
+when available) runs ONE ``shard_map`` dispatch over the mesh from
+``launch.mesh`` — per-shard images stacked on the ``data`` axis by
+``shard_fanout.stack_shard_images`` (consensus wide/key_wide statics,
+padded to the max shard's shapes), routed by the learned two-segment
+router with an in-graph exact bisect backstop (``_route_block``),
+exchanged via counting-sort send buffers + ``lax.all_to_all``, searched
+by the SAME ``_fused_search``/``_epilogue`` body as the single-device
+fused path, and unsorted back by inverse permutation.
+
+* **Exactness**: routing and search are exact in the ROUNDED key
+  representation (f32 round-trip narrow, hi/lo pair sum wide); the
+  learned router only prices the backstop.  Per-query escape flags ride
+  the exchange home, and escaped/dropped rows are re-resolved through
+  each owning shard's host views in O(#escapes) — the same stale-safe
+  philosophy as the fused lookup, across shards.
+* **Availability is gated, not assumed** (``ShardFanout.build`` raises
+  ``FanoutUnavailable``): PLM-mechanism shards only, pair-exact wide
+  key sets, strictly ordered rounded shard boundaries, and freezable
+  capacities.  The handle then falls back to the exact grouped host
+  route; only an explicit ``backend="fanout"`` request surfaces the
+  refusal as an error.
+* **Capacity, not correctness**: exchange buffers are sized by an
+  occupancy heuristic with a sticky per-bucket boost; overflow drops
+  are counted, flagged, and host-patched — skew costs escapes, never
+  wrong answers.
+* The fan-out serves a FROZEN shard set: any shard mutation (ingest,
+  split) retags the epochs and the next large lookup rebuilds the
+  stacked images (incremental per-shard delta into the stacked images
+  is deferred — see ROADMAP).
+
 Fused-path contract
 -------------------
 ``engine.lookup(queries, queries_sorted=..., backend=...)`` returns
@@ -194,11 +233,15 @@ from .ops import (HostMirror, IndexArrays, QueryEngine, batched_lookup,
 from .ops_gap import (fused_ingest, gap_positions_device,
                       gap_positions_oracle, ingest_place)
 from .ref import chain_hit_index, lookup_ref, predict_ref, resolve_chains
+from .shard_fanout import (FanoutUnavailable, ShardFanout,
+                           stack_shard_images)
 
 __all__ = [
+    "FanoutUnavailable",
     "HostMirror",
     "IndexArrays",
     "QueryEngine",
+    "ShardFanout",
     "batched_lookup",
     "build_radix_router",
     "build_rank_router",
@@ -217,4 +260,5 @@ __all__ = [
     "predict_ref",
     "resolve_chains",
     "split_key_pair",
+    "stack_shard_images",
 ]

@@ -65,7 +65,14 @@ class MicroBatchQueue:
     """Cross-caller batch aggregation for index lookups/ingests (see
     module doc "Serving aggregation").  Single-threaded cooperative
     batching: callers submit, someone flushes, tickets resolve in
-    submission order."""
+    submission order.
+
+    ``index`` is any handle with ``lookup(queries) -> LookupResult``
+    and ``ingest(keys, payloads) -> IngestReport`` — the single-device
+    ``repro.core.Index`` or the range-partitioned
+    ``repro.dist.ShardedIndex``, whose router then splits each
+    coalesced flush across shards (one fan-out dispatch instead of one
+    per caller)."""
 
     def __init__(self, index, min_bucket: int = 512):
         self.index = index
@@ -88,6 +95,8 @@ class MicroBatchQueue:
 
     def submit_lookup(self, keys) -> int:
         keys = np.atleast_1d(np.asarray(keys, np.float64))
+        if keys.shape[0] == 0:
+            raise ValueError("submit_lookup: empty key batch")
         t = self._ticket()
         self._lookups.append((t, keys))
         return t
@@ -95,6 +104,10 @@ class MicroBatchQueue:
     def submit_ingest(self, keys, payloads) -> int:
         keys = np.atleast_1d(np.asarray(keys, np.float64))
         payloads = np.atleast_1d(np.asarray(payloads, np.int64))
+        if keys.shape[0] == 0:
+            raise ValueError("submit_ingest: empty key batch")
+        if keys.shape != payloads.shape:
+            raise ValueError("submit_ingest: payloads must match keys 1:1")
         t = self._ticket()
         self._ingests.append((t, keys, payloads))
         return t
@@ -115,7 +128,16 @@ class MicroBatchQueue:
     def flush(self) -> None:
         """Coalesce everything pending into one dispatch per kind
         (ingests first, so lookups submitted after an ingest in the
-        same flush window observe its writes) and demux the results."""
+        same flush window observe its writes) and demux the results.
+
+        Raises ``RuntimeError`` when nothing is pending: a flush with
+        zero submissions has no last real key to pad the staging buffer
+        with, and silently reading the previous flush's stale staging
+        contents is exactly the bug this guard closes."""
+        if not self._ingests and not self._lookups:
+            raise RuntimeError(
+                "MicroBatchQueue.flush() with nothing pending — submit "
+                "before flushing (stale staging buffers are never read)")
         if self._ingests:
             pend, self._ingests = self._ingests, []
             keys = np.concatenate([k for _, k, _ in pend])
@@ -149,11 +171,23 @@ class MicroBatchQueue:
         self.stats["flushes"] += 1
 
     def result(self, ticket: int):
-        """Pop a ticket's typed result (flushes pending work first if
-        the ticket has not resolved yet)."""
-        if ticket not in self._results:
+        """Pop a ticket's typed result (flushing pending work first if
+        the ticket is still queued).  Each ticket resolves EXACTLY
+        once — a duplicate read, or a ticket this queue never issued,
+        raises ``KeyError`` instead of triggering a spurious flush."""
+        if ticket in self._results:
+            return self._results.pop(ticket)
+        pending = (any(t == ticket for t, _ in self._lookups)
+                   or any(t == ticket for t, _, _ in self._ingests))
+        if pending:
             self.flush()
-        return self._results.pop(ticket)
+            return self._results.pop(ticket)
+        if 0 <= ticket < self._next_ticket:
+            raise KeyError(
+                f"ticket {ticket} already consumed — results resolve "
+                "exactly once")
+        raise KeyError(f"unknown ticket {ticket} (never issued by this "
+                       "queue)")
 
 
 class ServingEngine:

@@ -1,6 +1,10 @@
-"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches
-must see the real single CPU device; only launch/dryrun.py forces 512
-placeholder devices (in its own process)."""
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — scripts/tier1.sh scopes
+``--xla_force_host_platform_device_count=8`` to the pytest COMMAND only
+(so tests/test_sharded_index.py exercises the real shard_map all-to-all
+over 8 host devices), while the benchmark smoke step in the same script
+still sees the real single CPU device; launch/dryrun.py forces its 512
+placeholder devices in its own process.  Every test must also pass at
+1 device (plain ``pytest``): the fan-out degenerates to D=1."""
 
 import numpy as np
 import pytest

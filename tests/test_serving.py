@@ -105,3 +105,70 @@ def test_engine_tokens_in_vocab():
     engine2.run_until_done(max_rounds=50)
     assert len(req.generated) == 4
     assert all(0 <= t < cfg.vocab for t in req.generated)
+
+
+def test_micro_batch_queue_error_paths():
+    """Hardening regressions (ISSUE 7 satellite): an empty flush used to
+    read the previous flush's stale staging buffer (``buf[off:] =
+    buf[off-1]`` at off==0) and bump stats; a double result() used to
+    trigger a spurious flush of OTHER callers' pending work."""
+    from repro.serving.engine import MicroBatchQueue
+    from repro.core import Index
+
+    keys = np.arange(0, 4_000, 2, dtype=np.float64)
+    idx = Index.build(keys, method="pgm", eps=32, gap_rho=0.2)
+    q = MicroBatchQueue(idx, min_bucket=64)
+
+    with pytest.raises(RuntimeError, match="nothing pending"):
+        q.flush()
+    assert q.stats["flushes"] == 0          # no spurious stats bump
+    with pytest.raises(ValueError, match="empty"):
+        q.submit_lookup(np.empty(0))
+    with pytest.raises(ValueError, match="empty"):
+        q.submit_ingest(np.empty(0), np.empty(0))
+    with pytest.raises(ValueError, match="1:1"):
+        q.submit_ingest(keys[:4], np.arange(3))
+
+    t1 = q.submit_lookup(keys[:8])
+    t2 = q.submit_lookup(keys[8:12] + 1.0)
+    r1 = q.result(t1)                       # implicit flush of both
+    assert np.array_equal(np.asarray(r1.payloads), np.arange(8))
+    with pytest.raises(KeyError, match="exactly once"):
+        q.result(t1)                        # duplicate read refused...
+    r2 = q.result(t2)                       # ...without disturbing t2
+    assert not np.any(np.asarray(r2.found))
+    with pytest.raises(KeyError, match="never issued"):
+        q.result(10_000)
+
+
+def test_micro_batch_queue_over_sharded_index():
+    """The queue is backend-agnostic (duck-typed lookup/ingest): one
+    coalesced flush over a ShardedIndex demuxes per-ticket results
+    identical to per-caller lookups on a single-device Index."""
+    from repro.serving.engine import MicroBatchQueue
+    from repro.core import Index
+
+    rng = np.random.default_rng(6)
+    keys = np.unique(rng.choice(2 ** 22, 24_000, replace=False)
+                     ).astype(np.float64)
+    single = Index.build(keys, method="pgm", eps=64, gap_rho=0.2)
+    sharded = Index.build(keys, shards=4, method="pgm", eps=64,
+                          gap_rho=0.2)
+    q = MicroBatchQueue(sharded, min_bucket=512)
+    batches = [rng.choice(keys, 300), rng.choice(keys, 200) + 1.0,
+               rng.choice(keys, 400)]
+    tickets = [q.submit_lookup(b) for b in batches]
+    ti = q.submit_ingest(np.array([keys[-1] + 10.0, keys[-1] + 12.0]),
+                         np.array([7, 8]))
+    q.flush()                               # ingest first, then ONE
+    assert q.stats["lookup_dispatches"] == 1  # coalesced fan-out lookup
+    for t, b in zip(tickets, batches):
+        got = q.result(t)
+        want = single.lookup(b)
+        assert np.array_equal(np.asarray(got.payloads),
+                              np.asarray(want.payloads))
+        assert np.array_equal(np.asarray(got.found),
+                              np.asarray(want.found))
+    rep = q.result(ti)
+    assert rep.device == "sharded" and rep.n == 2
+    assert sharded.lookup(np.array([keys[-1] + 12.0])).payloads[0] == 8

@@ -1,0 +1,273 @@
+"""repro.dist.sharded: range-partitioned ShardedIndex vs the
+single-device Index — the bit-identity contract (ISSUE 7 acceptance):
+sharded lookup AND ingest answers (payloads/found) must equal the
+single-device handle's over the same key/payload sets, on both key
+widths, on both the fused fan-out path and the grouped host path.
+
+Run under ``scripts/tier1.sh`` these tests see 8 host devices
+(XLA_FLAGS=--xla_force_host_platform_device_count=8) and exercise the
+real shard_map all-to-all; under plain pytest they still pass with
+D=1 (the fan-out degenerates to a vmapped single-device graph)."""
+
+import numpy as np
+import pytest
+
+from repro.core import Index
+from repro.dist.sharded import ShardedIndex, ShardedIngestReport, ShardRouter
+from repro.core.results import IngestReport, LookupResult
+
+
+def _int_keys(lo, hi, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.unique(rng.integers(lo, hi, size=n)).astype(np.float64)
+
+
+def _mixed_queries(keys, n_hit, n_miss, seed=1):
+    rng = np.random.default_rng(seed)
+    q = np.concatenate([rng.choice(keys, n_hit),
+                        rng.choice(keys, n_miss) + 1.0])
+    rng.shuffle(q)
+    return q
+
+
+NARROW = dict(lo=1 << 10, hi=1 << 22, n=25_000)   # f32-exact ints
+WIDE = dict(lo=1 << 30, hi=1 << 45, n=20_000)     # f32 hi/lo pair ints
+
+
+@pytest.fixture(scope="module", params=["narrow", "wide"])
+def pair(request):
+    cfg = NARROW if request.param == "narrow" else WIDE
+    keys = _int_keys(cfg["lo"], cfg["hi"], cfg["n"], seed=3)
+    single = Index.build(keys, method="pgm", eps=64, gap_rho=0.2)
+    sharded = Index.build(keys, shards=4, method="pgm", eps=64,
+                          gap_rho=0.2)
+    assert isinstance(sharded, ShardedIndex)
+    return keys, single, sharded, request.param
+
+
+def _assert_identical(a: LookupResult, b: LookupResult):
+    assert np.array_equal(np.asarray(a.payloads), np.asarray(b.payloads))
+    assert np.array_equal(np.asarray(a.found), np.asarray(b.found))
+
+
+def test_lookup_bit_identity_both_paths(pair):
+    keys, single, sharded, width = pair
+    if width == "wide":
+        assert single._key_caps() == (True, True)
+    q = _mixed_queries(keys, 3000, 1500)
+    want = single.lookup(q)
+    got = sharded.lookup(q)                       # >= 512: fan-out
+    assert got.backend == "sharded-fanout"
+    _assert_identical(want, got)
+    got_host = sharded.lookup(q[:200])            # < 512: grouped host
+    assert got_host.backend == "sharded-host"
+    _assert_identical(single.lookup(q[:200]), got_host)
+    # sharded slots are globalized per shard: unique among found rows
+    slots = np.asarray(got.slots)[np.asarray(got.found)]
+    hits = np.asarray(q)[np.asarray(got.found)]
+    first = {}
+    for k, s in zip(hits, slots):
+        first.setdefault(k, s)
+        assert first[k] == s  # same key -> same physical slot
+
+
+def test_boundary_queries_route_and_resolve_exactly(pair):
+    keys, single, sharded, _ = pair
+    b = sharded.router.bounds
+    q = np.concatenate([b, b - 1.0, b + 1.0, keys[:1],
+                        keys[-1:] + 17.0])
+    q = np.tile(q, 64)  # over min_device_batch: exercises the fan-out
+    want, got = single.lookup(q), sharded.lookup(q)
+    assert got.backend == "sharded-fanout"
+    _assert_identical(want, got)
+    # boundary keys are shard firsts: route-right-open (key -> its own
+    # shard), predecessors route left
+    dst = sharded.router.route(b)
+    assert np.array_equal(dst, np.arange(1, len(sharded.shards)))
+    assert np.array_equal(sharded.router.route(b - 1.0),
+                          np.arange(0, len(sharded.shards) - 1))
+
+
+def test_ingest_bit_identity(pair):
+    keys, single, sharded, width = pair
+    rng = np.random.default_rng(7)
+    lo, hi = float(keys[0]), float(keys[-1])
+    new = np.unique(rng.integers(int(lo), int(hi), size=4000)
+                    ).astype(np.float64) + 0.5  # interleaves everywhere
+    pays = rng.integers(0, 1 << 30, size=new.shape[0])
+    rep_s = single.ingest(new, pays)
+    rep_d = sharded.ingest(new, pays)
+    assert isinstance(rep_d, ShardedIngestReport)
+    assert isinstance(rep_d, IngestReport)  # aggregate keeps the type
+    assert rep_d.n == rep_s.n == new.shape[0]
+    assert rep_d.slot + rep_d.chain == rep_d.n  # invariant survives sums
+    assert rep_d.device == "sharded"
+    assert len(rep_d.per_shard) >= 2  # writes spread over shards
+    assert sum(r.n for _, r in rep_d.per_shard) == rep_d.n
+    q = np.concatenate([rng.choice(keys, 2000), rng.choice(new, 2000),
+                        rng.choice(keys, 500) + 2.0])
+    rng.shuffle(q)
+    _assert_identical(single.lookup(q), sharded.lookup(q))
+    _assert_identical(single.lookup(q[:100]), sharded.lookup(q[:100]))
+
+
+def test_forced_split_state_identity(pair):
+    keys, single, sharded, _ = pair
+    n_before = len(sharded.shards)
+    rec = sharded.maybe_rebalance(force_shard=1)
+    assert rec is not None and rec["shard"] == 1
+    assert len(sharded.shards) == n_before + 1
+    assert abs(rec["n_left"] - rec["n_right"]) <= 1  # median split
+    assert len(sharded.router.bounds) == len(sharded.shards) - 1
+    # the split is a pure re-layout: every answer identical after it
+    q = _mixed_queries(keys, 2500, 1000, seed=11)
+    _assert_identical(single.lookup(q), sharded.lookup(q))
+    _assert_identical(single.lookup(q[:150]), sharded.lookup(q[:150]))
+
+
+def test_skewed_writes_trigger_watermark_split():
+    keys = _int_keys(1 << 10, 1 << 22, 20_000, seed=5)
+    sharded = Index.build(keys, shards=4, method="pgm", eps=64,
+                          gap_rho=0.2)
+    sharded.min_split_keys = 2048
+    sharded.split_occupancy_factor = 1.5
+    # hammer shard 0 with interleaving writes
+    skew = np.arange(keys[0] + 0.25, keys[0] + 2500.0, 0.5)
+    sharded.ingest(skew, np.arange(skew.shape[0]) + (1 << 22))
+    assert sharded.stats["splits"] >= 1
+    assert len(sharded.shards) > 4
+    assert sharded.stats["rebalance_seconds"] > 0.0
+    r = sharded.lookup(skew[:600])
+    assert bool(np.all(np.asarray(r.found)))
+    # every pre-existing key still resolves
+    r2 = sharded.lookup(keys[:: 37])
+    assert bool(np.all(np.asarray(r2.found)))
+
+
+def test_prime_shard_count_degenerate_mesh():
+    """S=11 shards: on 8 (or 1) host devices the largest divisor is 1,
+    so the fan-out runs single-device with S_local=11 — the mesh
+    degenerates but the graph and answers do not."""
+    keys = _int_keys(1 << 10, 1 << 22, 9_000, seed=9)
+    single = Index.build(keys, method="pgm", eps=32, gap_rho=0.2)
+    sharded = Index.build(keys, shards=11, method="pgm", eps=32,
+                          gap_rho=0.2)
+    q = _mixed_queries(keys, 1500, 500, seed=2)
+    got = sharded.lookup(q)
+    assert got.backend == "sharded-fanout"
+    assert sharded._fan.D in (1, 11)
+    _assert_identical(single.lookup(q), got)
+
+
+def test_fanout_unavailable_falls_back_to_host_groups(monkeypatch):
+    # when the stacked images cannot be built (non-PLM mechanism,
+    # aliasing rounded boundaries, capacity blowup) lookup silently
+    # takes the exact grouped-host route; only an EXPLICIT
+    # backend="fanout" request raises
+    import repro.kernels.shard_fanout as sf
+
+    keys = _int_keys(1 << 10, 1 << 20, 6_000, seed=4)
+    single = Index.build(keys, method="pgm", eps=64, gap_rho=0.2)
+    sharded = ShardedIndex.build(keys, shards=2, method="pgm", eps=64,
+                                 gap_rho=0.2)
+
+    def refuse(cls, *a, **k):
+        raise sf.FanoutUnavailable("forced by test")
+
+    monkeypatch.setattr(sf.ShardFanout, "build", classmethod(refuse))
+    q = _mixed_queries(keys, 800, 200, seed=3)
+    got = sharded.lookup(q)                       # >= 512, but no fan
+    assert got.backend == "sharded-host"
+    _assert_identical(single.lookup(q), got)
+    with pytest.raises(RuntimeError):
+        sharded.lookup(q, backend="fanout")
+    # the failed build is negative-cached per epoch tag: unchanged
+    # shards don't retry the build on every call
+    assert sharded._fan_failed_tag is not None
+
+
+def test_build_validation():
+    keys = np.arange(100, dtype=np.float64)
+    with pytest.raises(ValueError):  # gapless sharded build
+        ShardedIndex.build(keys, shards=2, gap_rho=0.0)
+    with pytest.raises(ValueError):  # too many shards for the keys
+        ShardedIndex.build(keys, shards=64, gap_rho=0.2)
+    with pytest.raises(ValueError):  # unsorted
+        ShardedIndex.build(keys[::-1], shards=2, gap_rho=0.2)
+    with pytest.raises(ValueError):  # payload shape mismatch
+        ShardedIndex.build(keys, shards=2, gap_rho=0.2,
+                           payloads=np.arange(3))
+
+
+def test_router_boundary_exactness_property():
+    """Hypothesis property: the DEVICE route (learned two-segment
+    prediction + exact bisect backstop, kernels.shard_fanout
+    ._route_block) equals searchsorted over the rounded boundaries for
+    ARBITRARY integer key sets — including queries exactly on, just
+    below, and just above every boundary."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    import jax.numpy as jnp
+    from repro.kernels.shard_fanout import _round_key_repr, _route_block
+
+    @hyp.settings(max_examples=40, deadline=None)
+    @hyp.given(st.data())
+    def run(data):
+        key_wide = data.draw(st.booleans())
+        hi = (1 << 47) if key_wide else (1 << 23)
+        vals = data.draw(st.lists(st.integers(0, hi), min_size=4,
+                                  max_size=40, unique=True))
+        vals = np.sort(np.asarray(vals, np.float64))
+        n_b = data.draw(st.integers(1, max(1, vals.size // 2)))
+        idx = np.linspace(0, vals.size - 1, n_b + 2)[1:-1]
+        bounds = np.unique(vals[np.round(idx).astype(int)])
+        rb = _round_key_repr(bounds, key_wide)
+        hyp.assume(np.all(np.diff(rb) > 0))
+        q = np.unique(np.concatenate(
+            [vals, bounds, bounds - 1.0, bounds + 1.0]))
+        router = ShardRouter(bounds, lo_key=float(vals[0]))
+        s = bounds.size + 1
+        from repro.kernels import ops as _ops
+        qh, ql = _ops.split_key_pair(q)
+        bh, bl = _ops.split_key_pair(bounds)
+        if not key_wide:
+            ql, bl = np.zeros_like(ql), np.zeros_like(bl)
+        r_trips = int(np.ceil(np.log2(max(s - 1, 2)))) + 1
+        dst, _ = _route_block(
+            jnp.asarray(qh), jnp.asarray(ql), jnp.asarray(bh),
+            jnp.asarray(bl), jnp.asarray(router.device_params()),
+            s, r_trips, key_wide)
+        want = np.searchsorted(rb, _round_key_repr(q, key_wide),
+                               side="right")
+        assert np.array_equal(np.asarray(dst), want)
+
+    run()
+
+
+def test_abort_telemetry_on_ingest_report():
+    """Satellite: the fused write graph's abort REASON (per batch) and
+    the engine's cumulative abort counter ride the IngestReport — a
+    report stream alone answers "how often does the write graph veto,
+    and why"."""
+    init = np.arange(0, 1_000_000, 100, dtype=np.float64)
+    idx = Index.build(init, method="pgm", eps=32, gap_rho=0.2)
+    idx.fused_ingest_enabled = True
+    idx.sync_device()
+    # contiguous run crammed with new keys: the in-graph closure check
+    # refuses (collision groups / chain overflow), host partition lands
+    batch = np.setdiff1d(np.arange(50_001, 50_001 + 620,
+                                   dtype=np.float64), init)[:512]
+    rep = idx.ingest(batch, 3_000_000 + np.arange(batch.size))
+    assert rep.device != "fused"          # the graph vetoed the batch
+    assert len(rep.abort_reasons) >= 1    # and the report says why
+    assert rep.fused_aborts == 1
+    assert idx.stats["fused_abort_total"] == 1
+    for name in rep.abort_reasons:
+        assert name in idx.stats["fused_aborts"]
+    # a committable sparse follow-up batch reports NO per-batch reason;
+    # the engine counter stays (it is cumulative)
+    idx.sync_device()
+    spread = (init + 50.0)[::19][:512]  # one midpoint per distant run
+    rep2 = idx.ingest(spread, 4_000_000 + np.arange(spread.size))
+    assert rep2.abort_reasons == ()
+    assert rep2.fused_aborts == 1
