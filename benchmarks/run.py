@@ -47,7 +47,8 @@ import traceback
 os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
 
 from . import (fig4_tradeoff, fig6_sampling, fig7_segments, fig8_nsafe,
-               fig9_gaps, fig11_dynamic, kernel_bench, shard_bench, table1)
+               fig9_gaps, fig11_dynamic, kernel_bench, serving_bench,
+               shard_bench, table1)
 from .common import emit
 
 _ROOT = pathlib.Path(__file__).resolve().parents[1]
@@ -62,6 +63,7 @@ MODULES = [
     ("fig11", fig11_dynamic),
     ("kernel", kernel_bench),
     ("shard", shard_bench),
+    ("serving", serving_bench),
 ]
 
 # trajectory schema: file -> (metric key, direction, required row keys).
@@ -99,6 +101,14 @@ TRAJECTORIES = {
         {"batch", "shards", "queries", "sharded_ns_per_q",
          "single_ns_per_q", "speedup", "router_mispredict_frac"},
     ),
+    # the serving file gates on the p99 lookup-call latency UNDER
+    # concurrent ingest (higher-is-worse): the snapshot-isolation tail
+    # is exactly what a pin/COW or publish-path regression inflates
+    "BENCH_serving.json": (
+        "p99_us", "higher_is_worse",
+        {"batch", "read_frac", "zipf", "p50_us", "p99_us",
+         "ingest_keys_per_s"},
+    ),
 }
 # required TOP-LEVEL fields per trajectory file (beyond "rows"):
 # the kernel file must RECORD its small-batch crossover so the gate can
@@ -114,6 +124,9 @@ TOP_LEVEL_REQUIRED = {
     # the shard file must RECORD the rebalance (split) cost and the
     # worst router mispredict fraction alongside the per-row sweep
     "BENCH_shard.json": {"rebalance_ms", "router_mispredict_frac_max"},
+    # the serving file must RECORD its worst tail so the trajectory
+    # shows the serving p99 envelope at a glance
+    "BENCH_serving.json": {"p99_us_max"},
 }
 REGRESSION_FACTOR = 1.25
 
@@ -272,12 +285,70 @@ def smoke() -> None:
                           np.asarray(want.payloads)[:200]):
         errors.append("smoke: sharded grouped-host route diverged")
 
+    # deterministic fault-injection sanity: snapshot-isolated serving,
+    # injected-abort absorption, and crash recovery (snapshot + WAL-tail
+    # replay with a torn trailing record) must reproduce the acked state
+    # bit-for-bit on a tiny index
+    import tempfile
+
+    from repro.robustness import FaultInjector, InvariantAuditor, \
+        tear_tail
+    from repro.serving import EpochPipeline, IngestWAL, MicroBatchQueue, \
+        recover_index
+
+    with tempfile.TemporaryDirectory() as td:
+        skeys = np.unique(rng.choice(2 ** 20, 5_000, replace=False)
+                          ).astype(np.float64) * 2.0
+        sidx = Index.build(skeys, method="pgm", eps=64, gap_rho=0.2)
+        wal_path = f"{td}/ingest.wal"
+        auditor = InvariantAuditor()
+        pipe = EpochPipeline(sidx, wal=IngestWAL(wal_path),
+                             auditor=auditor, audit_every=1)
+        pipe.checkpoint(td, step=0)
+        fresh = np.setdiff1d(skeys[:-1] + np.rint(np.diff(skeys) * 0.5),
+                             skeys)
+        b1, b2, b3 = fresh[:64], fresh[64:128], fresh[128:192]
+        inj = FaultInjector({("ingest", 0): "abort"})
+        q = MicroBatchQueue(pipe, faults=inj, ingest_retries=2,
+                            retry_backoff_ms=0.1)
+        t = q.submit_ingest(b1, (10_000 + np.arange(64)).astype(np.int64))
+        rep = q.result(t)
+        if q.stats["ingest_retries"] != 1 or rep.n != 64:
+            errors.append("smoke: injected ingest abort was not absorbed "
+                          "by exactly one retry")
+        snap_res = pipe.lookup(b1[:8])  # pinned epoch-0 snapshot serves
+        if snap_res.found.any() or snap_res.epoch != 0:
+            errors.append("smoke: snapshot isolation leaked in-flight "
+                          "ingest into the served epoch")
+        pipe.publish()
+        pipe.ingest(b2, (20_000 + np.arange(64)).astype(np.int64))
+        pipe.publish()
+        acked = pipe.lookup(np.concatenate([b1, b2]))
+        pipe.ingest(b3, (30_000 + np.arange(64)).astype(np.int64))
+        tear_tail(wal_path, 7)  # torn mid-record crash: b3 un-acked
+        rec, info = recover_index(td, wal_path)
+        got = rec.lookup(np.concatenate([b1, b2]))
+        if not (info["torn"] and info["replayed"] == 2
+                and np.array_equal(np.asarray(got.payloads),
+                                   np.asarray(acked.payloads))
+                and got.found.all()):
+            errors.append("smoke: crash recovery (snapshot + torn-WAL "
+                          "replay) diverged from the acked state")
+        if rec.lookup(b3[:8]).found.any():
+            errors.append("smoke: recovery replayed a torn (un-acked) "
+                          "record")
+        auditor.assert_ok(rec)
+        if auditor.violations:
+            errors.append("smoke: invariant auditor flagged "
+                          f"{auditor.violations}")
+        pipe.close()
+
     for e in errors:
         print(f"# SMOKE: {e}", file=sys.stderr)
     if errors:
         sys.exit(1)
-    print("# SMOKE: trajectory schemas valid, tiny-shape engine sanity OK",
-          file=sys.stderr)
+    print("# SMOKE: trajectory schemas valid, tiny-shape engine sanity "
+          "and fault-injection/recovery checks OK", file=sys.stderr)
 
 
 def main() -> None:

@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 verify wrapper (see ROADMAP.md): run the full test suite from
 # any cwd with the src tree on PYTHONPATH, then the benchmark smoke
-# gate (schema + tiny-shape sanity, no timing) so trajectory schema
-# drift fails tier-1 cheaply.  Extra args pass through to pytest,
-# e.g.  scripts/tier1.sh -k handle  or  scripts/tier1.sh -x.
+# gate (schema + tiny-shape sanity + the deterministic fault-injection
+# serving/recovery checks, no timing) so trajectory schema drift and
+# crash-recovery regressions fail tier-1 cheaply.  Extra args pass
+# through to pytest, e.g.  scripts/tier1.sh -k handle  or
+# scripts/tier1.sh -x.
 #
 # The XLA flags are scoped to the pytest COMMAND only: 8 host devices
 # so tests/test_sharded_index.py exercises the real shard_map

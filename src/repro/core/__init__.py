@@ -35,7 +35,7 @@ from .mechanisms import (
     build_mechanism,
 )
 from .mdl import MDLReport, correction_cost, mae, mdl_report
-from .results import IngestReport, LookupResult
+from .results import IngestReport, LookupResult, Overloaded
 from .sampling import (
     exponential_search,
     fit_sampled,
@@ -44,7 +44,7 @@ from .sampling import (
     sample_pairs,
     sample_size_bound,
 )
-from .gaps import GappedArray, build_gapped, gap_positions
+from .gaps import GappedArray, GapSnapshot, build_gapped, gap_positions
 
 __all__ = [
     "Index",
@@ -53,6 +53,7 @@ __all__ = [
     "LearnedIndex",
     "LookupResult",
     "IngestReport",
+    "Overloaded",
     "CSRLinks",
     "BTreeMechanism",
     "FITingMechanism",
@@ -72,6 +73,7 @@ __all__ = [
     "sample_pairs",
     "sample_size_bound",
     "GappedArray",
+    "GapSnapshot",
     "build_gapped",
     "gap_positions",
 ]

@@ -39,9 +39,21 @@ from .links import CSRLinks
 from .mechanisms import PiecewiseLinearModel, _finalize_errors
 from . import sampling as _sampling
 
-__all__ = ["gap_positions", "GappedArray", "build_gapped"]
+__all__ = ["gap_positions", "GappedArray", "GapSnapshot", "build_gapped"]
 
 _EMPTY = np.iinfo(np.int64).min  # payload marker for unoccupied slots
+
+
+class _PinCell:
+    """Shared refcount between a live ``GappedArray`` and the snapshots
+    pinning its current arrays.  The live side checks ``count`` inside
+    ``_invalidate`` (copy-on-write trigger); snapshots decrement on
+    ``release`` so the auditor can prove no snapshot leaks."""
+
+    __slots__ = ("count",)
+
+    def __init__(self):
+        self.count = 0
 
 
 def _group_extreme(rids, vals, n_runs, fill, reducer):
@@ -140,6 +152,10 @@ class GappedArray:
     n_keys: int
     rho: float
     version: int = 0
+    # live pin cell shared with outstanding ``GapSnapshot``s (refcount);
+    # None when no snapshot pins the current arrays
+    _pins: object = dataclasses.field(default=None, repr=False,
+                                      compare=False)
 
     # ------------------------------------------------------------------
     @property
@@ -184,6 +200,40 @@ class GappedArray:
 
     def _invalidate(self):
         self.version += 1
+        pins = self._pins
+        if pins is not None and pins.count > 0:
+            # copy-on-write: every mutator calls _invalidate() BEFORE
+            # touching storage, so pinned snapshots keep the exact
+            # pre-mutation arrays while the live side writes into fresh
+            # private copies.  Paid once per pin, not once per mutation
+            # (the cell detaches here; a new pin installs a new cell).
+            self.slot_key = self.slot_key.copy()
+            self.occupied = self.occupied.copy()
+            self.payload = self.payload.copy()
+            self.links.unshare()
+            self._pins = None
+        elif pins is not None:
+            self._pins = None  # every snapshot released: nothing to copy
+
+    # ------------------------------------------------------------------
+    # snapshot pinning (serving-side isolation)
+    # ------------------------------------------------------------------
+    def pin_snapshot(self) -> "GapSnapshot":
+        """Pin the current arrays into an immutable ``GapSnapshot``.
+
+        O(1): no copies are made here — the snapshot references the live
+        arrays by identity, and the first mutation after the pin pays a
+        single copy-on-write inside ``_invalidate``.  Lookups through
+        the snapshot are bit-identical to a quiesced lookup at this
+        version forever, regardless of concurrent mutation of the live
+        array.  Call ``release()`` when done serving from it."""
+        self.links.flush()  # pending overlay empties before sharing CSR
+        if self._pins is None:
+            self._pins = _PinCell()
+        self._pins.count += 1
+        self.links.mark_shared()
+        offsets, lkeys, lpays = self.links.csr()
+        return GapSnapshot(self, offsets, lkeys, lpays, self._pins)
 
     def lookup_batch(self, qs: np.ndarray, bounded: bool = True,
                      full: bool = False) -> np.ndarray:
@@ -848,6 +898,46 @@ class GappedArray:
                 f"chain at slot {i} has {int(lens[i])} > max_chain={max_chain}"
             )
         return self.links.csr()
+
+
+class GapSnapshot:
+    """Immutable pinned view of a ``GappedArray`` at one version.
+
+    Created by ``GappedArray.pin_snapshot()``; holds the slot/payload/CSR
+    arrays by identity (zero-copy) and relies on the live side's
+    copy-on-write to never see a post-pin mutation.  Serves lookups
+    through the proven ``GappedArray.lookup_batch`` host path over a
+    read-only view, so results are bit-identical to a quiesced lookup at
+    ``epoch`` by construction.  ``release()`` drops the pin (refcounted
+    — releasing twice is a no-op)."""
+
+    __slots__ = ("epoch", "n_keys", "_view", "_cell")
+
+    def __init__(self, live: "GappedArray", offsets, lkeys, lpays, cell):
+        self.epoch = int(live.version)
+        self.n_keys = int(live.n_keys)
+        links = CSRLinks(live.n_slots, offsets, lkeys, lpays)
+        self._view = GappedArray(
+            slot_key=live.slot_key, occupied=live.occupied,
+            payload=live.payload, links=links, mech=live.mech,
+            n_keys=live.n_keys, rho=live.rho, version=live.version)
+        self._cell = cell
+
+    @property
+    def pinned(self) -> bool:
+        return self._cell is not None
+
+    @property
+    def n_slots(self) -> int:
+        return self._view.n_slots
+
+    def lookup_batch(self, qs: np.ndarray, full: bool = False):
+        return self._view.lookup_batch(qs, full=full)
+
+    def release(self) -> None:
+        cell, self._cell = self._cell, None
+        if cell is not None:
+            cell.count -= 1
 
 
 def _place_keys(

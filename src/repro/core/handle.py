@@ -149,6 +149,11 @@ class Index:
     # True/False force the arm either way; the staleness benchmarks pin
     # False to keep exercising the delta machinery in isolation.
     fused_ingest_enabled: Optional[bool] = None
+    # split commit: when the fused abort gate vetoes a batch, retry the
+    # longest locally-clean PREFIX in-graph and replay only the
+    # contested remainder on the host path (ROADMAP residual closed in
+    # PR 8) — False restores whole-batch abort-to-host
+    fused_split_commit: bool = True
     # delta updates refresh window bounds for touched segments only;
     # past this fraction of all segments the refresh is skipped (stale
     # bounds are sound — the refreeze policy catches sustained growth)
@@ -272,6 +277,7 @@ class Index:
             refreeze_link_growth=self.refreeze_link_growth,
             min_device_batch=self.min_device_batch,
             fused_ingest_enabled=self.fused_ingest_enabled,
+            fused_split_commit=self.fused_split_commit,
             refresh_segments_frac=self.refresh_segments_frac,
             stats=dict(self.stats),
         )
@@ -693,6 +699,8 @@ class Index:
         self._last_abort_reasons = tuple(names)
         self.stats["fused_abort_total"] = (
             self.stats.get("fused_abort_total", 0) + 1)
+        # the split-commit arm needs the raw escape rows to pick a prefix
+        self._last_escape_mask = np.asarray(esc, bool)
         n_esc = int(np.count_nonzero(esc))
         if n_esc:
             sub = self.gapped.placement_primitives(keys[esc])
@@ -755,7 +763,112 @@ class Index:
             chain=counts["chain"], contested=0, epoch=self.epoch,
             device=device, device_elems=0,
             seconds=time.perf_counter() - t0, placement="device",
-            fused_aborts=self.stats.get("fused_abort_total", 0))
+            fused_aborts=self.stats.get("fused_abort_total", 0),
+            split_commits=self.stats.get("split_commits", 0))
+
+    def _split_prefix(self, keys, prims) -> int:
+        """Longest batch prefix with no locally-suspect row — the
+        split-commit candidate.  A row is suspect when it carries the
+        escape bit, duplicates another batch key, is a free candidate
+        without a bracket, or shares a gap run (``pv``/``ub``) with any
+        other batch row (collision groups, d1/d4 demotions, and chain
+        duplicates all require two rows in one run).  Heuristic, not a
+        proof: the second fused dispatch re-runs the full abort gate on
+        the prefix, so a miss costs one dispatch, never correctness."""
+        n = int(keys.shape[0])
+        free = np.asarray(prims["free"], bool)
+        bracket = np.asarray(prims["bracket"], bool)
+        suspect = free & ~bracket
+        esc = getattr(self, "_last_escape_mask", None)
+        if esc is not None and esc.shape == suspect.shape:
+            suspect |= esc
+        order = np.argsort(keys, kind="stable")
+        ks = keys[order]
+        dup = np.r_[False, ks[1:] == ks[:-1]]
+        dup |= np.r_[dup[1:], False]
+        suspect[order[dup]] = True
+        rid = np.where(free, np.asarray(prims["pv"], np.int64),
+                       np.asarray(prims["ub"], np.int64))
+        uniq, inv, cnt = np.unique(rid, return_inverse=True,
+                                   return_counts=True)
+        # shared runs are only collision-suspect when a FREE placement
+        # is involved (two free rows fighting for one slot run, or a
+        # free row racing a chain attach on the same slot); several
+        # chain rows merging into one chain is the graph's normal case
+        free_in_run = np.zeros(uniq.size, bool)
+        np.logical_or.at(free_in_run, inv, free)
+        suspect |= (cnt[inv] > 1) & free_in_run[inv]
+        bad = np.flatnonzero(suspect)
+        # row-level veto but no locally-attributable suspect (heuristic
+        # miss): halve and hope the offending rows sit in the back half
+        return int(bad[0]) if bad.size else n // 2
+
+    def _try_split_commit(self, keys, payloads, prims, t0):
+        """Split commit (ROADMAP residual): the abort gate vetoed the
+        whole batch, but the veto is typically caused by a handful of
+        rows.  Salvage the longest locally-clean prefix with a second
+        fused dispatch (committed in-graph, device buffers adopted) and
+        replay only the remainder through the host partition + delta
+        sync.  Returns the merged ``IngestReport`` for the FULL batch,
+        or None when the prefix is too small to be worth a dispatch or
+        its dispatch also aborts — the caller then falls back to the
+        single host partition on the primitives already paid for."""
+        n = int(keys.shape[0])
+        k = self._split_prefix(keys, prims)
+        if k < max(self.min_device_batch, n // 8) or k >= n:
+            return None
+        pk, pp = keys[:k], payloads[:k]
+        if not self._fused_eligible(pk, pp):
+            return None
+        prims2, esc2, ok2, reasons2, state2 = self._engine.fused_ingest(
+            pk, pp)
+        if not ok2:
+            self.stats["split_commit_misses"] = (
+                self.stats.get("split_commit_misses", 0) + 1)
+            return None
+        rep1 = self._commit_fused(pk, pp, prims2, state2, t0)
+        self.stats["split_commits"] = (
+            self.stats.get("split_commits", 0) + 1)
+        # remainder replays against the post-commit state (fresh
+        # placements — the prefix moved slots under it)
+        rk, rp = keys[k:], payloads[k:]
+        rprims = self._device_placements(rk)
+        counts = self.gapped.insert_batch(rk, rp, placements=rprims)
+        self._key_caps_after_batch(rk)
+        self._log_touch(rk)
+        device = rep1.device
+        elems = rep1.device_elems
+        if self._engine is not None:
+            wide, exact = self._key_caps()
+            if wide and not exact:
+                self._engine = None
+                self._mirror = None
+                self._device_epoch = -1
+                device = "none"
+            else:
+                contested_frac = counts["contested"] / max(rk.shape[0], 1)
+                want_refreeze = (
+                    contested_frac > self.refreeze_contested_frac
+                    or self._link_growth_fraction()
+                    > self.refreeze_link_growth)
+                before = (self.stats["delta_updates"],
+                          self.stats["refreezes"],
+                          self.stats["delta_elems"])
+                self._sync_device(prefer_delta=not want_refreeze)
+                if self.stats["delta_updates"] > before[0]:
+                    device = "fused+delta"
+                    elems += self.stats["delta_elems"] - before[2]
+                elif self.stats["refreezes"] > before[1]:
+                    device = "refreeze"
+        return IngestReport(
+            n=n, slot=rep1.slot + counts["slot"],
+            chain=rep1.chain + counts["chain"],
+            contested=counts["contested"], epoch=self.epoch,
+            device=device, device_elems=elems,
+            seconds=time.perf_counter() - t0, placement="device-split",
+            abort_reasons=getattr(self, "_last_abort_reasons", ()),
+            fused_aborts=self.stats.get("fused_abort_total", 0),
+            split_commits=self.stats.get("split_commits", 0))
 
     def ingest(self, keys, payloads) -> IngestReport:
         """Batched insert; placements computed on the frozen device
@@ -789,6 +902,16 @@ class Index:
             placement = "device"
             if ok:
                 return self._commit_fused(keys, payloads, prims, state, t0)
+            # split commit only helps when the veto is attributable to
+            # specific rows; a purely capacity-based veto (static chain/
+            # link headroom) vetoes any same-shaped prefix too, so those
+            # keep the one-dispatch abort contract
+            cap_only = set(self._last_abort_reasons) <= {
+                "chain_overflow", "link_overflow"}
+            if self.fused_split_commit and not cap_only:
+                rep = self._try_split_commit(keys, payloads, prims, t0)
+                if rep is not None:
+                    return rep
         if prims is None:
             prims = self._device_placements(keys)
             placement = ("host" if prims is None
@@ -829,7 +952,8 @@ class Index:
             device_elems=elems, seconds=time.perf_counter() - t0,
             placement=placement,
             abort_reasons=getattr(self, "_last_abort_reasons", ()),
-            fused_aborts=self.stats.get("fused_abort_total", 0))
+            fused_aborts=self.stats.get("fused_abort_total", 0),
+            split_commits=self.stats.get("split_commits", 0))
 
     def _roll_caps(self) -> None:
         """Advance the keycap cache to the current epoch UNCHANGED —
@@ -894,6 +1018,105 @@ class Index:
                                        np.asarray(payloads, np.int64))
         self._roll_caps()
         return out
+
+    # ------------------------------------------------------------------
+    # durability (serving/wal.py crash recovery rides on these)
+    # ------------------------------------------------------------------
+    def save_snapshot(self, directory, *, step: Optional[int] = None,
+                      keep: int = 3, wal_lsn: int = 0,
+                      extra: Optional[dict] = None) -> str:
+        """Write a restorable checkpoint of the full HOST state through
+        ``train.checkpoint.CheckpointManager`` — the same array format
+        as trainer checkpoints (one fsynced ``.npy`` per array +
+        manifest, atomic tmp→rename publish), not a second serializer.
+        Device state is never serialized: it is an epoch-keyed cache
+        that refreezes lazily after ``restore``.  ``wal_lsn`` records
+        the ingest-WAL byte offset this snapshot is consistent with
+        (crash recovery replays only records past it — serving/wal.py).
+        Returns the published checkpoint directory."""
+        import pickle
+        from ..train.checkpoint import CheckpointManager
+        state = {
+            "keys": np.asarray(self.keys, np.float64),
+            "mech_pickle": np.frombuffer(
+                pickle.dumps(self.mech), np.uint8).copy(),
+        }
+        meta = {
+            "kind": "index",
+            "method": self.method,
+            "sample_rate": float(self.sample_rate),
+            "gap_rho": float(self.gap_rho),
+            "gapped": self.gapped is not None,
+            "epoch": int(self.epoch),
+            "wal_lsn": int(wal_lsn),
+        }
+        ga = self.gapped
+        if ga is not None:
+            offsets, lkeys, lpays = ga.export_csr_links()
+            state.update(
+                slot_key=np.asarray(ga.slot_key, np.float64),
+                occupied=np.asarray(ga.occupied, bool),
+                payload=np.asarray(ga.payload, np.int64),
+                offsets=np.asarray(offsets, np.int64),
+                chain_keys=np.asarray(lkeys, np.float64),
+                chain_payloads=np.asarray(lpays, np.int64),
+            )
+            meta["n_keys"] = int(ga.n_keys)
+            meta["rho"] = float(ga.rho)
+        if extra:
+            meta.update(extra)
+        s = int(step if step is not None else self.epoch)
+        meta["step"] = s
+        return CheckpointManager(directory, keep=keep).save(
+            s, state, extra=meta)
+
+    @classmethod
+    def restore(cls, directory, step: Optional[int] = None):
+        """Load a ``save_snapshot`` checkpoint -> ``(index, extra)``.
+
+        Host state is restored bit-identically (arrays verbatim, the
+        mechanism via its pickle); ``extra`` is the manifest's metadata
+        dict (includes ``wal_lsn``).  Newest step when ``step`` is
+        None."""
+        import json as _json
+        import os as _os
+        import pickle
+        from ..train.checkpoint import CheckpointManager
+        from .links import CSRLinks
+        mgr = CheckpointManager(str(directory))
+        s = int(step) if step is not None else mgr.latest_step()
+        if s is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+        with open(_os.path.join(str(directory), f"step_{s:08d}",
+                                "manifest.json")) as f:
+            names = _json.load(f)["leaves"]
+        # flat dict of arrays: a same-keyed template sidesteps the
+        # treedef-proto deserialization path entirely
+        state, meta = mgr.restore(step=s,
+                                  template={n: 0 for n in names})
+        mech = pickle.loads(
+            np.asarray(state["mech_pickle"], np.uint8).tobytes())
+        gapped = None
+        if meta.get("gapped"):
+            slot_key = np.asarray(state["slot_key"], np.float64)
+            gapped = _gaps.GappedArray(
+                slot_key=slot_key,
+                occupied=np.asarray(state["occupied"], bool),
+                payload=np.asarray(state["payload"], np.int64),
+                links=CSRLinks(
+                    int(slot_key.shape[0]),
+                    np.asarray(state["offsets"], np.int64),
+                    np.asarray(state["chain_keys"], np.float64),
+                    np.asarray(state["chain_payloads"], np.int64)),
+                mech=mech,
+                n_keys=int(meta["n_keys"]),
+                rho=float(meta["rho"]),
+                version=int(meta["epoch"]))
+        idx = cls(keys=np.asarray(state["keys"], np.float64), mech=mech,
+                  method=meta["method"], gapped=gapped,
+                  sample_rate=float(meta["sample_rate"]),
+                  gap_rho=float(meta["gap_rho"]))
+        return idx, meta
 
     # ------------------------------------------------------------------
     def mdl(self, alpha: float = 1.0) -> _mdl.MDLReport:

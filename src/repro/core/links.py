@@ -41,7 +41,7 @@ class CSRLinks:
     """CSR linking arrays over ``n_slots`` slots (see module docstring)."""
 
     __slots__ = ("_offsets", "_keys", "_pays", "_maxlen", "_pend",
-                 "_pend_n")
+                 "_pend_n", "_shared")
 
     def __init__(self, n_slots: int,
                  offsets: Optional[np.ndarray] = None,
@@ -58,6 +58,26 @@ class CSRLinks:
                         if self._offsets[-1] else 0)
         self._pend = {}
         self._pend_n = 0
+        self._shared = False
+
+    # ------------------------------------------------------------------
+    # snapshot sharing (copy-on-write backing for GappedArray pins)
+    # ------------------------------------------------------------------
+    def mark_shared(self) -> None:
+        """A pinned snapshot now references the CSR arrays by identity;
+        every in-place mutation must ``unshare`` first.  Wholesale
+        rebuilds (``_merge``) are COW-safe by construction — they
+        replace all three arrays — so only the in-place mutators
+        (``_remove_at``, ``set_payload``) and the write-capable
+        ``chain_payloads`` view pay the copy, once per pin."""
+        self._shared = True
+
+    def unshare(self) -> None:
+        if self._shared:
+            self._offsets = self._offsets.copy()
+            self._keys = self._keys.copy()
+            self._pays = self._pays.copy()
+            self._shared = False
 
     # ------------------------------------------------------------------
     # pending overlay
@@ -125,6 +145,7 @@ class CSRLinks:
     def chain_payloads(self) -> np.ndarray:
         """(L,) int64 — flushes pending; in-place writes are allowed."""
         self._flush()
+        self.unshare()  # callers may write through the returned view
         return self._pays
 
     @property
@@ -270,6 +291,7 @@ class CSRLinks:
         return True
 
     def _remove_at(self, slot: int, j: int) -> None:
+        self.unshare()  # in-place offset shift below
         was = self._csr_len(slot)
         self._keys = np.delete(self._keys, j)
         self._pays = np.delete(self._pays, j)
@@ -281,6 +303,7 @@ class CSRLinks:
     def set_payload(self, slot: int, key: float, payload: int) -> bool:
         j = self._find_csr(slot, key)
         if j >= 0:
+            self.unshare()
             self._pays[j] = payload
             return True
         b = self._pend.get(slot)
@@ -356,6 +379,9 @@ class CSRLinks:
         if upd.size:
             self._maxlen = max(self._maxlen,
                                int(np.max(old_len[upd] + counts[upd])))
+        # all three arrays were rebuilt above: any pinned snapshot keeps
+        # the pre-merge arrays, so the new storage is privately owned
+        self._shared = False
 
     # ------------------------------------------------------------------
     # export / copy

@@ -13,7 +13,7 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["LookupResult", "IngestReport"]
+__all__ = ["LookupResult", "IngestReport", "Overloaded"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +97,11 @@ class IngestReport:
       after this ingest (``Index.stats["fused_abort_total"]``), so a
       benchmark row answers "how often does the write graph veto" from
       the report stream alone.
+    * ``split_commits`` — cumulative split-commit counter
+      (``Index.stats["split_commits"]``): fused dispatches that aborted
+      but salvaged the closure-trivial prefix in-graph, replaying only
+      the contested remainder on the host path (``placement ==
+      "device-split"`` when THIS batch took that arm).
     """
 
     n: int
@@ -110,6 +115,7 @@ class IngestReport:
     placement: str = "host"
     abort_reasons: tuple = ()
     fused_aborts: int = 0
+    split_commits: int = 0
 
     def __post_init__(self):
         if self.slot + self.chain != self.n:
@@ -124,6 +130,33 @@ class IngestReport:
     @property
     def contested_fraction(self) -> float:
         return self.contested / max(self.n, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Overloaded:
+    """Typed backpressure shed from the serving queue.
+
+    Returned (never raised) by ``MicroBatchQueue.result`` for a ticket
+    the queue refused at admission because the pending depth was at
+    ``max_depth`` — the explicit alternative to a silent hang or an
+    unbounded queue.  Falsy (``bool(Overloaded(...)) is False``) so
+    callers can branch ``if not res: retry_later()`` uniformly against
+    ``LookupResult``/``IngestReport``.
+
+    * ``kind``   — ``"lookup"`` or ``"ingest"`` (which submission shed).
+    * ``depth``  — pending submissions at shed time.
+    * ``max_depth`` — the configured bound the submission hit.
+    * ``epoch``  — index epoch at shed time (for client-side retry
+      bookkeeping; -1 if the backend exposes none).
+    """
+
+    kind: str
+    depth: int
+    max_depth: int
+    epoch: int = -1
+
+    def __bool__(self) -> bool:
+        return False
 
 
 def host_lookup_result(payloads: np.ndarray, slots: Optional[np.ndarray],

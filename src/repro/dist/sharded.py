@@ -376,7 +376,84 @@ class ShardedIndex:
             abort_reasons=tuple(
                 rr for r in reps for rr in r.abort_reasons),
             fused_aborts=sum(r.fused_aborts for r in reps),
+            split_commits=sum(r.split_commits for r in reps),
             per_shard=tuple(reports))
+
+    # ------------------------------------------------------------------
+    # durability (serving/wal.py crash recovery rides on these)
+    # ------------------------------------------------------------------
+    def save_snapshot(self, directory, *, step: Optional[int] = None,
+                      keep: int = 3, wal_lsn: int = 0) -> str:
+        """Checkpoint every shard through ``Index.save_snapshot`` (one
+        ``train/checkpoint.py``-format subdirectory per shard) plus a
+        ``sharded_manifest.json`` capturing the router boundaries and
+        topology knobs.  The manifest is published last (tmp→rename),
+        so a crash mid-save can never shadow a complete checkpoint with
+        a partial one."""
+        import json
+        import os
+        s = int(step if step is not None else self.epoch)
+        d = str(directory)
+        os.makedirs(d, exist_ok=True)
+        for i, sh in enumerate(self.shards):
+            sh.save_snapshot(os.path.join(d, f"shard_{i:03d}"), step=s,
+                             keep=keep)
+        manifest = {
+            "kind": "sharded",
+            "n_shards": len(self.shards),
+            "bounds": [float(b) for b in self.router.bounds],
+            "lo_key": self.router.lo_key,
+            "method": self.method,
+            "sample_rate": float(self.sample_rate),
+            "gap_rho": float(self.gap_rho),
+            "mech_kwargs": self.mech_kwargs,
+            "split_occupancy_factor": self.split_occupancy_factor,
+            "min_split_keys": self.min_split_keys,
+            "split_chain_depth": self.split_chain_depth,
+            "min_device_batch": self.min_device_batch,
+            "mutations": self._mutations,
+            "epoch": int(self.epoch),
+            "step": s,
+            "wal_lsn": int(wal_lsn),
+        }
+        tmp = os.path.join(d, "sharded_manifest.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, os.path.join(d, "sharded_manifest.json"))
+        return d
+
+    @classmethod
+    def restore(cls, directory, step: Optional[int] = None):
+        """Load a ``save_snapshot`` checkpoint -> ``(sharded, extra)``.
+        Shards restore bit-identically; the router refits on the saved
+        boundaries (deterministic), so routing matches the saved
+        instance exactly."""
+        import json
+        import os
+        d = str(directory)
+        with open(os.path.join(d, "sharded_manifest.json")) as f:
+            m = json.load(f)
+        s = int(step) if step is not None else int(m["step"])
+        shards = []
+        for i in range(int(m["n_shards"])):
+            sh, _ = Index.restore(os.path.join(d, f"shard_{i:03d}"),
+                                  step=s)
+            sh.min_device_batch = int(m["min_device_batch"])
+            shards.append(sh)
+        router = ShardRouter(np.asarray(m["bounds"], np.float64),
+                             lo_key=m["lo_key"])
+        out = cls(shards, router, method=m["method"],
+                  sample_rate=float(m["sample_rate"]),
+                  gap_rho=float(m["gap_rho"]),
+                  mech_kwargs=m["mech_kwargs"],
+                  split_occupancy_factor=float(m["split_occupancy_factor"]),
+                  min_split_keys=int(m["min_split_keys"]),
+                  split_chain_depth=int(m["split_chain_depth"]),
+                  min_device_batch=int(m["min_device_batch"]))
+        out._mutations = int(m["mutations"])
+        return out, m
 
     # ------------------------------------------------------------------
     # split / rebalance

@@ -216,6 +216,34 @@ linking-chain hits (the ``LookupResult.found`` mask).
 5. **Wide payloads**: int64 payloads are carried as an i32 hi/lo pair
    and reconstructed after the epilogue (``IndexArrays.wide``).
 
+Serving & durability contract (how this layer is consumed live)
+---------------------------------------------------------------
+``repro.serving.EpochPipeline`` double-buffers the handle for
+concurrent serving: lookups run against a pinned immutable snapshot
+(the frozen first-level arrays + CSR image — ``GappedArray
+.pin_snapshot``, O(1) pin, copy-on-write on the live side) while
+ingest mutates the live index through the contracts above.  Two
+consequences for THIS layer:
+
+* the kernels never see snapshot state — snapshots serve via the host
+  oracle path, which the backend decision table already requires to be
+  bit-identical to every device backend, so snapshot isolation comes
+  for free from the existing exactness contract;
+* fused-ingest aborts stay cheap under serving: an aborted dispatch's
+  primitives are reused host-side (never wasted), and when the abort
+  reason is *localized* the handle commits the clean PREFIX of the
+  batch through a second fused dispatch and routes only the remainder
+  through the host path (``placement="device-split"``,
+  ``IngestReport.split_commits``) — so one contested key no longer
+  demotes a whole large batch off the device.
+
+Durability (``repro.serving.wal``: CRC-framed write-ahead log +
+``Index.save_snapshot`` checkpoints) is layered strictly ABOVE the
+engine: recovery replays acked batches through the normal ``ingest``
+entry point, so a recovered index re-derives device state through the
+same freeze/delta/fused machinery — nothing in this layer needs to be
+crash-aware.
+
 Migration notes
 ---------------
 ``QueryEngine.from_index(idx)`` + manual refreeze-after-mutation is the

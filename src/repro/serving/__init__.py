@@ -1,4 +1,70 @@
-from .kv_cache import PagedKVCache
-from .engine import ServingEngine, Request
+"""Serving layer: continuous batching, cross-caller aggregation, and
+crash-safe concurrent serving.
 
-__all__ = ["PagedKVCache", "ServingEngine", "Request"]
+Serving & durability contract
+-----------------------------
+The serving stack composes four layers, each independently usable:
+
+* **Snapshot isolation** (``pipeline.EpochPipeline``): lookups serve a
+  *pinned immutable snapshot* of epoch N while ingest builds epoch N+1
+  on the live index; ``publish()`` pins the new epoch completely and
+  swaps the served reference in one assignment — barrier-free, no
+  observable half-built epoch.  Typed results carry the epoch they were
+  served at (``LookupResult.epoch``).  **Bit-identity guarantee**: a
+  concurrent snapshot lookup equals a quiesced lookup at the snapshot
+  epoch bit-for-bit — the snapshot runs the proven host path over the
+  frozen arrays, and the repo's backend contract (fused / pallas /
+  oracle identical) extends that to every device backend.  Pinning is
+  O(1); the live side pays one copy-on-write on its first post-pin
+  mutation (``core.gaps.GappedArray.pin_snapshot``).
+
+* **Durability** (``wal.IngestWAL`` + ``core.Index.save_snapshot`` /
+  ``dist.ShardedIndex.save_snapshot``): ingests are CRC-framed to a
+  write-ahead log *before* application; ``publish`` fences the epoch
+  (fsync); ``EpochPipeline.checkpoint`` snapshots the live index with
+  the current WAL offset.  **Recovery invariant**: after a crash at ANY
+  byte boundary, ``wal.recover_index(snapshot_dir, wal_path)`` =
+  latest snapshot + WAL-tail replay reproduces the pre-crash acked
+  state bit-for-bit — a torn trailing record (bad CRC / short frame)
+  is truncated, never partially applied, and records at or below the
+  snapshot's ``wal_lsn`` are skipped, never double-applied.
+
+* **Admission control** (``engine.MicroBatchQueue``): bounded queue
+  depth with typed ``core.Overloaded`` shed (explicit backpressure,
+  never a silent hang), ``max_wait_ms`` deadline flush for lone small
+  callers, and ingest retry-with-backoff whose final attempt degrades
+  to the proven host partition path (``fused_ingest_enabled=False``,
+  restored after).  ``robustness.InjectedCrash`` always propagates —
+  retry loops must not absorb process death.
+
+* **Fault discipline** (``repro.robustness``): every layer above
+  accepts a deterministic ``FaultInjector`` (site-keyed crash / abort /
+  slow / torn-tail schedules) and an ``InvariantAuditor`` (slot + chain
+  == n, CSR well-formedness, epoch monotonicity, snapshot pin
+  refcounts), so the crash/recovery/shed paths are *property-tested*,
+  not best-effort (tests/test_wal_recovery.py,
+  tests/test_serving_pipeline.py, ``benchmarks/run.py --smoke``).
+"""
+
+from ..core.results import Overloaded
+from .engine import MicroBatchQueue, Request, ServingEngine
+from .kv_cache import PagedKVCache
+from .pipeline import (EpochPipeline, IndexSnapshot, ShardedSnapshot,
+                       pin_index)
+from .wal import IngestWAL, WALRecord, recover_index, replay
+
+__all__ = [
+    "EpochPipeline",
+    "IndexSnapshot",
+    "IngestWAL",
+    "MicroBatchQueue",
+    "Overloaded",
+    "PagedKVCache",
+    "Request",
+    "ServingEngine",
+    "ShardedSnapshot",
+    "WALRecord",
+    "pin_index",
+    "recover_index",
+    "replay",
+]

@@ -1,0 +1,251 @@
+"""Snapshot-isolated epoch pipelining for concurrent serving.
+
+The epoch-versioned handle (``core.handle.Index``) is one synchronous
+object: a lookup issued while an ingest is mutating it observes
+whatever intermediate state the mutation left.  ``EpochPipeline``
+double-buffers instead:
+
+* **lookups** run against a *pinned immutable snapshot* of epoch N —
+  the frozen first-level arrays + CSR link image captured by
+  ``GappedArray.pin_snapshot()`` (zero-copy: the live side pays one
+  copy-on-write per pin on its first post-pin mutation, see
+  ``core/gaps.py``);
+* **ingest** applies to the live index, building epoch N+1 (delta
+  application / refreeze proceed on the live buffers — the snapshot
+  never sees them);
+* ``publish()`` pins N+1 *completely* and then swaps the served
+  reference in one assignment — barrier-free: there is no window in
+  which a lookup can observe a half-built epoch, because the old
+  snapshot stays valid until the swap and the new one is immutable
+  before it.
+
+Typed results carry the epoch they were served at (``LookupResult
+.epoch``).  Bit-identity: a snapshot lookup runs the proven
+``GappedArray.lookup_batch`` host path over the pinned arrays, and the
+repo's backend contract (fused / pallas / oracle identical payloads,
+slots, found — tests/test_kernel_lookup.py, tests/test_fused_ingest.py)
+makes that bit-identical to ANY quiesced lookup at the snapshot epoch.
+The same holds per shard for ``ShardedIndex`` (``ShardedSnapshot`` pins
+every shard plus the router boundaries and slot bases, mirroring the
+exact host route).
+
+Durability hooks: give the pipeline an ``IngestWAL`` and every ingest
+is logged *before* it is applied (write-ahead), ``publish`` fences the
+epoch (fsync), and ``checkpoint()`` snapshots the live index through
+``Index.save_snapshot`` with the current WAL offset — crash recovery
+is ``serving.wal.recover_index``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from ..core.results import LookupResult
+
+__all__ = ["EpochPipeline", "IndexSnapshot", "ShardedSnapshot",
+           "pin_index"]
+
+
+class IndexSnapshot:
+    """Pinned immutable serving snapshot of a single-device ``Index``."""
+
+    def __init__(self, index):
+        if index.gapped is None:
+            raise ValueError(
+                "snapshot serving needs a gapped build (gap_rho > 0); "
+                "a static index has no mutation to isolate against")
+        self.epoch = int(index.epoch)
+        self._snap = index.gapped.pin_snapshot()
+
+    @property
+    def n_keys(self) -> int:
+        return self._snap.n_keys
+
+    def lookup(self, queries) -> LookupResult:
+        queries = np.atleast_1d(np.asarray(queries, np.float64))
+        pay, slot, found = self._snap.lookup_batch(queries, full=True)
+        return LookupResult(payloads=pay, slots=slot, found=found,
+                            backend="snapshot", epoch=self.epoch)
+
+    def release(self) -> None:
+        self._snap.release()
+
+
+class ShardedSnapshot:
+    """Pinned immutable serving snapshot of a ``ShardedIndex``: one
+    ``GapSnapshot`` per shard plus the router boundaries and slot bases
+    frozen at pin time, so routing and the per-shard slot offsets match
+    the pinned topology even across a concurrent ``split_shard``."""
+
+    def __init__(self, sharded):
+        self.epoch = int(sharded.epoch)
+        self._bounds = sharded.router.bounds.copy()
+        self._bases = sharded._slot_bases().copy()
+        self._snaps = [sh.gapped.pin_snapshot() for sh in sharded.shards]
+
+    @property
+    def n_keys(self) -> int:
+        return int(sum(s.n_keys for s in self._snaps))
+
+    def lookup(self, queries) -> LookupResult:
+        queries = np.atleast_1d(np.asarray(queries, np.float64))
+        n = queries.shape[0]
+        # exact route against the PINNED boundaries (route-left, same
+        # rule as ShardRouter.route)
+        dst = (np.searchsorted(self._bounds, queries, side="right")
+               if self._bounds.size else np.zeros(n, np.int64))
+        pay = np.full(n, -1, np.int64)
+        slot = np.full(n, -1, np.int64)
+        found = np.zeros(n, bool)
+        for s in np.unique(dst):
+            rows = np.flatnonzero(dst == s)
+            p, sl, f = self._snaps[s].lookup_batch(queries[rows],
+                                                   full=True)
+            pay[rows] = p
+            slot[rows] = np.where(sl >= 0, sl + self._bases[s], -1)
+            found[rows] = f
+        return LookupResult(payloads=pay, slots=slot, found=found,
+                            backend="snapshot", epoch=self.epoch)
+
+    def release(self) -> None:
+        for s in self._snaps:
+            s.release()
+
+
+def pin_index(index):
+    """Pin the appropriate snapshot type for ``index`` (duck-typed on
+    ``shards``, like ``MicroBatchQueue``)."""
+    if hasattr(index, "shards"):
+        return ShardedSnapshot(index)
+    return IndexSnapshot(index)
+
+
+class EpochPipeline:
+    """Double-buffered serving front over an ``Index``/``ShardedIndex``
+    (see module doc).  Duck-type compatible with the handles where it
+    matters — ``lookup(queries)`` / ``ingest(keys, payloads)`` /
+    ``epoch`` / ``stats`` — so ``MicroBatchQueue`` aggregates over a
+    pipeline unchanged.
+
+    * ``wal``: optional ``serving.wal.IngestWAL`` — ingests are logged
+      before application, ``publish`` fences the epoch.
+    * ``publish_every``: auto-publish after that many ingests (None =
+      manual ``publish()`` only).
+    * ``auditor`` + ``audit_every``: optional
+      ``robustness.faults.InvariantAuditor`` sampled every N ingests
+      (every ingest when 1 — the tests' setting).
+    * ``faults``: optional ``robustness.faults.FaultInjector``; sites
+      ``"pipeline.ingest"`` and ``"pipeline.publish"`` are checked on
+      the way in (deterministic crash/slow/abort injection).
+    """
+
+    def __init__(self, index, *, wal=None,
+                 publish_every: Optional[int] = None,
+                 auditor=None, audit_every: int = 0, faults=None):
+        self.index = index
+        self.wal = wal
+        self.publish_every = publish_every
+        self.auditor = auditor
+        self.audit_every = int(audit_every)
+        self.faults = faults
+        self._snapshot = pin_index(index)
+        self._ingests_since_publish = 0
+        self.stats = {"publishes": 0, "snapshot_lookups": 0,
+                      "live_lookups": 0, "ingests": 0, "wal_records": 0,
+                      "max_lag": 0, "audits": 0}
+
+    # ------------------------------------------------------------------
+    @property
+    def epoch(self) -> int:
+        """Epoch lookups are currently served at (the pinned snapshot)."""
+        return self._snapshot.epoch
+
+    @property
+    def live_epoch(self) -> int:
+        return int(self.index.epoch)
+
+    @property
+    def lag(self) -> int:
+        """Mutations applied to the live index but not yet published."""
+        return self.live_epoch - self._snapshot.epoch
+
+    # ------------------------------------------------------------------
+    def lookup(self, queries, *, backend: Optional[str] = None
+               ) -> LookupResult:
+        """Serve a lookup at the published snapshot epoch.
+
+        When the live index is quiesced at the snapshot epoch the call
+        delegates to ``index.lookup`` (device backends and their
+        telemetry) — bit-identical to the snapshot by the backend
+        contract.  While ingest is in flight (live epoch ahead), the
+        pinned snapshot serves: isolation, not staleness — publishing
+        is the caller's policy."""
+        if self.index.epoch == self._snapshot.epoch:
+            self.stats["live_lookups"] += 1
+            return self.index.lookup(queries, backend=backend)
+        self.stats["snapshot_lookups"] += 1
+        return self._snapshot.lookup(queries)
+
+    def ingest(self, keys, payloads):
+        """Apply an ingest batch to the LIVE index (epoch N+1 under
+        construction); logged to the WAL first when one is attached.
+        Lookups keep serving the pinned snapshot until ``publish``."""
+        if self.faults is not None:
+            self.faults.check("pipeline.ingest")
+        keys = np.atleast_1d(np.asarray(keys, np.float64))
+        payloads = np.atleast_1d(np.asarray(payloads, np.int64))
+        if self.wal is not None:
+            self.wal.append(keys, payloads)  # write-ahead: log, THEN apply
+            self.stats["wal_records"] += 1
+        rep = self.index.ingest(keys, payloads)
+        self.stats["ingests"] += 1
+        self.stats["max_lag"] = max(self.stats["max_lag"], self.lag)
+        self._ingests_since_publish += 1
+        if (self.auditor is not None and self.audit_every
+                and self.stats["ingests"] % self.audit_every == 0):
+            self.stats["audits"] += 1
+            self.auditor.assert_ok(self.index, pipeline=self)
+        if (self.publish_every is not None
+                and self._ingests_since_publish >= self.publish_every):
+            self.publish()
+        return rep
+
+    def publish(self) -> int:
+        """Pin epoch N+1 completely, then swap the served reference in
+        one assignment (barrier-free — no partially built epoch is ever
+        observable) and release the old pin.  Fences the WAL.  Returns
+        the newly served epoch."""
+        if self.faults is not None:
+            self.faults.check("pipeline.publish")
+        new = pin_index(self.index)  # fully pinned BEFORE the swap
+        old, self._snapshot = self._snapshot, new
+        old.release()
+        self._ingests_since_publish = 0
+        if self.wal is not None:
+            self.wal.fence(new.epoch)
+        self.stats["publishes"] += 1
+        return new.epoch
+
+    # ------------------------------------------------------------------
+    def checkpoint(self, directory, *, step: Optional[int] = None,
+                   keep: int = 3) -> str:
+        """Snapshot the live index to ``directory`` with the current
+        WAL offset recorded — the recovery anchor for
+        ``serving.wal.recover_index``."""
+        lsn = int(self.wal.lsn) if self.wal is not None else 0
+        return self.index.save_snapshot(directory, step=step, keep=keep,
+                                        wal_lsn=lsn)
+
+    def close(self) -> None:
+        self._snapshot.release()
+        if self.wal is not None:
+            self.wal.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

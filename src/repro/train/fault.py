@@ -40,7 +40,10 @@ class StepWatchdog:
         return self
 
     def __exit__(self, *exc):
-        self.cancel()
+        # cancel even on exception exit — an armed timer surviving a
+        # crashed step would fire a bogus straggler event for a step
+        # that never completed, and keep a thread alive past teardown
+        self.close()
         return False
 
     def arm(self, step: int):
@@ -51,10 +54,20 @@ class StepWatchdog:
         self._timer.daemon = True
         self._timer.start()
 
-    def cancel(self):
-        if self._timer is not None:
-            self._timer.cancel()
-            self._timer = None
+    def cancel(self) -> Optional[threading.Timer]:
+        t, self._timer = self._timer, None
+        if t is not None:
+            t.cancel()
+        return t
+
+    def close(self, timeout_s: float = 1.0):
+        """Cancel and JOIN the timer thread so no ``_fire`` callback can
+        run after the owner is torn down (cancel() alone races a timer
+        that already started firing)."""
+        t = self.cancel()
+        if (t is not None and t.is_alive()
+                and t is not threading.current_thread()):
+            t.join(timeout=timeout_s)
 
 
 class FailureInjector:

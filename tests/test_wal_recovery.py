@@ -1,0 +1,293 @@
+"""Durability (ISSUE 8 tentpole): CRC-framed ingest WAL + snapshot
+checkpoints + crash recovery.  Kill-and-restart property tests: a torn
+WAL tail at EVERY byte boundary recovers to the exact acked prefix,
+both key widths, single-device AND sharded."""
+
+import os
+import struct
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import Index
+from repro.robustness import FaultInjector, InjectedCrash, InvariantAuditor
+from repro.serving import EpochPipeline, IngestWAL, recover_index, replay
+from repro.serving.wal import truncate_torn_tail
+
+
+def _mk_index(n=6_000, seed=0, wide=False, **kw):
+    rng = np.random.default_rng(seed)
+    hi = 2 ** 46 if wide else 2 ** 20  # wide: beyond f32, pair-exact
+    keys = np.unique(rng.choice(hi, n, replace=False)).astype(np.float64)
+    keys *= 2.0
+    kw.setdefault("method", "pgm")
+    kw.setdefault("eps", 64)
+    kw.setdefault("gap_rho", 0.2)
+    return Index.build(keys, **kw), keys
+
+
+def _fresh(keys, n):
+    mids = np.setdiff1d(keys[:-1] + np.rint(np.diff(keys) * 0.5), keys)
+    assert mids.size >= n
+    return mids[:n]
+
+
+def _state_equal(a, b):
+    ga, gb = a.gapped, b.gapped
+    if not (np.array_equal(ga.slot_key, gb.slot_key)
+            and np.array_equal(ga.occupied, gb.occupied)
+            and np.array_equal(ga.payload[ga.occupied],
+                               gb.payload[gb.occupied])):
+        return False
+    oa, ka, pa = ga.export_csr_links()
+    ob, kb, pb = gb.export_csr_links()
+    return (np.array_equal(oa, ob) and np.array_equal(ka, kb)
+            and np.array_equal(pa, pb))
+
+
+# ---------------------------------------------------------------------------
+# WAL framing
+
+
+def test_wal_roundtrip_batches_and_fences(tmp_path):
+    p = tmp_path / "a.wal"
+    keys = np.array([3.0, 1.0, 7.5])
+    pays = np.array([30, 10, 75])
+    with IngestWAL(p, sync_every=2) as w:
+        lsn1 = w.append(keys, pays)
+        lsn2 = w.fence(5)
+        lsn3 = w.append(keys + 100.0, pays + 100)
+        assert lsn1 < lsn2 < lsn3 == w.lsn
+        assert w.stats["fences"] == 1 and w.stats["records"] == 3
+    recs, valid_end, torn = replay(p)
+    assert not torn and valid_end == lsn3
+    assert [r.kind for r in recs] == ["batch", "fence", "batch"]
+    np.testing.assert_array_equal(recs[0].keys, keys)
+    np.testing.assert_array_equal(recs[0].payloads, pays)
+    assert recs[1].epoch == 5
+    np.testing.assert_array_equal(recs[2].keys, keys + 100.0)
+    assert recs[0].lsn == lsn1 and recs[2].lsn == lsn3
+
+
+def test_wal_append_shape_mismatch_raises(tmp_path):
+    with IngestWAL(tmp_path / "a.wal") as w:
+        with pytest.raises(ValueError, match="1:1"):
+            w.append(np.array([1.0, 2.0]), np.array([1]))
+
+
+def test_wal_missing_file_is_empty_log(tmp_path):
+    recs, valid_end, torn = replay(tmp_path / "nope.wal")
+    assert recs == [] and valid_end == 0 and not torn
+
+
+def test_wal_flipped_bit_is_caught_by_crc(tmp_path):
+    p = tmp_path / "a.wal"
+    with IngestWAL(p) as w:
+        w.append(np.array([1.0, 2.0]), np.array([1, 2]))
+        end1 = w.append(np.array([3.0]), np.array([3]))
+    raw = bytearray(p.read_bytes())
+    raw[end1 - 10] ^= 0x40  # flip one bit inside record 2's body
+    p.write_bytes(bytes(raw))
+    recs, valid_end, torn = replay(p)
+    assert torn and len(recs) == 1 and valid_end < end1
+
+
+def test_wal_truncate_torn_tail_then_append(tmp_path):
+    p = tmp_path / "a.wal"
+    with IngestWAL(p) as w:
+        w.append(np.array([1.0]), np.array([1]))
+        end1 = w.lsn
+        w.append(np.array([2.0]), np.array([2]))
+    with open(p, "r+b") as f:  # torn mid-record
+        f.truncate(end1 + 9)
+    assert truncate_torn_tail(p) == 9
+    assert truncate_torn_tail(p) == 0  # idempotent on a clean log
+    with IngestWAL(p) as w:
+        w.append(np.array([5.0]), np.array([5]))
+    recs, _, torn = replay(p)
+    assert not torn and len(recs) == 2
+    assert recs[1].keys[0] == 5.0
+
+
+# ---------------------------------------------------------------------------
+# snapshot + replay recovery, single-device
+
+
+@pytest.mark.parametrize("wide", [False, True])
+def test_recover_equals_uninterrupted_run(tmp_path, wide):
+    idx, keys = _mk_index(wide=wide)
+    wal = IngestWAL(tmp_path / "ingest.wal")
+    pipe = EpochPipeline(idx, wal=wal)
+    fresh = _fresh(keys, 600)
+    b1, b2, b3 = fresh[:200], fresh[200:400], fresh[400:]
+    pipe.ingest(b1, np.arange(200, dtype=np.int64))
+    pipe.publish()
+    pipe.checkpoint(tmp_path / "ckpt", step=0)  # snapshot at lsn(b1)
+    pipe.ingest(b2, 200 + np.arange(200, dtype=np.int64))
+    pipe.ingest(b3, 400 + np.arange(200, dtype=np.int64))
+    pipe.publish()
+    wal.sync()
+
+    rec, info = recover_index(tmp_path / "ckpt", tmp_path / "ingest.wal")
+    assert info["skipped"] == 1          # b1 folded into the snapshot
+    assert info["replayed"] == 2 and not info["torn"]
+    assert _state_equal(rec, idx)
+    assert rec.epoch == idx.epoch
+    res = rec.lookup(fresh)
+    np.testing.assert_array_equal(res.payloads, np.arange(600))
+    pipe.close()
+
+
+@pytest.mark.parametrize("wide", [False, True])
+@pytest.mark.parametrize("sharded", [False, True])
+def test_kill_at_every_byte_boundary_recovers_acked_prefix(
+        tmp_path, wide, sharded):
+    """THE crash-safety property: tear the WAL at EVERY byte offset
+    past the checkpoint; recovery must reproduce exactly the acked
+    (fully logged) batches — never a partial batch, never a lost acked
+    one — for narrow and wide keys, single-device and sharded."""
+    kw = {"shards": 2} if sharded else {}
+    idx, keys = _mk_index(n=3_000, wide=wide, **kw)
+    wal_path = tmp_path / "ingest.wal"
+    wal = IngestWAL(wal_path)
+    pipe = EpochPipeline(idx, wal=wal)
+    pipe.checkpoint(tmp_path / "ckpt", step=0)
+    base_lsn = wal.lsn
+
+    fresh = _fresh(keys, 24)
+    batches = [(fresh[i * 8:(i + 1) * 8],
+                (100 * (i + 1) + np.arange(8)).astype(np.int64))
+               for i in range(3)]
+    ends = []
+    for bk, bp in batches:
+        pipe.ingest(bk, bp)
+        ends.append(wal.lsn)
+    wal.sync()
+    raw = wal_path.read_bytes()
+
+    # reference states: acked prefix of 0, 1, 2, 3 batches
+    refs = []
+    for upto in range(4):
+        r, _ = Index.restore(tmp_path / "ckpt") if not sharded else \
+            __import__("repro.dist.sharded", fromlist=["ShardedIndex"]
+                       ).ShardedIndex.restore(tmp_path / "ckpt")
+        for bk, bp in batches[:upto]:
+            r.ingest(bk, bp)
+        refs.append(r)
+
+    aud = InvariantAuditor()
+    torn_path = tmp_path / "torn.wal"
+    for cut in range(base_lsn, len(raw) + 1):
+        torn_path.write_bytes(raw[:cut])
+        rec, info = recover_index(tmp_path / "ckpt", torn_path)
+        n_acked = sum(e <= cut for e in ends)
+        assert info["replayed"] == n_acked, f"cut={cut}"
+        assert info["torn"] == (cut not in ([base_lsn] + ends)), \
+            f"cut={cut}"
+        want = refs[n_acked]
+        if sharded:
+            for sa, sb in zip(rec.shards, want.shards):
+                assert _state_equal(sa, sb), f"cut={cut}"
+        else:
+            assert _state_equal(rec, want), f"cut={cut}"
+        aud.assert_ok(rec)
+    pipe.close()
+
+
+def test_recovery_is_idempotent_under_double_replay(tmp_path):
+    """Records at or below the checkpoint's wal_lsn are skipped — a
+    checkpoint taken mid-log never double-applies its own history."""
+    idx, keys = _mk_index(n=3_000)
+    wal = IngestWAL(tmp_path / "w.wal")
+    pipe = EpochPipeline(idx, wal=wal)
+    fresh = _fresh(keys, 30)
+    pipe.ingest(fresh[:10], np.arange(10, dtype=np.int64))
+    pipe.ingest(fresh[10:20], 10 + np.arange(10, dtype=np.int64))
+    pipe.checkpoint(tmp_path / "ckpt", step=0)
+    pipe.ingest(fresh[20:], 20 + np.arange(10, dtype=np.int64))
+    wal.sync()
+    rec, info = recover_index(tmp_path / "ckpt", tmp_path / "w.wal")
+    assert info["skipped"] == 2 and info["replayed"] == 1
+    assert _state_equal(rec, idx)
+    pipe.close()
+
+
+def test_sharded_checkpoint_restores_router_and_mutations(tmp_path):
+    from repro.dist.sharded import ShardedIndex
+
+    idx, keys = _mk_index(n=9_000, shards=3)
+    fresh = _fresh(keys, 500)
+    idx.ingest(fresh, np.arange(500, dtype=np.int64))
+    idx.maybe_rebalance(force_shard=0)
+    idx.save_snapshot(tmp_path / "ckpt", step=7, wal_lsn=123)
+    rec, extra = ShardedIndex.restore(tmp_path / "ckpt")
+    assert extra["wal_lsn"] == 123 and extra["step"] == 7
+    assert rec.epoch == idx.epoch
+    assert len(rec.shards) == len(idx.shards)
+    np.testing.assert_array_equal(rec.router.bounds, idx.router.bounds)
+    q = np.concatenate([keys[::17], fresh[::7]])
+    a, b = rec.lookup(q), idx.lookup(q)
+    np.testing.assert_array_equal(a.payloads, b.payloads)
+    np.testing.assert_array_equal(a.slots, b.slots)
+    np.testing.assert_array_equal(a.found, b.found)
+
+
+def test_kill_and_restart_mid_pipeline_via_injected_crash(tmp_path):
+    """End-to-end kill-and-restart: a scheduled crash fires mid-stream;
+    the 'restarted process' recovers from snapshot + WAL and continues
+    ingesting — final state equals a never-crashed run."""
+    idx, keys = _mk_index(n=4_000)
+    inj = FaultInjector({("pipeline.ingest", 2): "crash"})
+    wal = IngestWAL(tmp_path / "w.wal")
+    pipe = EpochPipeline(idx, wal=wal, faults=inj)
+    pipe.checkpoint(tmp_path / "ckpt", step=0)
+    fresh = _fresh(keys, 40)
+    seqs = [(fresh[i * 10:(i + 1) * 10],
+             (1000 * (i + 1) + np.arange(10)).astype(np.int64))
+            for i in range(4)]
+    done = []
+    with pytest.raises(InjectedCrash):
+        for bk, bp in seqs:
+            pipe.ingest(bk, bp)
+            done.append((bk, bp))
+    assert len(done) == 2  # third ingest died BEFORE logging/applying
+    wal.close()
+
+    # "restart": recover, then run the remaining batches
+    rec, info = recover_index(tmp_path / "ckpt", tmp_path / "w.wal")
+    assert info["replayed"] == 2 and not info["torn"]
+    wal2 = IngestWAL(tmp_path / "w.wal")  # safe append post-recovery
+    pipe2 = EpochPipeline(rec, wal=wal2)
+    for bk, bp in seqs[2:]:
+        pipe2.ingest(bk, bp)
+    pipe2.publish()
+
+    ref, _ = _mk_index(n=4_000)
+    for bk, bp in seqs:
+        ref.ingest(bk, bp)
+    assert _state_equal(rec, ref)
+    res = pipe2.lookup(fresh)
+    assert res.found.all()
+    pipe2.close()
+
+
+def test_save_restore_preserves_mechanism_and_lookups(tmp_path):
+    idx, keys = _mk_index(n=5_000, method="fiting")
+    fresh = _fresh(keys, 64)
+    idx.ingest(fresh, np.arange(64, dtype=np.int64))
+    idx.save_snapshot(tmp_path / "ckpt", step=3, wal_lsn=999,
+                      extra={"note": "x"})
+    rec, extra = Index.restore(tmp_path / "ckpt")
+    assert extra["wal_lsn"] == 999 and extra["method"] == "fiting"
+    assert rec.method == "fiting"
+    assert rec.epoch == idx.epoch
+    assert _state_equal(rec, idx)
+    q = np.concatenate([keys[::11], fresh, fresh + 1.0])
+    a, b = rec.lookup(q), idx.lookup(q)
+    np.testing.assert_array_equal(a.payloads, b.payloads)
+    np.testing.assert_array_equal(a.found, b.found)
+    # the restored handle keeps ingesting (mechanism unpickled live)
+    more = _fresh(keys, 128)[64:]
+    rec.ingest(more, np.arange(more.size, dtype=np.int64))
+    assert rec.lookup(more).found.all()
