@@ -35,6 +35,7 @@ def measure(index: LearnedIndex, queries: np.ndarray,
     t_pred = time_ns_per(lambda: index.predict(queries), n_q)
     y_hat = index.predict(queries)
 
+    probes_per_q = 0.0
     if index.gapped is not None:
         t_overall = time_ns_per(lambda: index.gapped.lookup_batch(queries), n_q)
         slots = np.searchsorted(index.gapped.slot_key, keys, "right") - 1
@@ -42,13 +43,18 @@ def measure(index: LearnedIndex, queries: np.ndarray,
         size = (index.gapped.n_slots * payload_bytes_per_key
                 + index.gapped.link_stats()[0] * payload_bytes_per_key
                 + 8 * index.mech.param_count())
+        _, probes = exponential_search(index.gapped.slot_key, queries,
+                                       index.predict(queries))
+        probes_per_q = probes / n_q
     else:
         t_correct_only = time_ns_per(
-            lambda: exponential_search(keys, queries, y_hat), n_q)
+            lambda: exponential_search(keys, queries, y_hat)[0], n_q)
         t_overall = t_pred + t_correct_only
         m = mae_fn(np.arange(len(keys)), index.predict(keys))
         size = (len(keys) * payload_bytes_per_key
                 + 8 * index.mech.param_count())
+        _, probes = exponential_search(keys, queries, y_hat)
+        probes_per_q = probes / n_q
 
     t_correct = max(t_overall - t_pred, 0.0)
     return {
@@ -58,6 +64,7 @@ def measure(index: LearnedIndex, queries: np.ndarray,
         "overall_ns": t_overall,
         "size_bytes": float(size),
         "mae": m,
+        "probes_per_q": probes_per_q,
     }
 
 
@@ -71,7 +78,7 @@ def btree_measure(index: LearnedIndex, queries: np.ndarray) -> Dict[str, float]:
     def correct():
         page = (pred // mech.page_size).astype(np.int64) * mech.page_size
         # binary scan within the page (vectorized searchsorted per page)
-        return exponential_search(index.keys, queries, pred)
+        return exponential_search(index.keys, queries, pred)[0]
 
     t_corr = time_ns_per(correct, n_q)
     return {

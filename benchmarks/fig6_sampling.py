@@ -1,16 +1,96 @@
 """Figure 6: sampling sweep — MAE / build time / query time vs sample
-rate (the 78x construction-speedup claim lives here)."""
+rate (the 78x construction-speedup claim lives here), with the
+exponential-search probe counts surfaced per row.
+
+Also writes ``BENCH_build.json`` at the repo root — the construction
+trajectory behind the regression gate: per sample_rate, total build
+time split into mechanism LEARNING (base fit + Eq.3 targets + step-3
+refit, O(n_s) after the sampled-end-to-end change) vs physical
+PLACEMENT (O(n) always), the learn speedup vs the full-rate build
+(the gated metric — a ratio of two arms sharing this run's machine
+state, so container-load swings cancel), a bit-identity check of the
+sampled build's answers against the full build, and the MDL score +
+choice of the ``core.tuning`` auto-tuner on the same keys.
+"""
 
 from __future__ import annotations
 
+import json
+import pathlib
+
 import numpy as np
 
-from repro.core import LearnedIndex
+from repro.core import Index, LearnedIndex
+from repro.core.tuning import autotune
 
 from .common import measure
 from .datasets import iot
 
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
 RATES = (1.0, 0.5, 0.1, 0.05, 0.01, 0.005, 0.0025, 0.001)
+BUILD_RATES = (1.0, 0.1, 0.01)
+GAP_RHO = 0.15
+
+
+def _bit_identity(full: Index, samp: Index, keys: np.ndarray,
+                  rng: np.random.Generator) -> bool:
+    """Sampled-then-refinalized answers == full-build answers (present
+    AND absent queries) — the §4 exactness contract."""
+    q = rng.choice(keys, min(20_000, len(keys)))
+    miss = np.setdiff1d(keys[:-1] + np.diff(keys) * 0.5, keys)[:4000]
+    qs = np.concatenate([q, miss])
+    a = full.lookup(qs)
+    b = samp.lookup(qs)
+    return bool(np.array_equal(np.asarray(a.payloads),
+                               np.asarray(b.payloads))
+                and np.array_equal(np.asarray(a.found),
+                                   np.asarray(b.found)))
+
+
+def run_build(keys: np.ndarray, seed: int = 0, method: str = "pgm",
+              eps: float = 128.0, write: bool = True):
+    """The BENCH_build.json sweep: gapped builds across BUILD_RATES."""
+    rng = np.random.default_rng(seed)
+    rows = []
+    full = None
+    full_learn = None
+    for s in BUILD_RATES:
+        idx = Index.build(keys, method=method, eps=eps, gap_rho=GAP_RHO,
+                          sample_rate=s,
+                          rng=np.random.default_rng(seed + 1))
+        t = idx.gapped.build_timings
+        if s == 1.0:
+            full, full_learn = idx, t["learn_seconds"]
+        rows.append({
+            "batch": f"s{s}",
+            "sample_rate": s,
+            "build_ms": idx.build_seconds * 1e3,
+            "learn_ms": t["learn_seconds"] * 1e3,
+            "place_ms": t["place_seconds"] * 1e3,
+            "n_fit": t["n_fit"],
+            "learn_speedup": (full_learn / max(t["learn_seconds"], 1e-9)
+                              if full_learn else 1.0),
+            "bit_identical": (True if s == 1.0
+                              else _bit_identity(full, idx, keys, rng)),
+        })
+    queries = rng.choice(keys, min(50_000, len(keys)))
+    tuned = autotune(keys, queries=queries, dynamic=True,
+                     rng=np.random.default_rng(seed + 2))
+    payload = {
+        "n": int(len(keys)),
+        "method": method,
+        "gap_rho": GAP_RHO,
+        "rows": rows,
+        "learn_speedup_max": max(r["learn_speedup"] for r in rows),
+        "auto_method": tuned.method,
+        "auto_mech_kwargs": tuned.mech_kwargs,
+        "auto_mdl": tuned.score,
+        "auto_hoeffding_eps": tuned.hoeffding_eps,
+    }
+    if write:
+        (_ROOT / "BENCH_build.json").write_text(json.dumps(payload, indent=2))
+    return payload
 
 
 def run(n=None, seed=0, method="pgm", eps=256):
@@ -30,6 +110,17 @@ def run(n=None, seed=0, method="pgm", eps=256):
                               if build_full else 1.0)
         m["segments"] = idx.mech.plm.n_segments
         rows.append({"name": f"{method}.s{s}", **m})
+    # reduced sweeps (n override / BENCH_FAST) never overwrite the record
+    build = run_build(keys, seed=seed, write=n is None)
+    for r in build["rows"]:
+        rows.append({
+            "name": f"build.{r['batch']}",
+            "us": r["build_ms"] * 1e3,
+            "learn_ms": r["learn_ms"],
+            "place_ms": r["place_ms"],
+            "learn_speedup": r["learn_speedup"],
+            "bit_identical": r["bit_identical"],
+        })
     return rows
 
 

@@ -109,6 +109,17 @@ TRAJECTORIES = {
         {"batch", "read_frac", "zipf", "p50_us", "p99_us",
          "ingest_keys_per_s"},
     ),
+    # the build file gates on the sampled-vs-full mechanism-LEARNING
+    # speedup (lower-is-worse; both arms share each run's machine
+    # state, so the ratio cancels container-load swings): it guards the
+    # §4 sampled-end-to-end construction path — learning cost must keep
+    # scaling with the sample, not n — and every row's bit_identical
+    # flag asserts the sampled build answers exactly like the full one
+    "BENCH_build.json": (
+        "learn_speedup", "lower_is_worse",
+        {"batch", "sample_rate", "build_ms", "learn_ms", "place_ms",
+         "learn_speedup", "bit_identical"},
+    ),
 }
 # required TOP-LEVEL fields per trajectory file (beyond "rows"):
 # the kernel file must RECORD its small-batch crossover so the gate can
@@ -127,6 +138,10 @@ TOP_LEVEL_REQUIRED = {
     # the serving file must RECORD its worst tail so the trajectory
     # shows the serving p99 envelope at a glance
     "BENCH_serving.json": {"p99_us_max"},
+    # the build file must RECORD the best learn speedup plus the
+    # auto-tuner's pick and MDL score, so the self-tuning trajectory is
+    # visible at a glance
+    "BENCH_build.json": {"learn_speedup_max", "auto_method", "auto_mdl"},
 }
 REGRESSION_FACTOR = 1.25
 
@@ -172,7 +187,7 @@ def check_trajectories(recorded: dict, *, regressions: bool = True) -> list:
                                                            False):
                 errors.append(
                     f"{name}: row {i} ({row.get('batch')}) lookups not "
-                    "bit-identical between delta and refreeze")
+                    "bit-identical between the compared arms")
         old = recorded.get(name)
         if not regressions or not old:
             continue
@@ -284,6 +299,42 @@ def smoke() -> None:
     if not np.array_equal(np.asarray(res_h.payloads),
                           np.asarray(want.payloads)[:200]):
         errors.append("smoke: sharded grouped-host route diverged")
+
+    # tiny-shape sampled-build sanity: the §4 sampled-end-to-end build
+    # (mechanism learning on the sample only, refinalized bounds) must
+    # answer bit-identically to the full-data build, and a retrain
+    # under the epoch pipeline must keep the pinned snapshot's answers
+    # frozen until publish
+    samp = Index.build(keys, method="pgm", eps=64, gap_rho=0.2,
+                       sample_rate=0.05, rng=np.random.default_rng(11))
+    want_full = idx.lookup(q)
+    got_samp = samp.lookup(q)
+    if not (np.array_equal(np.asarray(want_full.payloads),
+                           np.asarray(got_samp.payloads))
+            and np.array_equal(np.asarray(want_full.found),
+                               np.asarray(got_samp.found))):
+        errors.append("smoke: sampled build diverged from the full build")
+    if samp.gapped.build_timings["n_fit"] >= len(keys) // 2:
+        errors.append("smoke: sampled build fit on the full key set "
+                      "(learning did not scale with the sample)")
+    from repro.serving import EpochPipeline as _EP
+    with _EP(samp) as sp:
+        pre = sp.lookup(q[:256])
+        fresh_keys = mids[-64:]
+        sp.ingest(fresh_keys, 40_000_000 + np.arange(64))
+        sp.retrain(sample_rate=0.05, rng=np.random.default_rng(12))
+        held = sp.lookup(q[:256])
+        if not (held.epoch == pre.epoch
+                and np.array_equal(np.asarray(held.payloads),
+                                   np.asarray(pre.payloads))):
+            errors.append("smoke: retrain leaked into the pinned "
+                          "snapshot before publish")
+        sp.publish()
+        post = sp.lookup(fresh_keys)
+        if not (post.found.all()
+                and np.array_equal(np.asarray(post.payloads),
+                                   40_000_000 + np.arange(64))):
+            errors.append("smoke: post-retrain publish lost ingested keys")
 
     # deterministic fault-injection sanity: snapshot-isolated serving,
     # injected-abort absorption, and crash recovery (snapshot + WAL-tail

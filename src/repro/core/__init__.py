@@ -11,10 +11,37 @@ IngestReport``, which delta-updates the resident device buffers and only
 refreezes past the contested-remainder / link-growth thresholds.  See
 ``handle.py`` for the full epoch-protocol and backend-capability docs.
 
+Self-tuning & retrain contract
+------------------------------
+Construction cost is a dial, not a constant:
+
+* **Sampled end-to-end builds** (§4): with ``sample_rate < 1.0`` every
+  learning stage of ``build_gapped`` — base fit, Eq.3 gap targets, the
+  step-3 refit — runs on the sampled (key, full-position) pairs, so
+  mechanism learning is O(n_s); only physical placement and the
+  ``_finalize_errors`` refinalize backstop stay O(n).  Answers are
+  BIT-IDENTICAL to a full-data build: ``connect_segments`` keeps
+  unsampled keys interpolated and the refinalized bounds restore the
+  bounded-window kernel contract exactly.  ``GappedArray
+  .build_timings`` / ``Index.learn_seconds`` record the split.
+* **MDL auto-tuning** (§3): ``Index.build(method="auto")`` runs
+  ``tuning.autotune`` — a (mechanism, eps, sample-size) grid fit on a
+  Thm.1-sized sample, scored by query-weighted ``mdl_report`` under the
+  lower-bounds space/error budget — and builds the winner (recorded on
+  ``index.tuned``).  Sharded builds tune PER SHARD.
+* **Online retrain**: ``Index.retrain(sample_rate=...)`` refits the
+  LIVE key set (occupied slots + chains, ``GappedArray.live_items``)
+  through the same sampled pipeline and swaps the state in with the
+  epoch bumped — old arrays are replaced, never mutated, so pinned
+  serving snapshots stay bit-identical throughout (see
+  ``repro.serving``).  ``Index.mdl()`` scores the live set, so the
+  report tracks post-ingest drift — the retrain trigger's input.
+
 Layout:
   mechanisms.py — RMI / FITing-Tree / PGM / B+Tree in one PLM framework
   mdl.py        — §3 MDL objective (L(M), L(D|M), reports)
   sampling.py   — §4 sampling + coverage patches + theory bounds
+  tuning.py     — §3-guided auto-tuner (grid scored by sampled MDL)
   gaps.py       — §5 result-driven gap insertion, gapped array, dynamics
   links.py      — CSR-native linking arrays (canonical chain storage)
   results.py    — typed LookupResult / IngestReport
@@ -43,7 +70,9 @@ from .sampling import (
     refinalize_bounds,
     sample_pairs,
     sample_size_bound,
+    spawn_rngs,
 )
+from .tuning import TunedChoice, autotune
 from .gaps import GappedArray, GapSnapshot, build_gapped, gap_positions
 
 __all__ = [
@@ -72,6 +101,9 @@ __all__ = [
     "refinalize_bounds",
     "sample_pairs",
     "sample_size_bound",
+    "spawn_rngs",
+    "TunedChoice",
+    "autotune",
     "GappedArray",
     "GapSnapshot",
     "build_gapped",

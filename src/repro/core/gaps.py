@@ -31,6 +31,7 @@ jnp reference and the Pallas lookup kernel consume (``repro.kernels``).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional, Tuple
 
 import numpy as np
@@ -156,6 +157,12 @@ class GappedArray:
     # None when no snapshot pins the current arrays
     _pins: object = dataclasses.field(default=None, repr=False,
                                       compare=False)
+    # build_gapped's cost breakdown {"learn_seconds", "place_seconds",
+    # "n_fit"}: learn = base fit + Eq.3 targets + step-3 refit (O(n_s)
+    # under sampling), place = physical placement + refinalize (O(n)
+    # always).  None on restored / hand-built arrays.
+    build_timings: object = dataclasses.field(default=None, repr=False,
+                                              compare=False)
 
     # ------------------------------------------------------------------
     @property
@@ -252,7 +259,7 @@ class GappedArray:
         qs = np.asarray(qs, np.float64)
         if bounded and getattr(self.mech, "plm", None) is not None:
             y_hat = self.mech.predict(qs)
-            j = _s.exponential_search(self.slot_key, qs, y_hat)
+            j, _probes = _s.exponential_search(self.slot_key, qs, y_hat)
         else:
             j = np.searchsorted(self.slot_key, qs, side="right") - 1
         out = np.full(qs.shape[0], -1, np.int64)
@@ -880,6 +887,24 @@ class GappedArray:
         return removed
 
     # ------------------------------------------------------------------
+    def live_items(self) -> Tuple[np.ndarray, np.ndarray]:
+        """The LIVE (key, payload) set, key-sorted: occupied slot keys
+        merged with every CSR chain key.  This is the authoritative
+        key set after any sequence of dynamic ops — retrain, shard
+        splits, and the live ``Index.mdl`` report all rebuild from it
+        (total-order invariant: keys are unique across slots+chains)."""
+        occ = np.asarray(self.occupied, bool)
+        k = np.asarray(self.slot_key, np.float64)[occ]
+        p = np.asarray(self.payload, np.int64)[occ]
+        _off, lk, lp = self.links.csr()
+        if lk.size:
+            k = np.concatenate([k, np.asarray(lk, np.float64)])
+            p = np.concatenate([p, np.asarray(lp, np.int64)])
+            order = np.argsort(k, kind="stable")
+            k, p = k[order], p[order]
+        return k, p
+
+    # ------------------------------------------------------------------
     # frozen export for the jnp/Pallas query path
     # ------------------------------------------------------------------
     def export_csr_links(self, max_chain: Optional[int] = None):
@@ -999,6 +1024,17 @@ def build_gapped(
     near-linear per segment, a *tighter* eps here costs few segments but
     sharply reduces placement collisions (shorter linking arrays) — see
     LearnedIndex.build's adaptive default.
+
+    With ``sample_rate < 1.0`` the ENTIRE learning pipeline runs on the
+    sampled (key, full-data position) pairs — base fit, Eq.3 targets,
+    and the step-3 refit are all O(n_s); only physical placement and the
+    refinalize backstop stay O(n).  Exactness is preserved anyway: the
+    step-3 mechanism gets ``connect_segments`` (unsampled keys
+    interpolate, never extrapolate) and the final ``_finalize_errors``
+    recomputes exact per-segment bounds against the PHYSICAL slots of
+    the full key set, so the bounded-window kernel contract is identical
+    to a full-data build.  ``build_timings`` on the returned array
+    records the learn/place split.
     """
     x = np.asarray(x, np.float64)
     n = x.shape[0]
@@ -1006,26 +1042,37 @@ def build_gapped(
     if payloads is None:
         payloads = np.arange(n, dtype=np.int64)
 
-    # 1) base mechanism (optionally on a sample)
+    t0 = time.perf_counter()
     if sample_rate < 1.0:
-        base = _sampling.fit_sampled(
-            mechanism_factory, x, y, rate=sample_rate, rng=rng, refinalize=False
-        )
+        # ONE sample drives the whole learning pipeline (base fit, Eq.3
+        # targets, step-3 refit): ys are FULL-data positions, endpoints
+        # forced, so the gapped domain [0, yg_s[-1]] covers every key
+        xs, ys = _sampling.sample_pairs(x, y, rate=sample_rate, rng=rng)
     else:
-        base = mechanism_factory()
-        base.fit(x, y)
+        xs, ys = x, y
+
+    # 1) base mechanism on the (possibly sampled) pairs
+    base = mechanism_factory()
+    base.fit(xs, ys)
     base_plm = getattr(base, "plm", None)
     if base_plm is None:
         raise ValueError("gap insertion needs a PLM-exporting mechanism")
+    if sample_rate < 1.0 and base.name in ("pgm", "fiting"):
+        _sampling.connect_segments(base_plm)
 
-    # 2) result-driven target positions (Eq. 3)
-    yg = gap_positions(x, y, base_plm, rho)
+    # 2) result-driven target positions (Eq. 3) — O(n_s) under sampling
+    yg = gap_positions(xs, ys, base_plm, rho)
 
-    # 3) re-learn on the gap-inserted data
+    # 3) re-learn on the gap-inserted data — O(n_s) under sampling
     mech = (refit_factory or mechanism_factory)()
-    mech.fit(x, yg)
+    mech.fit(xs, yg)
+    if sample_rate < 1.0 and mech.name in ("pgm", "fiting") \
+            and getattr(mech, "plm", None) is not None:
+        _sampling.connect_segments(mech.plm)
+    learn_seconds = time.perf_counter() - t0
 
-    # 4) physical placement at re-learned predictions
+    # 4) physical placement at re-learned predictions — O(n) always
+    t1 = time.perf_counter()
     m = int(np.ceil(yg[-1])) + 2
     pred = np.clip(np.rint(mech.predict(x)), 0, m - 1).astype(np.int64)
     slot_key, occupied, payload, links = _place_keys(x, payloads, pred, m)
@@ -1043,4 +1090,9 @@ def build_gapped(
     if refinalize and getattr(mech, "plm", None) is not None:
         slot_of_key = np.searchsorted(ga.slot_key, x, side="right") - 1
         _finalize_errors(mech.plm, x, slot_of_key.astype(np.float64))
+    ga.build_timings = {
+        "learn_seconds": learn_seconds,
+        "place_seconds": time.perf_counter() - t1,
+        "n_fit": int(xs.shape[0]),
+    }
     return ga

@@ -134,6 +134,14 @@ class Index:
     sample_rate: float = 1.0
     gap_rho: float = 0.0
     build_seconds: float = 0.0
+    # mechanism-learning share of build_seconds (base fit + Eq.3 +
+    # step-3 refit — O(n_s) under sampling; placement excluded)
+    learn_seconds: float = 0.0
+    # mechanism kwargs the build used — retrain() replays them
+    mech_kwargs: dict = dataclasses.field(default_factory=dict)
+    # the auto-tuner's TunedChoice when built with method="auto"
+    tuned: object = dataclasses.field(default=None, repr=False,
+                                      compare=False)
     # --- device-sync policy knobs -------------------------------------
     refreeze_contested_frac: float = 0.25
     refreeze_link_growth: float = 0.10
@@ -174,7 +182,8 @@ class Index:
                                              repr=False, compare=False)
     stats: dict = dataclasses.field(default_factory=lambda: {
         "refreezes": 0, "delta_updates": 0, "delta_elems": 0,
-        "lookups": 0, "ingests": 0, "bound_refreshes": 0})
+        "lookups": 0, "ingests": 0, "bound_refreshes": 0,
+        "retrains": 0, "search_probes": 0})
 
     # ------------------------------------------------------------------
     @classmethod
@@ -193,7 +202,14 @@ class Index:
         per key (default: the key's position, ``arange(n)``) — gapped
         builds only.  ``shards=`` is the escape hatch into the
         range-partitioned ``repro.dist.ShardedIndex`` (same call
-        surface, per-shard gap-inserted builds + learned router)."""
+        surface, per-shard gap-inserted builds + learned router).
+
+        ``method="auto"`` runs the §3 MDL auto-tuner
+        (``core.tuning.autotune``) over a (mechanism, eps, sample-size)
+        grid on a sample of the keys and builds the winner; the choice
+        is recorded on ``index.tuned``.  The defaults ``sample_rate=1.0``
+        mean "let the tuner pick" under auto; pass an explicit rate to
+        pin it."""
         if shards is not None:
             from ..dist.sharded import ShardedIndex
             return ShardedIndex.build(
@@ -213,6 +229,19 @@ class Index:
                 raise ValueError("explicit payloads need a gapped build "
                                  "(gap_rho > 0); static builds store "
                                  "positions")
+        tuned = None
+        if method == "auto":
+            from . import tuning as _tuning
+            tuned = _tuning.autotune(
+                keys, queries=mech_kwargs.pop("queries", None),
+                dynamic=gap_rho > 0.0, rng=rng,
+                **{k: mech_kwargs.pop(k) for k in
+                   ("alpha", "size_budget_bytes", "max_err_budget")
+                   if k in mech_kwargs})
+            method = tuned.method
+            mech_kwargs = dict(tuned.mech_kwargs, **mech_kwargs)
+            if sample_rate >= 1.0:  # default sentinel: tuner's pick
+                sample_rate = tuned.sample_rate
         factory = _mechanism_factory(method, **mech_kwargs)
         t0 = time.perf_counter()
         if gap_rho > 0.0:
@@ -239,6 +268,7 @@ class Index:
                 mech = factory()
                 mech.fit(keys, np.arange(keys.shape[0], dtype=np.float64))
         dt = time.perf_counter() - t0
+        timings = getattr(gapped, "build_timings", None) or {}
         return cls(
             keys=keys,
             mech=mech,
@@ -247,6 +277,9 @@ class Index:
             sample_rate=sample_rate,
             gap_rho=gap_rho,
             build_seconds=dt,
+            learn_seconds=float(timings.get("learn_seconds", dt)),
+            mech_kwargs=dict(mech_kwargs),
+            tuned=tuned,
         )
 
     # ------------------------------------------------------------------
@@ -273,6 +306,9 @@ class Index:
             sample_rate=self.sample_rate,
             gap_rho=self.gap_rho,
             build_seconds=self.build_seconds,
+            learn_seconds=self.learn_seconds,
+            mech_kwargs=dict(self.mech_kwargs),
+            tuned=self.tuned,
             refreeze_contested_frac=self.refreeze_contested_frac,
             refreeze_link_growth=self.refreeze_link_growth,
             min_device_batch=self.min_device_batch,
@@ -542,8 +578,9 @@ class Index:
                                                              full=True)
                 return host_lookup_result(pay, slots, found, spec.name,
                                           self.epoch)
-            pos = _sampling.exponential_search(self.keys, queries,
-                                              self.predict(queries))
+            pos, probes = _sampling.exponential_search(
+                self.keys, queries, self.predict(queries))
+            self.stats["search_probes"] += probes
             found = self.keys[pos] == queries
             pay = np.where(found, pos, -1)
             return host_lookup_result(pay, pos, found, spec.name, self.epoch)
@@ -1119,12 +1156,83 @@ class Index:
         return idx, meta
 
     # ------------------------------------------------------------------
+    # self-tuning: online retrain (the ROADMAP-4 dial)
+    # ------------------------------------------------------------------
+    def retrain(self, sample_rate: Optional[float] = None, *,
+                gap_rho: Optional[float] = None, rng=None,
+                method: Optional[str] = None, **mech_kwargs) -> dict:
+        """Sampled refit of the LIVE gapped state — the paper's §4
+        construction cost applied online.
+
+        Extracts the live (key, payload) set (occupied slots + CSR
+        chain keys via ``GappedArray.live_items``), rebuilds the gapped
+        array through ``build_gapped`` with mechanism learning on a
+        sample (O(n_s)), and swaps it in with the epoch bumped past the
+        old one.  The OLD arrays are replaced, never mutated, so any
+        outstanding ``GapSnapshot`` pin (``serving.EpochPipeline``)
+        keeps serving its epoch bit-identically throughout; the device
+        cache is dropped and refreezes lazily at the new epoch.
+        Defaults replay the build's settings (``method`` / mech kwargs /
+        ``gap_rho``); ``sample_rate`` defaults to the build's rate.
+        Returns a record dict (n / seconds / learn_seconds / epoch /
+        chains before-after)."""
+        self._need_gapped()
+        t0 = time.perf_counter()
+        old_epoch = self.epoch
+        chains_before = self.gapped.link_stats()
+        keys, payloads = self.gapped.live_items()
+        method = method or self.method
+        rate = self.sample_rate if sample_rate is None else float(sample_rate)
+        rho = self.gap_rho if gap_rho is None else float(gap_rho)
+        kwargs = dict(self.mech_kwargs, **mech_kwargs) if method == \
+            self.method else dict(mech_kwargs)
+        new = Index.build(keys, method=method, sample_rate=rate,
+                          gap_rho=rho, rng=rng, payloads=payloads,
+                          **kwargs)
+        # swap host state wholesale; epoch stays strictly monotone
+        new.gapped.version = old_epoch + 1
+        self.keys = new.keys
+        self.mech = new.mech
+        self.method = new.method
+        self.gapped = new.gapped
+        self.sample_rate = rate
+        self.gap_rho = rho
+        self.mech_kwargs = new.mech_kwargs
+        self.tuned = new.tuned if new.tuned is not None else self.tuned
+        # device state is an epoch-keyed cache of the REPLACED arrays
+        self._engine = None
+        self._mirror = None
+        self._device_epoch = -1
+        self._keycap_cache = None
+        self._pending_touch = []
+        self.stats["retrains"] += 1
+        return {
+            "n": int(keys.shape[0]),
+            "seconds": time.perf_counter() - t0,
+            "learn_seconds": float(new.learn_seconds),
+            "sample_rate": rate,
+            "epoch": int(self.epoch),
+            "chains_before": chains_before,
+            "chains_after": self.gapped.link_stats(),
+        }
+
+    # ------------------------------------------------------------------
     def mdl(self, alpha: float = 1.0) -> _mdl.MDLReport:
-        """Evaluate under the §3 MDL framework (positions = logical y)."""
-        y = np.arange(self.keys.shape[0], dtype=np.float64)
+        """Evaluate under the §3 MDL framework (positions = logical y).
+
+        Gapped builds are scored on the LIVE key set — occupied slot
+        keys plus CSR chain keys from ``GappedArray.live_items()`` —
+        against their physical slots, so keys added by ``ingest`` enter
+        ``L(D|M)`` / ``max_abs_err`` and the report tracks drift (the
+        retrain trigger's input).  A chained key's position is its chain
+        owner's slot: exactly where the search lands before the chain
+        bisect, i.e. the true correction distance."""
         if self.gapped is not None:
-            # positions are physical slots in the gapped layout
-            y = np.searchsorted(self.gapped.slot_key, self.keys,
-                                side="right") - 1
-        return _mdl.mdl_report(self.method, self.mech, self.keys, y,
+            keys, _ = self.gapped.live_items()
+            y = (np.searchsorted(self.gapped.slot_key, keys,
+                                 side="right") - 1).astype(np.float64)
+        else:
+            keys = self.keys
+            y = np.arange(keys.shape[0], dtype=np.float64)
+        return _mdl.mdl_report(self.method, self.mech, keys, y,
                                alpha=alpha)

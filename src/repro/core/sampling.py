@@ -31,6 +31,7 @@ from .mechanisms import PiecewiseLinearModel, _finalize_errors
 
 __all__ = [
     "sample_pairs",
+    "spawn_rngs",
     "connect_segments",
     "refinalize_bounds",
     "exponential_search",
@@ -38,6 +39,34 @@ __all__ = [
     "sample_size_bound",
     "fit_sampled",
 ]
+
+# fallback entropy for rng=None callers: a module-level SeedSequence
+# spawner, so every anonymous sample draws an INDEPENDENT stream
+# (deterministic per process, but never the same stream twice — a fixed
+# default_rng(0) here made every per-shard build and every retrain
+# sample identically, hiding sampling variance entirely)
+_FALLBACK_SEEDS = np.random.SeedSequence(0x5A3D1E)
+
+
+def _default_rng(rng: Optional[np.random.Generator]) -> np.random.Generator:
+    if rng is not None:
+        return rng
+    return np.random.default_rng(_FALLBACK_SEEDS.spawn(1)[0])
+
+
+def spawn_rngs(rng: Optional[np.random.Generator],
+               n: int) -> list:
+    """``n`` independent child generators derived from ``rng``.
+
+    With an explicit ``rng`` the children are seeded by draws from it
+    (deterministic given the parent's state, distinct per child — the
+    per-shard / per-split threading contract).  With ``rng=None`` the
+    children come from the module fallback pool, each independent."""
+    if rng is None:
+        return [np.random.default_rng(s) for s in _FALLBACK_SEEDS.spawn(n)]
+    seeds = rng.integers(0, 2 ** 63 - 1, size=(n, 4))
+    return [np.random.default_rng(np.random.SeedSequence(list(map(int, s))))
+            for s in seeds]
 
 
 def sample_pairs(
@@ -47,7 +76,7 @@ def sample_pairs(
     rng: Optional[np.random.Generator] = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Uniform sample of (key, full-data position) pairs, endpoints forced."""
-    rng = rng or np.random.default_rng(0)
+    rng = _default_rng(rng)
     n = x.shape[0]
     if y is None:
         y = np.arange(n, dtype=np.float64)
@@ -96,32 +125,40 @@ def refinalize_bounds(
 
 def exponential_search(
     sorted_keys: np.ndarray, queries: np.ndarray, y_hat: np.ndarray
-) -> np.ndarray:
+) -> Tuple[np.ndarray, int]:
     """Paper-faithful correction step: exponential search around y_hat.
 
     Doubles the radius around the (clipped) prediction until the query is
     bracketed, then binary-searches the bracket.  Vectorized over queries;
-    returns positions (index of the exact match, or of the predecessor).
-    Also returns total probe count via the second element for benchmarks.
+    returns ``(positions, probes)`` — positions are the index of the exact
+    match (or of the predecessor), probes is the TOTAL key-comparison
+    count across the batch (2 per doubling round per unbracketed query +
+    1 per bisect round per unresolved query), the correction-cost figure
+    the benchmarks surface.
     """
     n = sorted_keys.shape[0]
     q = np.asarray(queries)
     pos = np.clip(np.rint(y_hat), 0, n - 1).astype(np.int64)
     radius = np.ones_like(pos)
+    probes = 0
     # bracket: grow radius until sorted_keys[pos-r] <= q <= sorted_keys[pos+r]
+    pending = pos.shape[0]
     for _ in range(64):  # 2^64 covers any n
+        probes += 2 * pending  # both bracket ends are probed per round
         lo = np.maximum(pos - radius, 0)
         hi = np.minimum(pos + radius, n - 1)
         ok = (sorted_keys[lo] <= q) & (q <= sorted_keys[hi])
         ok |= (lo == 0) & (q <= sorted_keys[hi])
         ok |= (hi == n - 1) & (sorted_keys[lo] <= q)
-        if bool(np.all(ok)):
+        pending = int(np.count_nonzero(~ok))
+        if pending == 0:
             break
         radius = np.where(ok, radius, radius * 2)
     lo = np.maximum(pos - radius, 0)
     hi = np.minimum(pos + radius, n - 1)
     # binary search within [lo, hi] for predecessor position of q
     for _ in range(int(np.ceil(np.log2(max(n, 2)))) + 2):
+        probes += int(np.count_nonzero(lo < hi))
         mid = (lo + hi + 1) // 2
         go_right = sorted_keys[mid] <= q
         lo = np.where(go_right, mid, lo)
@@ -129,11 +166,11 @@ def exponential_search(
         done = lo >= hi
         if bool(np.all(done)):
             break
-    return lo
+    return lo, int(probes)
 
 
 def hoeffding_bound(max_err: float, n_s: int, delta: float = 0.05) -> float:
-    """Prop. 1: |L(D_s|M) - L(D|M)| <= log(E)/sqrt(2 n_s) * sqrt(log(2/delta))."""
+    """Prop. 1: |L(D_s|M) - L(D|M)| <= log2(E)/sqrt(2 n_s) * sqrt(log(2/delta))."""
     return float(
         np.log2(max(max_err, 2.0)) / np.sqrt(2.0 * n_s) * np.sqrt(np.log(2.0 / delta))
     )

@@ -58,6 +58,7 @@ from typing import List, Optional
 
 import numpy as np
 
+from ..core import sampling as _sampling
 from ..core.handle import Index
 from ..core.results import IngestReport, LookupResult
 
@@ -202,8 +203,8 @@ class ShardedIndex:
         self._fan = None
         self._fan_failed_tag: Optional[tuple] = None
         self.stats = {"lookups": 0, "ingests": 0, "splits": 0,
-                      "fanout_lookups": 0, "grouped_lookups": 0,
-                      "rebalance_seconds": 0.0}
+                      "retrains": 0, "fanout_lookups": 0,
+                      "grouped_lookups": 0, "rebalance_seconds": 0.0}
 
     # ------------------------------------------------------------------
     @classmethod
@@ -221,6 +222,13 @@ class ShardedIndex:
         stores — this is what makes the bit-identity contract hold.
         ``gap_rho`` must be positive: shards serve the dynamic gapped
         path (a static sharded build has nothing to rebalance).
+
+        Each shard builds with its OWN child generator spawned from
+        ``rng`` (``core.sampling.spawn_rngs``), so sampled per-shard
+        builds draw independent streams — one shared generator would
+        sample every shard identically.  ``method="auto"`` runs the
+        MDL auto-tuner PER SHARD (each shard's key distribution picks
+        its own mechanism/budget — ``core.tuning``).
         """
         keys = np.asarray(keys, np.float64)
         s = int(shards)
@@ -245,10 +253,11 @@ class ShardedIndex:
                 raise ValueError("payloads must match keys 1:1")
         cuts = np.round(np.linspace(0, n, s + 1)).astype(np.int64)
         handles = []
-        for a, b in zip(cuts[:-1], cuts[1:]):
+        shard_rngs = _sampling.spawn_rngs(rng, s)
+        for (a, b), srng in zip(zip(cuts[:-1], cuts[1:]), shard_rngs):
             sh = Index.build(keys[a:b], method=method,
                              sample_rate=sample_rate, gap_rho=gap_rho,
-                             rng=rng, payloads=payloads[a:b],
+                             rng=srng, payloads=payloads[a:b],
                              **mech_kwargs)
             sh.min_device_batch = min_device_batch
             sh.fused_ingest_enabled = fused_ingest_enabled
@@ -473,43 +482,82 @@ class ShardedIndex:
                     cand, cand_size = s, float(sizes[s])
         return cand
 
+    def _retrain_candidate(self) -> Optional[int]:
+        """A shard past the chain-depth watermark that is too SMALL to
+        split (below ``min_split_keys``): splitting can't help it, but
+        a sampled retrain flattens its chains in O(n_s) learning +
+        O(n_shard) placement.  Deepest chain wins."""
+        cand, cand_depth = None, -1
+        for s, sh in enumerate(self.shards):
+            ga = sh.gapped
+            if ga.n_keys >= max(self.min_split_keys, 4):
+                continue  # big enough to split — the split path owns it
+            depth = ga.links.max_chain
+            if depth > self.split_chain_depth and depth > cand_depth:
+                cand, cand_depth = s, depth
+        return cand
+
     def maybe_rebalance(self,
                         force_shard: Optional[int] = None) -> Optional[dict]:
         """Split the most-overloaded shard if any is past the
         occupancy/chain-depth watermark (or split ``force_shard``
-        unconditionally).  Returns the split record or None."""
+        unconditionally).  When nothing is splittable, a shard past the
+        chain-depth watermark but below the split size floor gets a
+        sampled RETRAIN instead (same trigger machinery, cheaper
+        remedy).  Returns the split/retrain record or None."""
         s = force_shard if force_shard is not None else self._split_candidate()
-        if s is None:
-            return None
-        return self.split_shard(int(s))
+        if s is not None:
+            return self.split_shard(int(s))
+        if force_shard is None:
+            r = self._retrain_candidate()
+            if r is not None:
+                return self.retrain(shard=int(r))
+        return None
 
-    def split_shard(self, s: int) -> dict:
+    def retrain(self, shard: Optional[int] = None,
+                sample_rate: Optional[float] = None,
+                rng: Optional[np.random.Generator] = None) -> dict:
+        """Sampled refit of one shard (or every shard when ``shard`` is
+        None) via ``Index.retrain`` — independent child generators per
+        shard, epoch bumped through ``_mutations`` so pinned
+        ``ShardedSnapshot``s stay isolated (shard arrays are replaced,
+        never mutated).  Returns an aggregate record."""
+        t0 = time.perf_counter()
+        ids = list(range(len(self.shards))) if shard is None else [int(shard)]
+        rngs = _sampling.spawn_rngs(rng, len(ids))
+        recs = []
+        for s, srng in zip(ids, rngs):
+            recs.append((s, self.shards[s].retrain(
+                sample_rate=sample_rate, rng=srng)))
+        self._mutations += 1
+        dt = time.perf_counter() - t0
+        self.stats["retrains"] += 1
+        self.stats["rebalance_seconds"] += dt
+        return {"kind": "retrain", "shards": [s for s, _ in recs],
+                "seconds": dt, "per_shard": recs}
+
+    def split_shard(self, s: int,
+                    rng: Optional[np.random.Generator] = None) -> dict:
         """Split shard ``s`` at its median live key: extract the live
-        (key, payload) set from the gapped slots + CSR chains, rebuild
-        two gap-inserted halves with the same mechanism settings, splice
-        them in, and patch the router boundary."""
+        (key, payload) set (``GappedArray.live_items``), rebuild two
+        gap-inserted halves with the same mechanism settings (each with
+        its own spawned generator), splice them in, and patch the
+        router boundary."""
         sh = self.shards[s]
         ga = sh.gapped
         t0 = time.perf_counter()
-        occ = np.asarray(ga.occupied, bool)
-        k = np.asarray(ga.slot_key, np.float64)[occ]
-        p = np.asarray(ga.payload, np.int64)[occ]
-        _off, lk, lp = ga.export_csr_links()
-        if lk.size:
-            k = np.concatenate([k, np.asarray(lk, np.float64)])
-            p = np.concatenate([p, np.asarray(lp, np.int64)])
-            order = np.argsort(k, kind="stable")
-            k, p = k[order], p[order]
+        k, p = ga.live_items()
         n = k.shape[0]
         if n < 4:
             raise ValueError(f"shard {s} too small to split ({n} keys)")
         mid = n // 2
         halves = []
-        for a, b in ((0, mid), (mid, n)):
+        half_rngs = _sampling.spawn_rngs(rng, 2)
+        for (a, b), hrng in zip(((0, mid), (mid, n)), half_rngs):
             h = Index.build(k[a:b], method=self.method,
                             sample_rate=self.sample_rate,
                             gap_rho=self.gap_rho, payloads=p[a:b],
-                            **self.mech_kwargs)
+                            rng=hrng, **self.mech_kwargs)
             h.min_device_batch = sh.min_device_batch
             h.fused_ingest_enabled = sh.fused_ingest_enabled
             halves.append(h)

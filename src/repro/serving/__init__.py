@@ -37,6 +37,18 @@ The serving stack composes four layers, each independently usable:
   restored after).  ``robustness.InjectedCrash`` always propagates —
   retry loops must not absorb process death.
 
+* **Self-tuning retrain** (``EpochPipeline.retrain``): the live index
+  can be REBUILT — a §4 sampled refit of the live key set
+  (``Index.retrain`` / ``ShardedIndex.retrain``, mechanism learning
+  O(n_s)) — behind the pinned snapshot.  **Trigger policy**: callers
+  decide (watch ``Index.mdl()`` drift or chain growth); the sharded
+  rebalance watermark also retrains automatically when a shard is past
+  the chain-depth watermark but too small to split.  **Snapshot
+  guarantee**: retrain replaces the live arrays, never mutates them,
+  so the pinned snapshot serves its epoch bit-identically for the
+  whole rebuild; the retrained epoch (strictly monotone) serves only
+  after ``publish()``.
+
 * **Fault discipline** (``repro.robustness``): every layer above
   accepts a deterministic ``FaultInjector`` (site-keyed crash / abort /
   slow / torn-tail schedules) and an ``InvariantAuditor`` (slot + chain

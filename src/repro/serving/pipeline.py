@@ -154,7 +154,7 @@ class EpochPipeline:
         self._ingests_since_publish = 0
         self.stats = {"publishes": 0, "snapshot_lookups": 0,
                       "live_lookups": 0, "ingests": 0, "wal_records": 0,
-                      "max_lag": 0, "audits": 0}
+                      "max_lag": 0, "audits": 0, "retrains": 0}
 
     # ------------------------------------------------------------------
     @property
@@ -211,6 +211,20 @@ class EpochPipeline:
                 and self._ingests_since_publish >= self.publish_every):
             self.publish()
         return rep
+
+    def retrain(self, sample_rate: Optional[float] = None,
+                **kwargs) -> dict:
+        """Sampled refit of the LIVE index (``Index.retrain`` /
+        ``ShardedIndex.retrain``) behind the snapshot: the retrain
+        REPLACES the live arrays (never mutates them), so the pinned
+        snapshot keeps serving its epoch bit-identically for the whole
+        rebuild — epoch N+1 here is a fresh mechanism + layout instead
+        of an ingest delta, the "refreeze is a dial" path.  Call
+        ``publish()`` to start serving the retrained epoch."""
+        rec = self.index.retrain(sample_rate=sample_rate, **kwargs)
+        self.stats["retrains"] = self.stats.get("retrains", 0) + 1
+        self.stats["max_lag"] = max(self.stats["max_lag"], self.lag)
+        return rec
 
     def publish(self) -> int:
         """Pin epoch N+1 completely, then swap the served reference in

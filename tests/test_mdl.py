@@ -55,3 +55,24 @@ def test_learned_index_facade_mdl(small_keys):
     rep = idx.mdl(alpha=2.0)
     assert rep.mae >= 0 and rep.l_data_given_model >= 1.0
     assert rep.max_abs_err <= 128 + 1e-6
+
+
+def test_mdl_tracks_live_state_after_ingest():
+    """Regression: ``Index.mdl()`` must score the LIVE key set (slots +
+    chains), not the stale build-time snapshot — keys appended past the
+    trained domain chain onto the tail with growing prediction error,
+    and the report has to see that drift (it is the retrain trigger)."""
+    from repro.core import Index
+
+    x = make_keys("iot", 20_000, seed=3)
+    idx = Index.build(x, method="pgm", eps=64, gap_rho=0.15)
+    before = idx.mdl()
+    step = float(np.mean(np.diff(x)))
+    tail = x[-1] + step * 10.0 * (1.0 + np.arange(400))
+    idx.ingest(tail, 1_000_000 + np.arange(400))
+    after = idx.mdl()
+    # the appended keys all chain onto the last slot while the model
+    # extrapolates past it: correction cost and max error must grow
+    assert after.max_abs_err > before.max_abs_err
+    assert after.l_data_given_model > before.l_data_given_model
+    assert after.mdl != before.mdl

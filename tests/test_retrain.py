@@ -1,0 +1,168 @@
+"""Online retrain (§4 applied live) + the sampled-build bit-identity
+claim: a sampled-then-refinalized build must ANSWER like the full
+build, across mechanisms, key widths, and through ``retrain()`` under
+the epoch pipeline.  The randomized hypothesis property over the same
+checker lives in test_retrain_props.py (optional dep)."""
+
+import numpy as np
+import pytest
+
+from conftest import make_keys
+from repro.core import Index
+from repro.serving import EpochPipeline
+
+
+def _int_keys(seed: int, n: int, wide: bool) -> np.ndarray:
+    """Sorted unique integer keys; ``wide`` keys exceed 2**24 (the f32
+    integer-exactness edge the kernels key-split on), narrow stay under."""
+    rng = np.random.default_rng(seed)
+    hi = 2 ** 40 if wide else 2 ** 22
+    k = np.unique(rng.integers(0, hi, int(n * 1.3), dtype=np.int64))
+    k = k[:n].astype(np.float64)
+    assert (k.max() > 2 ** 24) == wide
+    return k
+
+
+def _queries(keys: np.ndarray, seed: int):
+    """Present keys + guaranteed-absent midpoints + out-of-range probes."""
+    rng = np.random.default_rng(seed)
+    present = rng.choice(keys, min(2000, len(keys)))
+    absent = keys[:-1] + np.diff(keys) / 2.0
+    absent = np.setdiff1d(absent, keys)[:500]
+    edges = np.array([keys[0] - 7.0, keys[-1] + 7.0])
+    return np.concatenate([present, absent, edges])
+
+
+def _assert_same_answers(a, b):
+    assert np.array_equal(np.asarray(a.found), np.asarray(b.found))
+    assert np.array_equal(np.asarray(a.payloads), np.asarray(b.payloads))
+
+
+def check_sampled_build_identity_through_retrain(seed, method, wide, rate):
+    """The shared checker (§4 + §5 end-to-end): sampled mechanism
+    learning + connect_segments + refinalized bounds answers
+    bit-identically to the full-data build — and stays exact through a
+    sampled retrain of the live state under the epoch pipeline's pinned
+    snapshot.  Driven deterministically below and by hypothesis in
+    test_retrain_props.py."""
+    keys = _int_keys(seed, 4000, wide)
+    q = _queries(keys, seed + 1)
+    truth = np.searchsorted(keys, q)
+    truth_found = np.isin(q, keys)
+
+    full = Index.build(keys, method=method, eps=32.0, gap_rho=0.2)
+    samp = Index.build(keys, method=method, eps=32.0, gap_rho=0.2,
+                       sample_rate=rate, rng=np.random.default_rng(seed))
+    rf, rs = full.lookup(q), samp.lookup(q)
+    _assert_same_answers(rf, rs)
+    assert np.array_equal(np.asarray(rf.found), truth_found)
+    assert np.array_equal(np.asarray(rf.payloads)[truth_found],
+                          truth[truth_found])
+    # learning really ran on the sample, not the full data
+    assert samp.gapped.build_timings["n_fit"] < len(keys) // 2
+
+    # retrain the LIVE state behind a pinned snapshot: fresh keys go in,
+    # the held snapshot must not move, publish serves everything
+    pipe = EpochPipeline(samp)
+    pre = pipe.lookup(q)
+    fresh = np.setdiff1d(keys[:-1] + np.diff(keys) / 4.0, keys)[-64:]
+    pipe.ingest(fresh, 40_000_000 + np.arange(len(fresh)))
+    pipe.retrain(sample_rate=rate, rng=np.random.default_rng(seed + 2))
+    held = pipe.lookup(q)
+    assert held.epoch == pre.epoch
+    _assert_same_answers(pre, held)
+    pipe.publish()
+    post = pipe.lookup(q)
+    _assert_same_answers(pre, post)
+    got_fresh = pipe.lookup(fresh)
+    assert np.asarray(got_fresh.found).all()
+    assert np.array_equal(np.asarray(got_fresh.payloads),
+                          40_000_000 + np.arange(len(fresh)))
+
+
+@pytest.mark.parametrize("method", ["pgm", "fiting"])
+@pytest.mark.parametrize("wide", [False, True])
+def test_sampled_build_bit_identical_through_retrain(method, wide):
+    check_sampled_build_identity_through_retrain(
+        seed=17, method=method, wide=wide, rate=0.05)
+
+
+def test_retrain_bumps_epoch_and_flattens_chains():
+    """Tail-append ingest piles keys onto one chain; a sampled retrain
+    relearns the layout and collapses it (the remedy mdl() drift asks
+    for), with the epoch strictly monotone."""
+    x = make_keys("iot", 20_000, seed=0)
+    idx = Index.build(x, method="pgm", eps=64, gap_rho=0.15,
+                      rng=np.random.default_rng(0))
+    step = float(np.mean(np.diff(x)))
+    tail = x[-1] + step * (1.0 + np.arange(600))
+    idx.ingest(tail, 1_000_000 + np.arange(600))
+    e0 = idx.epoch
+    deep = idx.gapped.links.max_chain
+    rec = idx.retrain(sample_rate=0.05, rng=np.random.default_rng(1))
+    assert idx.epoch == e0 + 1 == rec["epoch"]
+    assert rec["n"] == len(x) + 600
+    assert idx.gapped.links.max_chain < deep
+    assert idx.stats["retrains"] == 1
+    # every live key (original + ingested) still answers exactly
+    r = idx.lookup(np.concatenate([x, tail]))
+    assert np.asarray(r.found).all()
+    want = np.concatenate([np.arange(len(x)), 1_000_000 + np.arange(600)])
+    assert np.array_equal(np.asarray(r.payloads), want)
+
+
+def test_retrain_can_switch_mechanism():
+    x = make_keys("weblogs", 10_000, seed=2)
+    idx = Index.build(x, method="pgm", eps=64, gap_rho=0.15)
+    idx.retrain(method="fiting", eps=128.0,
+                rng=np.random.default_rng(3))
+    assert idx.method == "fiting"
+    r = idx.lookup(x[::7])
+    assert np.asarray(r.found).all()
+    assert np.array_equal(np.asarray(r.payloads),
+                          np.searchsorted(x, x[::7]))
+
+
+def test_retrain_rejects_static_index():
+    x = make_keys("iot", 5_000, seed=4)
+    idx = Index.build(x, method="pgm", eps=64)  # gap_rho=0: static
+    with pytest.raises(NotImplementedError):
+        idx.retrain()
+
+
+def test_sharded_retrain_all_shards_preserves_answers():
+    x = make_keys("iot", 24_000, seed=5)
+    sharded = Index.build(x, shards=3, method="pgm", eps=64, gap_rho=0.15,
+                          rng=np.random.default_rng(5))
+    q = np.random.default_rng(6).choice(x, 4000)
+    before = sharded.lookup(q)
+    e0 = sharded.epoch
+    rec = sharded.retrain(sample_rate=0.1, rng=np.random.default_rng(7))
+    assert rec["kind"] == "retrain" and len(rec["per_shard"]) == 3
+    assert sharded.epoch > e0
+    after = sharded.lookup(q)
+    _assert_same_answers(before, after)
+    assert sharded.stats["retrains"] == 1
+
+
+def test_sharded_watermark_retrains_unsplittable_shard():
+    """A shard past the chain-depth watermark but below the split size
+    floor gets a sampled retrain from ``maybe_rebalance`` — splitting
+    is not an available remedy there."""
+    x = make_keys("iot", 6_000, seed=8)
+    sharded = Index.build(x, shards=2, method="pgm", eps=64, gap_rho=0.15,
+                          rng=np.random.default_rng(8))
+    sharded.min_split_keys = 10 ** 9       # nothing is ever splittable
+    sharded.split_chain_depth = 4
+    # chain a burst past shard 1's trained domain to exceed the watermark
+    step = float(np.mean(np.diff(x)))
+    tail = x[-1] + step * (1.0 + np.arange(300))
+    sharded.ingest(tail, 2_000_000 + np.arange(300))
+    assert any(sh.gapped.links.max_chain > 4 for sh in sharded.shards)
+    rec = sharded.maybe_rebalance()
+    assert rec is not None and rec["kind"] == "retrain"
+    assert sharded.stats["splits"] == 0
+    r = sharded.lookup(tail)
+    assert np.asarray(r.found).all()
+    assert np.array_equal(np.asarray(r.payloads),
+                          2_000_000 + np.arange(300))

@@ -1,0 +1,33 @@
+"""Hypothesis property for sampled construction + online retrain
+(optional dep — the whole module skips when hypothesis is absent; the
+deterministic companions in test_retrain.py always run, including a
+fixed-seed sweep of the same bit-identity claim).
+
+Property (§4 + §5 end-to-end): a sampled-then-refinalized build —
+mechanism learning on O(n_s) pairs, ``connect_segments`` patch,
+``refinalize_bounds`` backstop — ANSWERS bit-identically to the
+full-data build, across mechanisms (pgm/fiting), both key widths
+(below/above the 2**24 f32 integer-exactness edge), and THROUGH a
+sampled ``retrain()`` of the live state under the epoch pipeline's
+pinned snapshot."""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from test_retrain import (  # noqa: E402
+    check_sampled_build_identity_through_retrain,
+)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2 ** 31 - 1),
+    method=st.sampled_from(["pgm", "fiting"]),
+    wide=st.booleans(),
+    rate=st.sampled_from([0.05, 0.15]),
+)
+def test_sampled_build_bit_identical_through_retrain(seed, method, wide,
+                                                     rate):
+    check_sampled_build_identity_through_retrain(seed, method, wide, rate)

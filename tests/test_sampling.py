@@ -60,8 +60,53 @@ def test_exponential_search_matches_searchsorted():
     q = rng.choice(x, 2000)
     # deliberately bad predictions to exercise the doubling phase
     y_hat = np.clip(np.searchsorted(x, q) + rng.integers(-5000, 5000, len(q)), 0, len(x) - 1)
-    pos = exponential_search(x, q, y_hat.astype(np.float64))
+    pos, probes = exponential_search(x, q, y_hat.astype(np.float64))
     assert np.all(x[pos] == q)
+    assert probes > 0
+
+
+def test_exponential_search_probe_count_tracks_error():
+    """The (positions, probes) contract: probes grow with prediction
+    error (that is the quantity gap insertion buys down)."""
+    x = make_keys("iot", 30_000, seed=4)
+    q = np.random.default_rng(5).choice(x, 3000)
+    y_true = np.searchsorted(x, q).astype(np.float64)
+    pos_good, probes_good = exponential_search(x, q, y_true)
+    bad = np.clip(y_true + 4000, 0, len(x) - 1)
+    pos_bad, probes_bad = exponential_search(x, q, bad)
+    assert np.array_equal(pos_good, pos_bad)  # positions exact either way
+    assert probes_bad > probes_good
+    # perfect predictions still pay the bracket check + final bisects
+    assert probes_good >= len(q)
+
+
+def test_sample_pairs_default_rng_streams_independent():
+    """rng=None must draw a FRESH stream per call — a fixed default
+    seed made every per-shard build / retrain sample identically."""
+    x = make_keys("iot", 20_000, seed=6)
+    xs1, _ = sample_pairs(x, rate=0.05)
+    xs2, _ = sample_pairs(x, rate=0.05)
+    assert not np.array_equal(xs1, xs2)
+    # explicit rng stays reproducible
+    a, _ = sample_pairs(x, rate=0.05, rng=np.random.default_rng(3))
+    b, _ = sample_pairs(x, rate=0.05, rng=np.random.default_rng(3))
+    assert np.array_equal(a, b)
+
+
+def test_spawn_rngs_independent_and_deterministic():
+    from repro.core.sampling import spawn_rngs
+
+    kids = spawn_rngs(np.random.default_rng(9), 4)
+    draws = [k.integers(0, 2 ** 32, 8) for k in kids]
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert not np.array_equal(draws[i], draws[j])
+    again = spawn_rngs(np.random.default_rng(9), 4)
+    assert np.array_equal(draws[0], again[0].integers(0, 2 ** 32, 8))
+    # rng=None children are independent too
+    k1, k2 = spawn_rngs(None, 2)
+    assert not np.array_equal(k1.integers(0, 2 ** 32, 8),
+                              k2.integers(0, 2 ** 32, 8))
 
 
 def test_hoeffding_bound_monotone():

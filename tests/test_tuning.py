@@ -1,0 +1,106 @@
+"""MDL-guided auto-tuner (core/tuning.py): grid scoring, budgets,
+``Index.build(method="auto")``, and the per-shard default."""
+
+import numpy as np
+import pytest
+
+from conftest import make_keys
+from repro.core import Index
+from repro.core.tuning import TunedChoice, autotune, default_grid
+
+
+def test_autotune_returns_grid_winner():
+    x = make_keys("iot", 40_000, seed=0)
+    choice = autotune(x, rng=np.random.default_rng(0))
+    assert isinstance(choice, TunedChoice)
+    assert choice.method in {m for m, _ in default_grid(len(x))}
+    assert choice.budget_met
+    assert 0.0 < choice.sample_rate <= 1.0
+    assert choice.hoeffding_eps > 0.0
+    # the winner IS the grid minimum among scored candidates
+    assert choice.score == min(c["mdl"] for c in choice.candidates)
+
+
+def test_autotune_dynamic_restricts_to_plm_serving_mechanisms():
+    x = make_keys("weblogs", 30_000, seed=1)
+    choice = autotune(x, dynamic=True, rng=np.random.default_rng(1))
+    assert choice.method in ("pgm", "fiting")
+    assert all(c["method"] in ("pgm", "fiting") for c in choice.candidates)
+
+
+def test_autotune_size_budget_is_hard_filter():
+    x = make_keys("iot", 40_000, seed=2)
+    free = autotune(x, rng=np.random.default_rng(2))
+    sizes = sorted(c["size_bytes"] for c in free.candidates)
+    # a budget between the two smallest models: the pick must respect it
+    budget = (sizes[0] + sizes[1]) // 2
+    tight = autotune(x, size_budget_bytes=budget,
+                     rng=np.random.default_rng(2))
+    assert tight.budget_met
+    assert tight.report.l_model_bytes <= budget
+    # an unsatisfiable budget degrades to the smallest model, flagged
+    impossible = autotune(x, size_budget_bytes=1,
+                          rng=np.random.default_rng(2))
+    assert not impossible.budget_met
+    assert impossible.report.l_model_bytes == sizes[0]
+
+
+def test_autotune_alpha_shifts_toward_precision():
+    """Large alpha weights the correction term: the pick's correction
+    cost must not be worse than the cheap-model pick's (paper §6.2)."""
+    x = make_keys("longitude", 40_000, seed=3)
+    cheap = autotune(x, alpha=0.01, rng=np.random.default_rng(3))
+    precise = autotune(x, alpha=100.0, rng=np.random.default_rng(3))
+    assert (precise.report.l_data_given_model
+            <= cheap.report.l_data_given_model + 1e-9)
+
+
+def test_build_auto_single_and_exact():
+    x = make_keys("iot", 30_000, seed=4)
+    idx = Index.build(x, method="auto", gap_rho=0.15,
+                      rng=np.random.default_rng(4))
+    assert idx.tuned is not None
+    assert idx.method == idx.tuned.method
+    assert idx.sample_rate == idx.tuned.sample_rate
+    q = np.random.default_rng(5).choice(x, 4000)
+    r = idx.lookup(q)
+    assert r.found.all()
+    assert np.array_equal(np.asarray(r.payloads), np.searchsorted(x, q))
+
+
+def test_build_auto_static():
+    x = make_keys("weblogs", 20_000, seed=6)
+    idx = Index.build(x, method="auto")
+    q = np.random.default_rng(6).choice(x, 2000)
+    r = idx.lookup(q)
+    assert r.found.all()
+
+
+def test_build_auto_explicit_sample_rate_wins():
+    x = make_keys("iot", 30_000, seed=7)
+    idx = Index.build(x, method="auto", gap_rho=0.15, sample_rate=0.07,
+                      rng=np.random.default_rng(7))
+    assert idx.sample_rate == 0.07
+
+
+def test_sharded_auto_per_shard():
+    x = make_keys("iot", 30_000, seed=8)
+    sharded = Index.build(x, shards=3, method="auto", gap_rho=0.15,
+                          rng=np.random.default_rng(8))
+    for sh in sharded.shards:
+        assert sh.tuned is not None
+        assert sh.method in ("pgm", "fiting")  # dynamic grid per shard
+    q = np.random.default_rng(9).choice(x, 3000)
+    r = sharded.lookup(q)
+    assert np.array_equal(np.asarray(r.payloads), np.searchsorted(x, q))
+
+
+def test_autotune_query_weighting_changes_score():
+    """Scoring against a skewed query sample weights L(D|M) by what is
+    actually queried, not the uniform key distribution."""
+    x = make_keys("iot", 40_000, seed=10)
+    hot = x[: len(x) // 50]  # hammer the head of the key space
+    uni = autotune(x, rng=np.random.default_rng(10))
+    skew = autotune(x, queries=np.random.default_rng(10).choice(hot, 8000),
+                    rng=np.random.default_rng(10))
+    assert skew.score != pytest.approx(uni.score, rel=1e-12)
