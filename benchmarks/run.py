@@ -394,6 +394,32 @@ def smoke() -> None:
                           f"{auditor.violations}")
         pipe.close()
 
+    # repro-lint sanity: the static analyzer imports, walks the whole
+    # installed package, flags a seeded violation, and stays cheap
+    # enough for tier-1 (well under 10s — it is pure-AST, no tracing)
+    t0 = time.perf_counter()
+    import repro
+    from repro.analysis import lint_paths, lint_source
+
+    live = [f for f in lint_paths([os.path.dirname(repro.__file__)])
+            if not f.suppressed]
+    if live:
+        errors.append(f"smoke: repro-lint found {len(live)} violation(s) "
+                      f"in the installed package: {live[0].render()}")
+    seeded = lint_source(
+        "import jax, numpy as np\n\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    return np.asarray(x) + 1\n",
+        "src/repro/kernels/smoke_fixture.py")
+    if not any(f.rule == "trace-host-sync" for f in seeded):
+        errors.append("smoke: repro-lint missed a seeded host-sync "
+                      "violation (analyzer inert)")
+    lint_s = time.perf_counter() - t0
+    if lint_s > 10.0:
+        errors.append(f"smoke: repro-lint took {lint_s:.1f}s "
+                      "(tier-1 budget is 10s)")
+
     for e in errors:
         print(f"# SMOKE: {e}", file=sys.stderr)
     if errors:

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# repro-lint: the repo-aware static-analysis suite (repro.analysis).
+# Four passes over src/ and tests/: epoch-bump discipline on index
+# mutators, trace-safety inside jit/loop bodies, guarded-by lock
+# checking against `#: guarded-by:` annotations, and hi/lo pair
+# exactness in the kernels.  Nonzero exit on any unsuppressed finding
+# — wired into scripts/tier1.sh, so a violation fails tier-1.  Extra
+# args pass through, e.g.  scripts/lint.sh --show-suppressed  or
+# scripts/lint.sh --rules guarded-by src/repro/serving.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m repro.analysis "$@"

@@ -15,6 +15,7 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+scripts/lint.sh   # repro-lint static analysis: cheap, fails fast
 XLA_FLAGS="--xla_force_host_platform_device_count=8 --xla_cpu_multi_thread_eigen=false" \
   python -m pytest -q "$@"
 python -m benchmarks.run --smoke

@@ -1,0 +1,99 @@
+"""repro-lint: repo-aware static analysis + the tsan-lite lock sanitizer.
+
+The pluggable framework only pays off if every plug preserves the core
+contracts.  After PRs 6-9 those contracts lived in docstrings and
+whatever tests happened to exercise them; this package makes them
+machine-enforced before tier-1 even runs (``scripts/lint.sh``, wired
+into ``scripts/tier1.sh``).
+
+Machine-checked invariants
+==========================
+
+``epoch-bump`` (analysis/epoch.py)
+    Every method of ``GappedArray``/``Index``/``ShardedIndex`` that
+    writes mutable index state (slot arrays, links, mechanism, shard
+    list, router) must carry epoch-bump evidence in its body: a
+    ``*._invalidate()`` call, a ``.version`` write (the replace-not-
+    mutate retrain idiom), or a ``self._mutations`` write (the sharded
+    topology counter).  Private helpers mutating on behalf of an
+    already-bumped caller declare ``caller-invalidates`` in their
+    docstring — an audited convention, not a free pass.
+
+``snapshot-mutate`` (analysis/epoch.py)
+    Pinned snapshots (``GapSnapshot``/``IndexSnapshot``/
+    ``ShardedSnapshot``) are immutable outside ``__init__``/
+    ``release``/``retain``; and any name bound from
+    ``*.pin_snapshot()`` must never have attributes assigned — both
+    are mutation paths that bypass the ``_invalidate`` copy-on-write
+    isolation the serving pipeline's bit-identity proof rests on.
+
+``trace-host-sync`` / ``trace-py-branch`` / ``trace-self-capture`` /
+``trace-dynamic-shape`` (analysis/tracesafe.py)
+    Inside functions reachable from ``jax.jit``/``pallas_call``/
+    ``shard_map`` call sites in ``kernels/*``: no host numpy calls,
+    ``.item()``, or ``float()``/``int()`` on traced values (device
+    syncs mid-graph); no Python ``if``/``while`` on traced values (use
+    ``jnp.where``/``lax.cond``); no closure capture of ``self``
+    (mutable state baked into the executable goes stale after any
+    mutation — hoist attributes into locals, the ``_build_fn`` idiom);
+    no data-dependent shapes (shape buckets exist for a reason).
+
+``guarded-by`` (analysis/guarded.py)
+    Attributes declared ``#: guarded-by: <lockname>`` (annotated
+    across ``serving/engine.py``, ``serving/pipeline.py``,
+    ``serving/wal.py``, ``robustness/faults.py``) may only be accessed
+    inside a lexical ``with self.<lockname>:`` block or in a method
+    whose docstring declares ``lock-held: <lockname>`` (meaning every
+    call site holds the lock — verified at runtime by ``locksan``).
+
+``pair-float64`` / ``pair-raw-fma`` (analysis/pairexact.py)
+    In the traced functions of ``kernels/gap_place.py``/``lookup.py``/
+    ``ops_gap.py``: no float64 intermediates, and no raw ``a*b + c``
+    on pair-component operands outside the fma-free error-free
+    transforms (``_two_sum``/``_two_prod``/``_dd_*``) — the 2^48
+    hi/lo exactness contract.
+
+Suppression syntax
+==================
+``# repro-lint: disable=<rule>[,<rule>] -- <justification>`` on the
+flagged line or the line above; ``# repro-lint: disable-file=<rule>``
+for file scope; ``disable=all`` matches every rule.  Suppressions are
+waivers, not deletions: ``python -m repro.analysis --show-suppressed``
+audits the inventory, and every suppression in this repo carries its
+justification inline.
+
+Runtime sanitizer
+=================
+``analysis/locksan.py`` is the dynamic half of ``guarded-by``: a
+tsan-lite harness that wraps the annotated locks, records the
+lock-acquisition graph across ``MicroBatchQueue``/``EpochPipeline``/
+``IngestWAL`` threads (cycles = lock-order inversions), and verifies
+at runtime that ``lock-held:`` methods really do run under their lock.
+Opt-in (tests/fault harness only), composes with
+``robustness.FaultInjector`` — see tests/test_locksan.py.
+
+CLI
+===
+``python -m repro.analysis [paths] [--json] [--rules r1,r2]
+[--list-rules] [--show-suppressed]`` — exit 1 on any unsuppressed
+finding.  ``scripts/lint.sh`` runs it over ``src/`` + ``tests/``.
+"""
+
+from .core import (Checker, Finding, LintContext, default_checkers,
+                   lint_paths, lint_source, main)
+from .locksan import (GuardedAccessViolation, LockOrderInversion,
+                      LockSanitizer, sanitize_serving_stack)
+
+__all__ = [
+    "Checker",
+    "Finding",
+    "GuardedAccessViolation",
+    "LintContext",
+    "LockOrderInversion",
+    "LockSanitizer",
+    "default_checkers",
+    "lint_paths",
+    "lint_source",
+    "main",
+    "sanitize_serving_stack",
+]

@@ -1,0 +1,8 @@
+"""``python -m repro.analysis`` — the repro-lint CLI (scripts/lint.sh)."""
+
+import sys
+
+from .core import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,241 @@
+"""repro-lint framework: file walker, checker registry, suppressions,
+reporters.
+
+A *checker* is a class with
+
+* ``rules``: tuple of rule names it can emit (``Finding.rule`` must be
+  one of them);
+* ``applies(path, source) -> bool``: cheap scope gate (path pattern
+  and/or content sniff) so e.g. trace-safety never parses host-only
+  modules;
+* ``check(ctx) -> iterable[Finding]``: the AST pass over one file.
+
+``lint_source``/``lint_paths`` drive the registry; ``main`` is the CLI
+behind ``scripts/lint.sh`` (JSON + human reporters, nonzero exit on any
+unsuppressed finding).
+
+Suppression syntax (see ``repro.analysis`` package doc):
+
+* ``# repro-lint: disable=rule1,rule2 -- justification`` on the flagged
+  line, or on the line directly above it;
+* ``# repro-lint: disable-file=rule -- justification`` anywhere in the
+  file (whole-file scope);
+* ``disable=all`` matches every rule.
+
+A suppressed finding is still collected (``suppressed=True``) so
+``--show-suppressed`` can audit the waiver inventory, but it never
+fails the lint.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import io
+import json
+import sys
+import time
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+__all__ = ["Finding", "LintContext", "Checker", "default_checkers",
+           "lint_source", "lint_paths", "parse_suppressions", "main"]
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+    suppressed: bool = False
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        tag = " (suppressed)" if self.suppressed else ""
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}{tag}"
+
+
+@dataclasses.dataclass
+class LintContext:
+    """Everything a checker pass needs for one file."""
+
+    path: str                      # repo-relative (or caller-given) path
+    source: str
+    tree: ast.AST
+    comments: Dict[int, str]       # line -> comment text (incl. '#')
+    line_disables: Dict[int, Set[str]]   # line -> rules disabled there
+    file_disables: Set[str]
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        if rule in self.file_disables or "all" in self.file_disables:
+            return True
+        for ln in (line, line - 1):
+            rules = self.line_disables.get(ln)
+            if rules and (rule in rules or "all" in rules):
+                return True
+        return False
+
+
+_DISABLE = "repro-lint:"
+
+
+def parse_suppressions(source: str) -> Tuple[Dict[int, str],
+                                             Dict[int, Set[str]],
+                                             Set[str]]:
+    """Tokenize ``source`` -> (comments, per-line disables, file
+    disables).  Tolerates files that tokenize rejects (returns empty
+    maps — the AST parse will raise its own error upstream)."""
+    comments: Dict[int, str] = {}
+    line_disables: Dict[int, Set[str]] = {}
+    file_disables: Set[str] = set()
+    try:
+        toks = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in toks:
+            if tok.type != tokenize.COMMENT:
+                continue
+            comments[tok.start[0]] = tok.string
+            body = tok.string.lstrip("#").strip()
+            if not body.startswith(_DISABLE):
+                continue
+            body = body[len(_DISABLE):].strip()
+            # strip trailing justification:  disable=x -- why
+            body = body.split("--", 1)[0].strip()
+            if body.startswith("disable-file="):
+                rules = body[len("disable-file="):]
+                file_disables.update(
+                    r.strip() for r in rules.split(",") if r.strip())
+            elif body.startswith("disable="):
+                rules = body[len("disable="):]
+                line_disables.setdefault(tok.start[0], set()).update(
+                    r.strip() for r in rules.split(",") if r.strip())
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        pass
+    return comments, line_disables, file_disables
+
+
+class Checker:
+    """Base checker.  Subclasses set ``rules`` and ``path_patterns``
+    (fnmatch globs matched against the posix path; empty = every file)
+    and implement ``check``."""
+
+    rules: Tuple[str, ...] = ()
+    path_patterns: Tuple[str, ...] = ()
+
+    def applies(self, path: str, source: str) -> bool:
+        if not self.path_patterns:
+            return True
+        p = Path(path).as_posix()
+        return any(fnmatch.fnmatch(p, pat) or p.endswith(pat.lstrip("*"))
+                   for pat in self.path_patterns)
+
+    def check(self, ctx: LintContext) -> Iterable[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+
+def default_checkers() -> List[Checker]:
+    from .epoch import EpochDisciplineChecker, SnapshotImmutabilityChecker
+    from .guarded import GuardedByChecker
+    from .pairexact import PairExactChecker
+    from .tracesafe import TraceSafetyChecker
+    return [EpochDisciplineChecker(), SnapshotImmutabilityChecker(),
+            TraceSafetyChecker(), GuardedByChecker(), PairExactChecker()]
+
+
+def lint_source(source: str, path: str = "<string>",
+                checkers: Optional[List[Checker]] = None,
+                rules: Optional[Set[str]] = None) -> List[Finding]:
+    """Run the checkers over one source string (the fixture-test entry
+    point).  ``rules`` filters which rule names may be emitted."""
+    checkers = default_checkers() if checkers is None else checkers
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding("parse-error", path, e.lineno or 0,
+                        f"syntax error: {e.msg}")]
+    comments, line_dis, file_dis = parse_suppressions(source)
+    ctx = LintContext(path=path, source=source, tree=tree,
+                      comments=comments, line_disables=line_dis,
+                      file_disables=file_dis)
+    out: List[Finding] = []
+    for ch in checkers:
+        if not ch.applies(path, source):
+            continue
+        for f in ch.check(ctx):
+            if rules is not None and f.rule not in rules:
+                continue
+            f.suppressed = ctx.suppressed(f.rule, f.line)
+            out.append(f)
+    out.sort(key=lambda f: (f.path, f.line, f.rule))
+    return out
+
+
+def _iter_py_files(paths: Iterable[str]) -> Iterable[Path]:
+    for p in paths:
+        pth = Path(p)
+        if pth.is_dir():
+            yield from sorted(pth.rglob("*.py"))
+        elif pth.suffix == ".py":
+            yield pth
+
+
+def lint_paths(paths: Iterable[str],
+               checkers: Optional[List[Checker]] = None,
+               rules: Optional[Set[str]] = None) -> List[Finding]:
+    checkers = default_checkers() if checkers is None else checkers
+    out: List[Finding] = []
+    for f in _iter_py_files(paths):
+        src = f.read_text()
+        out.extend(lint_source(src, path=f.as_posix(), checkers=checkers,
+                               rules=rules))
+    return out
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="repo-aware static analysis (epoch/snapshot "
+                    "discipline, trace-safety, guarded-by locks, "
+                    "pair-exactness)")
+    ap.add_argument("paths", nargs="*", default=["src", "tests"])
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable findings on stdout")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset to enable")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="print suppressed findings too")
+    args = ap.parse_args(argv)
+
+    checkers = default_checkers()
+    if args.list_rules:
+        for ch in checkers:
+            for r in ch.rules:
+                print(f"{r:24s} ({type(ch).__name__})")
+        return 0
+    rules = (set(r.strip() for r in args.rules.split(","))
+             if args.rules else None)
+    t0 = time.perf_counter()
+    findings = lint_paths(args.paths, checkers=checkers, rules=rules)
+    dt = time.perf_counter() - t0
+    active = [f for f in findings if not f.suppressed]
+    suppressed = [f for f in findings if f.suppressed]
+    if args.json:
+        print(json.dumps({
+            "findings": [f.as_dict() for f in findings],
+            "active": len(active), "suppressed": len(suppressed),
+            "seconds": round(dt, 3)}, indent=2))
+    else:
+        shown = findings if args.show_suppressed else active
+        for f in shown:
+            print(f.render())
+        print(f"repro-lint: {len(active)} finding(s), "
+              f"{len(suppressed)} suppressed, {dt:.2f}s",
+              file=sys.stderr)
+    return 1 if active else 0

@@ -1,0 +1,219 @@
+"""Epoch/snapshot discipline checkers.
+
+Rule ``epoch-bump``
+-------------------
+Methods on the registered stateful classes (``GappedArray``, ``Index``,
+``ShardedIndex``) that write *mutable index state* attributes must carry
+epoch-bump evidence in the same method body:
+
+* a call to ``*._invalidate()`` (the GappedArray version bump + COW
+  trigger), or
+* an assignment/augassign to a ``.version`` attribute (the replace-not-
+  mutate retrain idiom: the new arrays get ``version = old + 1`` before
+  installation), or
+* an assignment/augassign to ``self._mutations`` (the ShardedIndex
+  topology counter folded into its epoch).
+
+Private helpers that mutate on behalf of an already-invalidated caller
+declare it: the docstring must contain the marker ``caller-invalidates``
+(audited convention — every caller must have bumped first).
+``__init__``/``__post_init__``/dunder constructors are exempt.
+
+Rule ``snapshot-mutate``
+------------------------
+Pinned snapshot objects are immutable after construction.  Inside the
+registered snapshot classes (``GapSnapshot``, ``IndexSnapshot``,
+``ShardedSnapshot``) any ``self.<attr> = ...`` (or element store)
+outside ``__init__``/``release``/``retain`` is flagged.  Additionally,
+in ANY scanned function, a name bound from ``*.pin_snapshot()`` must
+never have attributes assigned — that is a mutation path bypassing
+copy-on-write isolation.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set
+
+from .core import Checker, Finding, LintContext
+
+__all__ = ["EpochDisciplineChecker", "SnapshotImmutabilityChecker",
+           "STATEFUL_CLASSES", "SNAPSHOT_CLASSES"]
+
+# class -> attributes that constitute mutable index state (writes to
+# anything else — caches, stats, config — are epoch-neutral)
+STATEFUL_CLASSES: Dict[str, Set[str]] = {
+    "GappedArray": {"slot_key", "occupied", "payload", "links", "mech",
+                    "n_keys", "rho"},
+    "Index": {"gapped", "mechanism"},
+    "ShardedIndex": {"shards", "router"},
+}
+
+SNAPSHOT_CLASSES: Dict[str, Set[str]] = {
+    # class -> methods allowed to assign self attributes
+    "GapSnapshot": {"__init__", "release", "retain"},
+    "IndexSnapshot": {"__init__", "release", "retain"},
+    "ShardedSnapshot": {"__init__", "release", "retain"},
+}
+
+CALLER_MARKER = "caller-invalidates"
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    """``self.X`` -> ``X`` (through one subscript/slice level:
+    ``self.X[...]`` also targets X)."""
+    if isinstance(node, ast.Subscript):
+        node = node.value
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def _assign_targets(stmt: ast.stmt) -> List[ast.AST]:
+    if isinstance(stmt, ast.Assign):
+        out = []
+        for t in stmt.targets:
+            out.extend(t.elts if isinstance(t, (ast.Tuple, ast.List))
+                       else [t])
+        return out
+    if isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        return [stmt.target]
+    return []
+
+
+def _has_bump_evidence(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "_invalidate"):
+            return True
+        for tgt in _assign_targets(node) if isinstance(node, ast.stmt) \
+                else []:
+            base = tgt.value if isinstance(tgt, ast.Subscript) else tgt
+            if isinstance(base, ast.Attribute) and base.attr == "version":
+                return True
+            if (isinstance(base, ast.Attribute)
+                    and isinstance(base.value, ast.Name)
+                    and base.value.id == "self"
+                    and base.attr == "_mutations"):
+                return True
+    return False
+
+
+def _docstring_marker(fn: ast.FunctionDef, marker: str) -> bool:
+    doc = ast.get_docstring(fn) or ""
+    return marker in doc
+
+
+class EpochDisciplineChecker(Checker):
+    rules = ("epoch-bump",)
+    path_patterns = ("*core/gaps.py", "*core/handle.py",
+                     "*dist/sharded.py", "*serving/pipeline.py",
+                     "*fixture*")
+
+    def check(self, ctx: LintContext) -> Iterable[Finding]:
+        for cls in ast.walk(ctx.tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            watched = STATEFUL_CLASSES.get(cls.name)
+            if not watched:
+                continue
+            for fn in cls.body:
+                if not isinstance(fn, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    continue
+                if fn.name.startswith("__"):
+                    continue
+                writes = []
+                for node in ast.walk(fn):
+                    if not isinstance(node, ast.stmt):
+                        continue
+                    for tgt in _assign_targets(node):
+                        attr = _self_attr(tgt)
+                        if attr in watched:
+                            writes.append((node.lineno, attr))
+                if not writes:
+                    continue
+                if _has_bump_evidence(fn):
+                    continue
+                if _docstring_marker(fn, CALLER_MARKER):
+                    continue
+                line, attr = writes[0]
+                yield Finding(
+                    "epoch-bump", ctx.path, line,
+                    f"{cls.name}.{fn.name} writes index state "
+                    f"'self.{attr}' without epoch-bump evidence "
+                    f"(_invalidate()/.version write/self._mutations) and "
+                    f"no '{CALLER_MARKER}' docstring marker")
+
+
+class SnapshotImmutabilityChecker(Checker):
+    rules = ("snapshot-mutate",)
+    path_patterns = ("*core/gaps.py", "*core/handle.py",
+                     "*serving/pipeline.py", "*serving/engine.py",
+                     "*dist/sharded.py", "*fixture*")
+
+    def check(self, ctx: LintContext) -> Iterable[Finding]:
+        yield from self._class_rule(ctx)
+        yield from self._pin_binding_rule(ctx)
+
+    def _class_rule(self, ctx: LintContext) -> Iterable[Finding]:
+        for cls in ast.walk(ctx.tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            allowed = SNAPSHOT_CLASSES.get(cls.name)
+            if allowed is None:
+                continue
+            for fn in cls.body:
+                if not isinstance(fn, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    continue
+                if fn.name in allowed:
+                    continue
+                for node in ast.walk(fn):
+                    if not isinstance(node, ast.stmt):
+                        continue
+                    for tgt in _assign_targets(node):
+                        attr = _self_attr(tgt)
+                        if attr is not None:
+                            yield Finding(
+                                "snapshot-mutate", ctx.path, node.lineno,
+                                f"{cls.name}.{fn.name} assigns "
+                                f"'self.{attr}' — pinned snapshots are "
+                                f"immutable outside {sorted(allowed)}")
+
+    def _pin_binding_rule(self, ctx: LintContext) -> Iterable[Finding]:
+        """Names bound from ``*.pin_snapshot()`` must never be assigned
+        attributes in the same function."""
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            pinned: Set[str] = set()
+            for node in ast.walk(fn):
+                if (isinstance(node, ast.Assign)
+                        and isinstance(node.value, ast.Call)
+                        and isinstance(node.value.func, ast.Attribute)
+                        and node.value.func.attr in ("pin_snapshot",
+                                                     "pin_index")):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            pinned.add(t.id)
+            if not pinned:
+                continue
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.stmt):
+                    continue
+                for tgt in _assign_targets(node):
+                    base = (tgt.value if isinstance(tgt, ast.Subscript)
+                            else tgt)
+                    if (isinstance(base, ast.Attribute)
+                            and isinstance(base.value, ast.Name)
+                            and base.value.id in pinned):
+                        yield Finding(
+                            "snapshot-mutate", ctx.path, node.lineno,
+                            f"assignment to attribute "
+                            f"'{base.value.id}.{base.attr}' of a pinned "
+                            f"snapshot — snapshots are immutable; mutate "
+                            f"the live side (COW protects the pin)")

@@ -1,0 +1,189 @@
+"""Guarded-by lock checking.
+
+Annotation convention (content-activated: any file using it is
+checked)::
+
+    class MicroBatchQueue:
+        def __init__(self):
+            self._lock = threading.RLock()
+            self._lookups = []      #: guarded-by: _lock
+            #: guarded-by: _lock
+            self._results = {}
+
+``#: guarded-by: <lockname>`` on the attribute's assignment line (or
+the line directly above it) declares that every read/write of
+``self.<attr>`` inside the declaring class must happen
+
+* lexically inside a ``with self.<lockname>:`` block, or
+* in a method documented *lock-held*: its docstring contains
+  ``lock-held: <lockname>`` (audited convention — every call site must
+  hold the lock; the runtime sanitizer ``analysis.locksan`` checks it
+  dynamically), or
+* in ``__init__``/``__del__`` (construction/teardown is single-owner).
+
+The check is lexical, deliberately: a guarded access in a method
+without a visible ``with`` and without the lock-held marker is exactly
+the pattern that rots into a data race when a refactor adds a second
+thread (the deadline-timer lesson of PR 8).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .core import Checker, Finding, LintContext
+
+__all__ = ["GuardedByChecker", "collect_guarded", "ANNOTATION_RE",
+           "LOCK_HELD_RE"]
+
+ANNOTATION_RE = re.compile(r"#:\s*guarded-by:\s*([A-Za-z_][\w]*)")
+LOCK_HELD_RE = re.compile(r"lock-held:\s*([A-Za-z_][\w,\s]*)")
+
+_EXEMPT_METHODS = {"__init__", "__post_init__", "__del__"}
+
+
+def _guard_comment(comments: Dict[int, str], line: int) -> Optional[str]:
+    for ln in (line, line - 1):
+        c = comments.get(ln)
+        if c:
+            m = ANNOTATION_RE.search(c)
+            if m:
+                return m.group(1)
+    return None
+
+
+def collect_guarded(tree: ast.AST, comments: Dict[int, str]
+                    ) -> Dict[str, Dict[str, str]]:
+    """{class name: {attr: lockname}} from ``#: guarded-by:``
+    annotations on ``self.<attr> = ...`` statements."""
+    out: Dict[str, Dict[str, str]] = {}
+    for cls in ast.walk(tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        attrs: Dict[str, str] = {}
+        for node in ast.walk(cls):
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, ast.AnnAssign):
+                targets = [node.target]
+            else:
+                continue
+            lock = _guard_comment(comments, node.lineno)
+            if lock is None:
+                continue
+            for t in targets:
+                if (isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self"):
+                    attrs[t.attr] = lock
+        if attrs:
+            out[cls.name] = attrs
+    return out
+
+
+def collect_guarded_source(source: str) -> Dict[str, Dict[str, str]]:
+    """Source-string front end (used by ``locksan`` to instrument live
+    objects from their class source)."""
+    from .core import parse_suppressions
+    comments, _, _ = parse_suppressions(source)
+    return collect_guarded(ast.parse(source), comments)
+
+
+def _lock_held_names(fn: ast.FunctionDef) -> Set[str]:
+    doc = ast.get_docstring(fn) or ""
+    m = LOCK_HELD_RE.search(doc)
+    if not m:
+        return set()
+    return {n.strip() for n in m.group(1).split(",") if n.strip()}
+
+
+def _with_locks(item: ast.withitem) -> Optional[str]:
+    """``with self.<lock>:`` -> lock name."""
+    expr = item.context_expr
+    if (isinstance(expr, ast.Attribute)
+            and isinstance(expr.value, ast.Name)
+            and expr.value.id == "self"):
+        return expr.attr
+    return None
+
+
+class GuardedByChecker(Checker):
+    rules = ("guarded-by",)
+    # content-activated: cheap sniff, then full parse
+    path_patterns = ()
+
+    def applies(self, path: str, source: str) -> bool:
+        return "guarded-by:" in source
+
+    def check(self, ctx: LintContext) -> Iterable[Finding]:
+        guarded = collect_guarded(ctx.tree, ctx.comments)
+        if not guarded:
+            return
+        for cls in ast.walk(ctx.tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            attrs = guarded.get(cls.name)
+            if not attrs:
+                continue
+            for fn in cls.body:
+                if not isinstance(fn, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    continue
+                if fn.name in _EXEMPT_METHODS:
+                    continue
+                held_doc = _lock_held_names(fn)
+                yield from self._walk(ctx, cls.name, fn, fn.body, attrs,
+                                      held_doc)
+
+    def _walk(self, ctx: LintContext, clsname: str,
+              fn: ast.FunctionDef, body: List[ast.stmt],
+              attrs: Dict[str, str], held: Set[str]
+              ) -> Iterable[Finding]:
+        for stmt in body:
+            yield from self._visit(ctx, clsname, fn, stmt, attrs, held)
+
+    def _visit(self, ctx: LintContext, clsname: str,
+               fn: ast.FunctionDef, node: ast.AST,
+               attrs: Dict[str, str], held: Set[str]
+               ) -> Iterable[Finding]:
+        if isinstance(node, ast.With):
+            inner = set(held)
+            for item in node.items:
+                lk = _with_locks(item)
+                if lk is not None:
+                    inner.add(lk)
+            for stmt in node.body:
+                yield from self._visit(ctx, clsname, fn, stmt, attrs,
+                                       inner)
+            for item in node.items:
+                yield from self._visit(ctx, clsname, fn,
+                                       item.context_expr, attrs, held)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested def: runs later, on an unknown thread — the held
+            # set does not carry over (its own lock-held doc may)
+            nested_held = _lock_held_names(node)
+            for stmt in node.body:
+                yield from self._visit(ctx, clsname, node, stmt, attrs,
+                                       nested_held)
+            return
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"
+                and node.attr in attrs):
+            lock = attrs[node.attr]
+            if lock not in held:
+                kind = ("write" if isinstance(node.ctx, (ast.Store,
+                                                         ast.Del))
+                        else "read")
+                yield Finding(
+                    "guarded-by", ctx.path, node.lineno,
+                    f"{clsname}.{fn.name}: unguarded {kind} of "
+                    f"'self.{node.attr}' (guarded-by: {lock}) — wrap in "
+                    f"'with self.{lock}:' or document the method "
+                    f"'lock-held: {lock}'")
+            return
+        for child in ast.iter_child_nodes(node):
+            yield from self._visit(ctx, clsname, fn, child, attrs, held)

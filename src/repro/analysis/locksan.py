@@ -1,0 +1,267 @@
+"""tsan-lite runtime lock sanitizer.
+
+Opt-in instrumentation that complements the static ``guarded-by``
+checker (``analysis/guarded.py``) at runtime:
+
+* **lock-order graph** — every sanitized lock acquisition records an
+  edge ``held -> acquired`` per thread; a cycle in that graph is a
+  lock-order inversion (a potential deadlock even if this run got
+  lucky).  ``inversions()`` returns the cycles, ``assert_clean()``
+  raises on any.
+* **guarded-attribute access** — ``instrument(obj)`` reads the
+  ``#: guarded-by:`` annotations straight from the object's class
+  source (same parser as the static checker), wraps the named lock
+  attributes in sanitized locks, and swaps the instance onto a proxy
+  class whose ``__getattribute__``/``__setattr__`` verify the mapped
+  lock is held by the accessing thread.  Accesses from the sole thread
+  that has ever touched the object are exempt (single-owner warm-up /
+  test setup — no race is possible until a second thread appears).
+
+Usage with the fault harness (tests/test_locksan.py)::
+
+    san = LockSanitizer()
+    san.instrument(queue)      # MicroBatchQueue
+    san.instrument(pipeline)   # EpochPipeline
+    san.instrument(wal)        # IngestWAL
+    ... run the workload (FaultInjector "slow" sites widen windows) ...
+    san.assert_clean()
+
+Scope: this is a test/debug harness — proxy classes add per-access
+overhead and are never installed on the serving path by default.
+"""
+
+from __future__ import annotations
+
+import inspect
+import textwrap
+import threading
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+__all__ = ["LockSanitizer", "LockOrderInversion", "GuardedAccessViolation",
+           "sanitize_serving_stack"]
+
+
+class LockOrderInversion(AssertionError):
+    pass
+
+
+class GuardedAccessViolation(AssertionError):
+    pass
+
+
+class _SanLock:
+    """Sanitized lock wrapper: context-manager compatible, records
+    ownership and acquisition-order edges."""
+
+    def __init__(self, san: "LockSanitizer", name: str, lock,
+                 reentrant: Optional[bool] = None):
+        self._san = san
+        self.name = name
+        self._lock = lock
+        if reentrant is None:
+            reentrant = "RLock" in type(lock).__name__
+        self._reentrant = reentrant
+        self._owner: Optional[int] = None
+        self._count = 0
+
+    def held_by_me(self) -> bool:
+        return self._owner == threading.get_ident() and self._count > 0
+
+    def acquire(self, *a, **kw) -> bool:
+        me = threading.get_ident()
+        if self._reentrant and self._owner == me:
+            ok = self._lock.acquire(*a, **kw)
+            if ok:
+                self._count += 1
+            return ok
+        self._san._pre_acquire(self)
+        ok = self._lock.acquire(*a, **kw)
+        if ok:
+            self._owner = me
+            self._count += 1
+            self._san._post_acquire(self)
+        return ok
+
+    def release(self) -> None:
+        me = threading.get_ident()
+        if self._owner != me:
+            self._san._violation(
+                f"lock '{self.name}' released by thread {me} which does "
+                f"not own it")
+        self._count -= 1
+        if self._count <= 0:
+            self._owner = None
+            self._count = 0
+            self._san._post_release(self)
+        self._lock.release()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+
+class LockSanitizer:
+    def __init__(self):
+        self._tls = threading.local()
+        # (held_name, acquired_name) -> occurrences
+        self.edges: Dict[Tuple[str, str], int] = {}
+        self.violations: List[str] = []
+        self._shared_threads: Dict[int, Set[int]] = {}
+        self._meta = threading.Lock()
+
+    # -- lock bookkeeping ------------------------------------------------
+    def _held(self) -> List[_SanLock]:
+        h = getattr(self._tls, "held", None)
+        if h is None:
+            h = self._tls.held = []
+        return h
+
+    def _pre_acquire(self, lock: _SanLock) -> None:
+        with self._meta:
+            for h in self._held():
+                if h is not lock:
+                    key = (h.name, lock.name)
+                    self.edges[key] = self.edges.get(key, 0) + 1
+
+    def _post_acquire(self, lock: _SanLock) -> None:
+        self._held().append(lock)
+
+    def _post_release(self, lock: _SanLock) -> None:
+        held = self._held()
+        if lock in held:
+            held.remove(lock)
+
+    def _violation(self, msg: str) -> None:
+        with self._meta:
+            self.violations.append(msg)
+
+    # -- lock wrapping / object instrumentation --------------------------
+    def wrap_lock(self, name: str, lock) -> _SanLock:
+        if isinstance(lock, _SanLock):
+            return lock
+        return _SanLock(self, name, lock)
+
+    def instrument(self, obj, guarded: Optional[Dict[str, str]] = None):
+        """Instrument ``obj``: wrap its guard locks and install a proxy
+        class verifying guarded-attribute discipline.  ``guarded`` maps
+        attr -> lock-attr; by default it is parsed from the class
+        source's ``#: guarded-by:`` annotations.  Returns ``obj``."""
+        cls = type(obj)
+        if getattr(cls, "_lsan_base", None) is not None:
+            return obj  # already instrumented
+        if guarded is None:
+            from .guarded import collect_guarded_source
+            src = textwrap.dedent(inspect.getsource(cls))
+            guarded = collect_guarded_source(src).get(cls.__name__, {})
+        if not guarded:
+            raise ValueError(
+                f"{cls.__name__} has no '#: guarded-by:' annotations "
+                f"and no explicit guarded= map")
+        for lockattr in sorted(set(guarded.values())):
+            raw = getattr(obj, lockattr)
+            object.__setattr__(obj, lockattr, self.wrap_lock(
+                f"{cls.__name__}.{lockattr}", raw))
+        with self._meta:
+            self._shared_threads[id(obj)] = {threading.get_ident()}
+        san = self
+
+        class _Proxy(cls):
+            _lsan_base = cls
+
+            def __getattribute__(self, name):
+                if name in guarded:
+                    san._record_access(self, guarded, name, "read")
+                return object.__getattribute__(self, name)
+
+            def __setattr__(self, name, value):
+                if name in guarded:
+                    san._record_access(self, guarded, name, "write")
+                object.__setattr__(self, name, value)
+
+        _Proxy.__name__ = cls.__name__ + "+locksan"
+        object.__setattr__(obj, "__class__", _Proxy)
+        return obj
+
+    def _record_access(self, obj, guarded: Dict[str, str], attr: str,
+                       kind: str) -> None:
+        lock = object.__getattribute__(obj, guarded[attr])
+        if isinstance(lock, _SanLock) and lock.held_by_me():
+            return
+        me = threading.get_ident()
+        with self._meta:
+            seen = self._shared_threads.setdefault(id(obj), set())
+            seen.add(me)
+            shared = len(seen) > 1
+        if shared:
+            base = getattr(type(obj), "_lsan_base", type(obj))
+            self._violation(
+                f"unguarded {kind} of {base.__name__}.{attr} "
+                f"(guarded-by: {guarded[attr]}) from thread {me}")
+
+    # -- reporting -------------------------------------------------------
+    def inversions(self) -> List[List[str]]:
+        """Cycles in the lock-order graph (each as the list of lock
+        names along the cycle)."""
+        graph: Dict[str, Set[str]] = {}
+        for (a, b) in self.edges:
+            graph.setdefault(a, set()).add(b)
+            graph.setdefault(b, set())
+        cycles: List[List[str]] = []
+        seen_cycles: Set[frozenset] = set()
+
+        def dfs(node: str, path: List[str], on_path: Set[str],
+                done: Set[str]):
+            on_path.add(node)
+            path.append(node)
+            for nxt in graph.get(node, ()):
+                if nxt in on_path:
+                    cyc = path[path.index(nxt):]
+                    key = frozenset(cyc)
+                    if key not in seen_cycles:
+                        seen_cycles.add(key)
+                        cycles.append(list(cyc))
+                elif nxt not in done:
+                    dfs(nxt, path, on_path, done)
+            on_path.discard(node)
+            path.pop()
+            done.add(node)
+
+        done: Set[str] = set()
+        for node in sorted(graph):
+            if node not in done:
+                dfs(node, [], set(), done)
+        return cycles
+
+    def report(self) -> dict:
+        return {"edges": {f"{a} -> {b}": n
+                          for (a, b), n in sorted(self.edges.items())},
+                "inversions": self.inversions(),
+                "violations": list(self.violations)}
+
+    def assert_clean(self) -> None:
+        inv = self.inversions()
+        if inv:
+            raise LockOrderInversion(
+                "lock-order inversion(s): "
+                + "; ".join(" -> ".join(c + [c[0]]) for c in inv))
+        if self.violations:
+            raise GuardedAccessViolation(
+                "guarded-attribute violations: "
+                + "; ".join(self.violations[:10]))
+
+
+def sanitize_serving_stack(queue=None, pipeline=None, wal=None,
+                           san: Optional[LockSanitizer] = None
+                           ) -> LockSanitizer:
+    """Instrument the standard serving trio (``MicroBatchQueue``,
+    ``EpochPipeline``, ``IngestWAL``) in one call — the shape the
+    fault-injection tests use."""
+    san = san or LockSanitizer()
+    for obj in (queue, pipeline, wal):
+        if obj is not None:
+            san.instrument(obj)
+    return san

@@ -1,0 +1,105 @@
+"""Pair-exactness checker for the hi/lo double-f32 kernel files.
+
+The device kernels carry keys, slopes and intercepts as f32 (hi, lo)
+pairs whose arithmetic must go through the fma-free error-free
+transforms (``_two_sum``/``_two_prod``/``_dd_*`` in
+``kernels/gap_place.py``) — that is what makes integer keys < 2^48
+exact on hardware without f64.  Two ways code silently breaks that
+contract:
+
+``pair-float64``
+    A float64 dtype inside a traced kernel function (``jnp.float64``,
+    ``astype('float64')``, ``np.float64``): accelerators demote or
+    refuse f64, so a device build silently loses the bits the pair
+    representation was carrying.
+``pair-raw-fma``
+    A raw ``a*b + c`` / ``a*b - c`` on pair-component operands (names
+    ending ``_h``/``_l``/``_hi``/``_lo`` or containing ``slope``/
+    ``icept``/``key``/``pair``) outside the designated error-free-
+    transform primitives: compilers may contract it to an fma (or
+    round the product) and the hi/lo invariant ``hi + lo == exact`` is
+    gone.  Use ``_dd_mul``/``_dd_add2`` or route through
+    ``_two_sum``/``_two_prod``.
+
+Approximate-by-design arithmetic (e.g. a window *base* whose error
+only costs an escape, never a wrong answer) is exempted with an inline
+suppression carrying the justification.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, Set
+
+from .core import Checker, Finding, LintContext
+from .tracesafe import _fn_index, discover_traced
+
+__all__ = ["PairExactChecker"]
+
+_EFT_PRIMITIVE_RE = re.compile(r"(two_sum|two_prod|_dd_)")
+_PAIRISH_RE = re.compile(r"(_h|_l|_hi|_lo)$|slope|icept|key|pair")
+
+
+def _leaf_names(expr: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            out.add(node.attr)
+    return out
+
+
+def _pairish(expr: ast.AST) -> bool:
+    return any(_PAIRISH_RE.search(n) for n in _leaf_names(expr))
+
+
+def _mentions_float64(node: ast.AST) -> bool:
+    if isinstance(node, ast.Attribute) and node.attr == "float64":
+        return True
+    if isinstance(node, ast.Constant) and node.value == "float64":
+        return True
+    return False
+
+
+class PairExactChecker(Checker):
+    rules = ("pair-float64", "pair-raw-fma")
+    path_patterns = ("*/kernels/gap_place.py", "*/kernels/lookup.py",
+                     "*/kernels/ops_gap.py", "*fixture*")
+
+    def check(self, ctx: LintContext) -> Iterable[Finding]:
+        traced = discover_traced(ctx.tree)
+        fns = _fn_index(ctx.tree)
+        for name in traced:
+            fn = fns.get(name)
+            if fn is None:
+                continue
+            if _EFT_PRIMITIVE_RE.search(name):
+                continue  # the error-free transforms themselves
+            yield from self._check_fn(ctx, fn)
+
+    def _check_fn(self, ctx: LintContext,
+                  fn: ast.FunctionDef) -> Iterable[Finding]:
+        where = f"traced function '{fn.name}'"
+        for node in ast.walk(fn):
+            if _mentions_float64(node):
+                yield Finding(
+                    "pair-float64", ctx.path, node.lineno,
+                    f"float64 intermediate in {where} — device pair "
+                    f"code must stay f32 hi/lo (accelerators demote "
+                    f"f64; the 2^48 contract silently breaks)")
+            if isinstance(node, ast.BinOp) and isinstance(
+                    node.op, (ast.Add, ast.Sub)):
+                for side in (node.left, node.right):
+                    if (isinstance(side, ast.BinOp)
+                            and isinstance(side.op, ast.Mult)
+                            and _pairish(side)):
+                        yield Finding(
+                            "pair-raw-fma", ctx.path, node.lineno,
+                            f"raw 'a*b {'+' if isinstance(node.op, ast.Add) else '-'} c' "
+                            f"on pair operands in {where} — fma "
+                            f"contraction / product rounding breaks the "
+                            f"hi/lo exactness contract; use _dd_mul/"
+                            f"_two_prod + _two_sum")
+                        break

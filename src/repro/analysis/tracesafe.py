@@ -1,0 +1,458 @@
+"""Trace-safety checker for device kernel modules.
+
+Scope: files under ``kernels/`` (plus lint fixtures).  The pass first
+discovers the *traced set* — functions that run under a JAX trace:
+
+* functions decorated ``@jax.jit`` / ``@functools.partial(jax.jit,
+  ...)``;
+* the function argument of ``pallas_call`` / ``shard_map`` /
+  ``jax.jit`` / ``jax.vmap`` call sites (through one level of
+  ``name = functools.partial(fn, ...)`` indirection);
+* transitively, every module function *referenced by name* inside a
+  traced body (covers ``fori_loop``/``vmap``/``scan`` bodies and plain
+  helper calls).
+
+Static (host) parameters are excluded from taint: keyword-only
+parameters, parameters annotated ``int``/``float``/``bool``/``str``,
+and names listed in ``static_argnames=``.  A local becomes traced-
+tainted when assigned from an expression referencing a tainted name —
+except through ``.shape``/``.dtype``/``.ndim``/``len()``, which
+produce host values under a trace.
+
+Rules
+-----
+``trace-host-sync``
+    Inside a traced function: ``np.*`` calls (host numpy forces a
+    device sync — or a trace error — mid-graph), ``.item()``, and
+    ``float()``/``int()``/``bool()`` applied to a traced-tainted
+    expression.
+``trace-py-branch``
+    Python ``if``/``while``/ternary on a traced-tainted test:
+    control flow must go through ``jnp.where``/``lax.cond``/
+    ``lax.fori_loop`` or the value must be a static.
+``trace-self-capture``
+    A traced function body referencing ``self``: closure capture of
+    mutable object state bakes the *current* attribute values into the
+    compiled executable (stale after any mutation) — hoist them into
+    locals before defining the traced function.
+``trace-dynamic-shape``
+    Array-constructor/reshape calls whose shape argument is traced-
+    tainted: data-dependent shapes retrace per batch (or fail to
+    trace); shapes must come from statics or shape buckets.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .core import Checker, Finding, LintContext
+
+__all__ = ["TraceSafetyChecker", "discover_traced"]
+
+_NP_ALIASES = {"np", "numpy", "onp"}
+_SHAPE_ATTRS = {"shape", "dtype", "ndim", "size"}
+_STATIC_ANNOTATIONS = {"int", "float", "bool", "str"}
+_SHAPE_FNS = {"zeros", "ones", "full", "empty", "arange", "reshape",
+              "broadcast_to", "iota", "broadcasted_iota"}
+_TRACE_WRAPPERS = {"pallas_call", "shard_map", "jit", "vmap", "pmap",
+                   "checkpoint", "remat", "grad", "value_and_grad"}
+
+
+def _call_name(func: ast.AST) -> Optional[str]:
+    """Terminal name of a call target: ``pl.pallas_call`` ->
+    ``pallas_call``, ``jit`` -> ``jit``."""
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+def _static_argnames(call: ast.Call) -> Set[str]:
+    out: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Constant) and isinstance(
+                        node.value, str):
+                    out.add(node.value)
+    return out
+
+
+def _is_jit_decorator(dec: ast.AST) -> Tuple[bool, Set[str]]:
+    """(is-jit, static names) for one decorator node."""
+    if isinstance(dec, (ast.Name, ast.Attribute)):
+        return _call_name(dec) == "jit", set()
+    if isinstance(dec, ast.Call):
+        name = _call_name(dec.func)
+        if name == "jit":
+            return True, _static_argnames(dec)
+        if name == "partial":
+            inner = [a for a in dec.args
+                     if _call_name(a) == "jit"
+                     or (isinstance(a, ast.Call)
+                         and _call_name(a.func) == "jit")]
+            if inner:
+                return True, _static_argnames(dec)
+    return False, set()
+
+
+def _fn_index(tree: ast.AST) -> Dict[str, ast.FunctionDef]:
+    """name -> FunctionDef for every def in the file (incl. nested;
+    last definition wins on name collision — fine for lint)."""
+    out: Dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out[node.name] = node
+    return out
+
+
+def _partial_bindings(tree: ast.AST) -> Dict[str, Tuple[str, Set[str]]]:
+    """``name = functools.partial(F, kw=...)`` / ``name = F`` ->
+    {name: (F, bound-kwarg-names)}."""
+    out: Dict[str, Tuple[str, Set[str]]] = {}
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            continue
+        tgt = node.targets[0].id
+        val = node.value
+        if isinstance(val, ast.Name):
+            out[tgt] = (val.id, set())
+        elif (isinstance(val, ast.Call)
+              and _call_name(val.func) == "partial" and val.args
+              and isinstance(val.args[0], ast.Name)):
+            out[tgt] = (val.args[0].id,
+                        {kw.arg for kw in val.keywords if kw.arg})
+    return out
+
+
+def _discover(tree: ast.AST
+              ) -> Tuple[Dict[str, Set[str]], Set[str], Set[str]]:
+    """Traced-set discovery: ``(traced, roots, callbacks)``.
+
+    ``traced`` maps fn-name -> extra static param names (from jit
+    ``static_argnames`` / partial kwargs).  ``roots`` are functions
+    entered with tracer arguments directly (jit decoration or wrapper
+    call sites); ``callbacks`` are functions *referenced by name
+    without being called* inside a traced body (``fori_loop``/``cond``/
+    ``scan`` bodies — invoked by lax with tracers).  Everything else in
+    ``traced`` is a helper whose parameter taint comes from its call
+    sites (interprocedural, see the checker)."""
+    fns = _fn_index(tree)
+    partials = _partial_bindings(tree)
+    traced: Dict[str, Set[str]] = {}
+    roots: Set[str] = set()
+
+    def mark(name: str, statics: Set[str]):
+        if name in partials:
+            target, bound = partials[name]
+            mark(target, statics | bound)
+            return
+        if name in fns:
+            traced.setdefault(name, set()).update(statics)
+            roots.add(name)
+
+    # decorator roots
+    for name, fn in fns.items():
+        for dec in fn.decorator_list:
+            is_jit, statics = _is_jit_decorator(dec)
+            if is_jit:
+                mark(name, statics)
+    # call-site roots: pallas_call/shard_map/jit/vmap(first_arg)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        cname = _call_name(node.func)
+        if cname not in _TRACE_WRAPPERS or not node.args:
+            continue
+        first = node.args[0]
+        statics = _static_argnames(node)
+        if isinstance(first, ast.Name):
+            mark(first.id, statics)
+        elif (isinstance(first, ast.Call)
+              and _call_name(first.func) == "partial" and first.args
+              and isinstance(first.args[0], ast.Name)):
+            mark(first.args[0].id,
+                 statics | {kw.arg for kw in first.keywords if kw.arg})
+    # transitive closure: a known fn name referenced inside a traced
+    # body is traced too.  Split by how it is reached: the target of a
+    # direct ``Call`` is a helper (call-site taint); a bare reference
+    # (function passed as a value — fori_loop/scan/cond bodies) is a
+    # callback, entered by lax with tracer arguments.
+    callbacks: Set[str] = set()
+    locals_cache: Dict[str, Set[str]] = {}
+
+    def local_binds(name: str) -> Set[str]:
+        """Names bound as plain variables inside ``fns[name]`` (params
+        + store-context names).  A reference to such a name is the
+        local, not the module function that happens to share it —
+        without this, ``upd = lo < hi`` in a bisect body drags an
+        unrelated host helper ``def upd(...)`` into the traced set."""
+        if name in locals_cache:
+            return locals_cache[name]
+        fn = fns[name]
+        out = {a.arg for a in (fn.args.posonlyargs + fn.args.args
+                               + fn.args.kwonlyargs)}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Name) and isinstance(
+                    node.ctx, (ast.Store, ast.Del)):
+                out.add(node.id)
+        locals_cache[name] = out
+        return out
+
+    changed = True
+    while changed:
+        changed = False
+        for name in list(traced):
+            fn = fns.get(name)
+            if fn is None:
+                continue
+            call_targets = set()
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call) and isinstance(
+                        node.func, ast.Name):
+                    call_targets.add(id(node.func))
+            binds = local_binds(name)
+            for node in ast.walk(fn):
+                if not (isinstance(node, ast.Name) and node.id in fns
+                        and node.id != name
+                        and isinstance(node.ctx, ast.Load)
+                        and node.id not in binds):
+                    continue
+                if node.id not in traced:
+                    traced[node.id] = set()
+                    changed = True
+                if (id(node) not in call_targets
+                        and node.id not in callbacks):
+                    callbacks.add(node.id)
+                    changed = True
+    return traced, roots, callbacks
+
+
+def discover_traced(tree: ast.AST) -> Dict[str, Set[str]]:
+    """Traced functions in one module -> {fn-name: extra static param
+    names} (kwonly and annotated params are added per-function at
+    check time)."""
+    return _discover(tree)[0]
+
+
+def _fn_static_params(fn: ast.FunctionDef, extra: Set[str]) -> Set[str]:
+    statics = set(extra)
+    for arg in fn.args.kwonlyargs:
+        statics.add(arg.arg)
+    for arg in (fn.args.args + fn.args.posonlyargs):
+        ann = arg.annotation
+        if (isinstance(ann, ast.Name)
+                and ann.id in _STATIC_ANNOTATIONS):
+            statics.add(arg.arg)
+        elif (isinstance(ann, ast.Constant)
+              and str(ann.value) in _STATIC_ANNOTATIONS):
+            statics.add(arg.arg)
+    return statics
+
+
+def _expr_tainted(expr: ast.AST, tainted: Set[str]) -> bool:
+    """Does ``expr`` reference a tainted name OUTSIDE a shape context
+    (``x.shape``/``x.dtype``/``x.ndim``/``len(x)`` are host values)."""
+    if isinstance(expr, ast.Attribute) and expr.attr in _SHAPE_ATTRS:
+        return False
+    if (isinstance(expr, ast.Call)
+            and isinstance(expr.func, ast.Name)
+            and expr.func.id == "len"):
+        return False
+    if isinstance(expr, ast.Name):
+        return expr.id in tainted
+    for child in ast.iter_child_nodes(expr):
+        if _expr_tainted(child, tainted):
+            return True
+    return False
+
+
+def _test_tainted(test: ast.AST, tainted: Set[str]) -> bool:
+    """Taint of a *branch test*: ``x is None`` / ``x is not None`` are
+    trace-time-static (identity never concretizes a tracer), so
+    identity comparisons are exempt even on tainted operands."""
+    if isinstance(test, ast.Compare) and all(
+            isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops):
+        return False
+    if isinstance(test, ast.BoolOp):
+        return any(_test_tainted(v, tainted) for v in test.values)
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _test_tainted(test.operand, tainted)
+    return _expr_tainted(test, tainted)
+
+
+def _pos_params(fn: ast.FunctionDef) -> List[str]:
+    return [a.arg for a in (fn.args.posonlyargs + fn.args.args)]
+
+
+def _local_taint(fn: ast.FunctionDef, seed: Set[str]) -> Set[str]:
+    """Seed params + assignment propagation to a local fixpoint."""
+    tainted = set(seed)
+    changed = True
+    while changed:
+        changed = False
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Assign):
+                continue
+            if not _expr_tainted(node.value, tainted):
+                continue
+            for t in node.targets:
+                els = (t.elts if isinstance(t, (ast.Tuple, ast.List))
+                       else [t])
+                for e in els:
+                    if isinstance(e, ast.Name) and e.id not in tainted:
+                        tainted.add(e.id)
+                        changed = True
+    return tainted
+
+
+class TraceSafetyChecker(Checker):
+    rules = ("trace-host-sync", "trace-py-branch", "trace-self-capture",
+             "trace-dynamic-shape")
+    path_patterns = ("*/kernels/*.py", "*fixture*")
+
+    def check(self, ctx: LintContext) -> Iterable[Finding]:
+        traced, roots, callbacks = _discover(ctx.tree)
+        fns = _fn_index(ctx.tree)
+        seeds = self._param_taint(traced, roots, callbacks, fns)
+        for name in traced:
+            fn = fns.get(name)
+            if fn is None:
+                continue
+            yield from self._check_traced_fn(ctx, fn, seeds[name])
+
+    # ------------------------------------------------------------------
+    def _param_taint(self, traced: Dict[str, Set[str]], roots: Set[str],
+                     callbacks: Set[str],
+                     fns: Dict[str, ast.FunctionDef]
+                     ) -> Dict[str, Set[str]]:
+        """Interprocedural fixpoint: which params of each traced
+        function actually receive tracers.
+
+        Roots and callbacks: every non-static parameter (they are
+        entered by jit/lax with tracer arguments).  Helpers: a param is
+        tainted only if some traced call site passes it a tainted
+        expression — branching on a trace-time-constant flag threaded
+        from a root's ``static_argnames`` is fine and common (the
+        ``key_wide``/``flat_w`` idiom)."""
+        statics = {n: _fn_static_params(fns[n], traced[n])
+                   for n in traced if n in fns}
+        seeds: Dict[str, Set[str]] = {}
+        for name in traced:
+            if name not in fns:
+                continue
+            if name in roots or name in callbacks:
+                params = set(_pos_params(fns[name])) | {
+                    a.arg for a in fns[name].args.kwonlyargs}
+                seeds[name] = params - statics[name]
+            else:
+                seeds[name] = set()
+        changed = True
+        while changed:
+            changed = False
+            for caller, seed in seeds.items():
+                fn = fns[caller]
+                tainted = _local_taint(fn, seed)
+                for node in ast.walk(fn):
+                    if not (isinstance(node, ast.Call)
+                            and isinstance(node.func, ast.Name)
+                            and node.func.id in seeds
+                            and node.func.id != caller):
+                        continue
+                    callee = node.func.id
+                    pos = _pos_params(fns[callee])
+                    pairs = list(zip(pos, node.args))
+                    pairs += [(kw.arg, kw.value) for kw in node.keywords
+                              if kw.arg]
+                    for pname, arg in pairs:
+                        if (pname in statics[callee]
+                                or pname in seeds[callee]):
+                            continue
+                        if _expr_tainted(arg, tainted):
+                            seeds[callee].add(pname)
+                            changed = True
+        return seeds
+
+    def _check_traced_fn(self, ctx: LintContext, fn: ast.FunctionDef,
+                         seed: Set[str]) -> Iterable[Finding]:
+        params = {a.arg for a in (fn.args.args + fn.args.posonlyargs
+                                  + fn.args.kwonlyargs)}
+        tainted = _local_taint(fn, seed)
+        where = f"traced function '{fn.name}'"
+
+        for node in ast.walk(fn):
+            # ---- trace-self-capture ------------------------------------
+            if isinstance(node, ast.Name) and node.id == "self":
+                if "self" not in params:
+                    yield Finding(
+                        "trace-self-capture", ctx.path, node.lineno,
+                        f"{where} closes over 'self' — mutable object "
+                        f"state is baked into the compiled executable; "
+                        f"hoist the needed attributes into locals first")
+
+            # ---- trace-py-branch ---------------------------------------
+            if isinstance(node, (ast.If, ast.While)):
+                if _test_tainted(node.test, tainted):
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    yield Finding(
+                        "trace-py-branch", ctx.path, node.lineno,
+                        f"Python '{kind}' on a traced value in {where} — "
+                        f"use jnp.where/lax.cond/lax.fori_loop (a traced "
+                        f"bool forces a host sync or a tracer error)")
+            if isinstance(node, ast.IfExp) and _test_tainted(node.test,
+                                                             tainted):
+                yield Finding(
+                    "trace-py-branch", ctx.path, node.lineno,
+                    f"Python ternary on a traced value in {where} — "
+                    f"use jnp.where")
+
+            # ---- trace-host-sync ---------------------------------------
+            if isinstance(node, ast.Call):
+                func = node.func
+                # np.* calls
+                if (isinstance(func, ast.Attribute)
+                        and isinstance(func.value, ast.Name)
+                        and func.value.id in _NP_ALIASES):
+                    if any(_expr_tainted(a, tainted)
+                           for a in list(node.args)
+                           + [kw.value for kw in node.keywords]):
+                        yield Finding(
+                            "trace-host-sync", ctx.path, node.lineno,
+                            f"host numpy call 'np.{func.attr}(...)' in "
+                            f"{where} — forces a device sync (or trace "
+                            f"error); use jnp or hoist to the host "
+                            f"wrapper")
+                # .item()
+                if (isinstance(func, ast.Attribute)
+                        and func.attr == "item"):
+                    yield Finding(
+                        "trace-host-sync", ctx.path, node.lineno,
+                        f"'.item()' in {where} — synchronous "
+                        f"device->host transfer inside a trace")
+                # float()/int()/bool() on tainted expressions
+                if (isinstance(func, ast.Name)
+                        and func.id in ("float", "int", "bool")
+                        and node.args
+                        and _expr_tainted(node.args[0], tainted)):
+                    yield Finding(
+                        "trace-host-sync", ctx.path, node.lineno,
+                        f"'{func.id}()' on a traced value in {where} — "
+                        f"concretizes the tracer (host sync / trace "
+                        f"error); keep it a jnp array or make the input "
+                        f"static")
+
+            # ---- trace-dynamic-shape -----------------------------------
+            if isinstance(node, ast.Call):
+                cname = _call_name(node.func)
+                if cname in _SHAPE_FNS and node.args:
+                    shape_arg = node.args[0]
+                    if _expr_tainted(shape_arg, tainted):
+                        yield Finding(
+                            "trace-dynamic-shape", ctx.path, node.lineno,
+                            f"'{cname}' with a traced-value shape in "
+                            f"{where} — data-dependent shapes retrace "
+                            f"per batch; derive shapes from statics / "
+                            f"shape buckets")

@@ -338,6 +338,10 @@ class GappedArray:
     def _insert_at(self, key: float, payload: int, p: int) -> str:
         """insert() body with the predicted slot already computed.
 
+        caller-invalidates: both call sites (``insert``,
+        ``insert_batch``) bump the epoch via ``_invalidate()`` before
+        dispatching here.
+
         Chain writes land in the CSRLinks pending overlay (O(chain)),
         merged into the flat tables lazily — scalar insert loops and
         insert_batch's contested replay never pay a per-insert O(m)
@@ -453,7 +457,10 @@ class GappedArray:
         """One-shot carried-key repair: every unoccupied slot gets the key
         of the first occupied slot to its right (+inf past the last).
         Occupied keys are ascending, so the suffix minimum IS the nearest
-        occupied key to the right — one O(m) reverse cummin."""
+        occupied key to the right — one O(m) reverse cummin.
+
+        caller-invalidates: only reached from ``insert_batch``, after
+        its leading ``_invalidate()``."""
         x = np.where(self.occupied, self.slot_key, np.inf)
         self.slot_key = np.minimum.accumulate(x[::-1])[::-1]
 

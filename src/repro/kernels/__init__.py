@@ -244,6 +244,31 @@ entry point, so a recovered index re-derives device state through the
 same freeze/delta/fused machinery — nothing in this layer needs to be
 crash-aware.
 
+Machine-checked invariants (``repro.analysis``)
+-----------------------------------------------
+Two contracts in this package are enforced by the repo's static
+analyzer (``scripts/lint.sh`` -> ``python -m repro.analysis``, part of
+tier-1), not just by convention:
+
+* **trace-safety** (rules ``trace-host-sync``, ``trace-py-branch``,
+  ``trace-dyn-shape``, ``trace-self-capture``, ``trace-np-call``):
+  inside jit-compiled functions and ``fori_loop``/``scan``/``cond``
+  bodies, no host syncs (``.block_until_ready()``, ``float()``/
+  ``int()``/``bool()`` on tracers), no Python ``if``/``while`` on
+  traced values (identity tests like ``x is None`` are exempt — they
+  never concretize), no data-dependent ``.reshape``/``np.*`` on traced
+  operands, and no ``self`` capture in traced closures (it pins host
+  state into the compiled graph).  The checker threads taint
+  interprocedurally, so the package's static-flag idiom (``key_wide``,
+  ``n_slots``... passed from ``static_argnames`` roots through
+  helpers) is understood, not suppressed.
+* **pair-exactness** (rules ``pair-f64-const``, ``pair-raw-fma``): in
+  ``gap_place.py`` / ``lookup.py`` / ``ops_gap.py``, no float64
+  intermediates (TPU demotes them silently) and no raw ``a * b + c``
+  where the hi/lo pair contract requires ``two_sum``/``two_prod``
+  error-free transforms.  Deliberately-approximate sites carry an
+  inline ``# repro-lint: disable=... -- why`` justification.
+
 Migration notes
 ---------------
 ``QueryEngine.from_index(idx)`` + manual refreeze-after-mutation is the

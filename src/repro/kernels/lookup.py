@@ -279,7 +279,11 @@ def _fused_kernel(tile_block_ref, *args, w_tile, win_chunk, flat_w,
         dx = q - jnp.take(segk_ref[:], seg)
         if key_wide:
             dx = dx + (ql - jnp.take(segkl_ref[:], seg))
+        # approximate window BASE by design: fma contraction only shifts
+        # lo0 by <=1 slot and the rank==0/rank==W escape flags re-resolve
+        # any window miss, so exactness never depends on this product
         lo0 = jnp.clip(
+            # repro-lint: disable=pair-raw-fma -- window base is approximate by contract; escapes re-resolve
             jnp.floor(jnp.take(slope_ref[:], seg) * dx
                       + jnp.take(iclo_ref[:], seg)),
             0.0, float(n_slots - 1)).astype(jnp.int32)

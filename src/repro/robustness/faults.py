@@ -24,6 +24,7 @@ triggered, so a test can assert the exact fault sequence.
 from __future__ import annotations
 
 import os
+import threading
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -64,7 +65,12 @@ class FaultInjector:
     ``check(site)`` counts the call as one occurrence of ``site`` and
     fires the scheduled kind, if any (see module doc for kinds).  For
     ``"torn_tail"`` a WAL path must be registered (``wal_path=`` or
-    ``register_wal``)."""
+    ``register_wal``).
+
+    Thread-safe: sites are checked from the caller thread and the
+    queue's deadline-timer thread concurrently; occurrence counting
+    stays exact under ``_lock`` (the slow-sleep itself runs unlocked —
+    a fault must not serialize the stack it is perturbing)."""
 
     def __init__(self, schedule: Dict[Tuple[str, int], str], *,
                  slow_s: float = 0.05, torn_bytes: int = 1,
@@ -73,19 +79,22 @@ class FaultInjector:
         self.slow_s = float(slow_s)
         self.torn_bytes = int(torn_bytes)
         self.wal_path = wal_path
-        self.fired: List[Tuple[str, int, str]] = []
-        self._counts: Dict[str, int] = {}
+        self._lock = threading.Lock()
+        self.fired: List[Tuple[str, int, str]] = []  #: guarded-by: _lock
+        self._counts: Dict[str, int] = {}            #: guarded-by: _lock
 
     def register_wal(self, path) -> None:
         self.wal_path = str(path)
 
     def check(self, site: str) -> Optional[str]:
-        i = self._counts.get(site, 0)
-        self._counts[site] = i + 1
-        kind = self.schedule.get((site, i))
+        with self._lock:
+            i = self._counts.get(site, 0)
+            self._counts[site] = i + 1
+            kind = self.schedule.get((site, i))
+            if kind is not None:
+                self.fired.append((site, i, kind))
         if kind is None:
             return None
-        self.fired.append((site, i, kind))
         if kind == "crash":
             raise InjectedCrash(f"injected crash at {site}#{i}")
         if kind == "abort":
@@ -120,9 +129,10 @@ class InvariantAuditor:
     pin backing the served snapshot."""
 
     def __init__(self):
-        self.checks = 0
-        self.violations: List[str] = []
-        self._last_epoch: Dict[int, int] = {}
+        self._lock = threading.Lock()
+        self.checks = 0                        #: guarded-by: _lock
+        self.violations: List[str] = []        #: guarded-by: _lock
+        self._last_epoch: Dict[int, int] = {}  #: guarded-by: _lock
 
     # ------------------------------------------------------------------
     def _audit_gapped(self, label: str, ga) -> List[str]:
@@ -156,10 +166,11 @@ class InvariantAuditor:
         elif getattr(index, "gapped", None) is not None:
             v += self._audit_gapped("index", index.gapped)
         epoch = int(index.epoch)
-        last = self._last_epoch.get(id(index))
-        if last is not None and epoch < last:
-            v.append(f"epoch went backwards: {last} -> {epoch}")
-        self._last_epoch[id(index)] = epoch
+        with self._lock:
+            last = self._last_epoch.get(id(index))
+            if last is not None and epoch < last:
+                v.append(f"epoch went backwards: {last} -> {epoch}")
+            self._last_epoch[id(index)] = epoch
         if pipeline is not None:
             if pipeline.epoch > epoch:
                 v.append(f"served epoch {pipeline.epoch} ahead of live "
@@ -170,8 +181,9 @@ class InvariantAuditor:
                 if not g.pinned:
                     v.append("served snapshot lost its pin while "
                              "installed")
-        self.checks += 1
-        self.violations += v
+        with self._lock:
+            self.checks += 1
+            self.violations += v
         return v
 
     def assert_ok(self, index, pipeline=None) -> None:

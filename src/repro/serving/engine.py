@@ -110,18 +110,21 @@ class MicroBatchQueue:
         self.faults = faults
         self.auditor = auditor
         self.audit_every = int(audit_every)
-        self._lookups: list = []   # (ticket, keys)
-        self._ingests: list = []   # (ticket, keys, payloads)
-        self._results: dict = {}
-        self._next_ticket = 0
+        self._lookups: list = []   #: guarded-by: _lock
+        self._ingests: list = []   #: guarded-by: _lock
+        self._results: dict = {}   #: guarded-by: _lock
+        self._next_ticket = 0      #: guarded-by: _lock
         # reentrant: the deadline timer thread calls flush(); result()
         # nests flush() under the same lock on the caller thread
         self._lock = threading.RLock()
+        #: guarded-by: _lock
         self._deadline_timer: Optional[threading.Timer] = None
+        #: guarded-by: _lock
         self._async_error: Optional[BaseException] = None
         # per-bucket reused staging buffers (donated-buffer pattern):
         # one f64 concat target per padded shape, never re-allocated
-        self._staging: dict = {}
+        self._staging: dict = {}   #: guarded-by: _lock
+        #: guarded-by: _lock
         self.stats = {"flushes": 0, "lookup_dispatches": 0,
                       "ingest_dispatches": 0, "coalesced_lookups": 0,
                       "coalesced_ingests": 0, "deadline_flushes": 0,
@@ -129,19 +132,23 @@ class MicroBatchQueue:
                       "host_fallbacks": 0}
 
     def _ticket(self) -> int:
+        """lock-held: _lock (every issuer is a locked public method)."""
         t = self._next_ticket
         self._next_ticket += 1
         return t
 
     def _raise_async_error(self) -> None:
+        """lock-held: _lock"""
         err, self._async_error = self._async_error, None
         if err is not None:
             raise err
 
     def _depth(self) -> int:
+        """lock-held: _lock"""
         return len(self._lookups) + len(self._ingests)
 
     def _shed(self, kind: str) -> int:
+        """lock-held: _lock (called from the locked submit paths)."""
         t = self._ticket()
         self._results[t] = Overloaded(
             kind=kind, depth=self._depth(),
@@ -151,6 +158,7 @@ class MicroBatchQueue:
         return t
 
     def _arm_deadline(self) -> None:
+        """lock-held: _lock (called from the locked submit paths)."""
         if self.max_wait_ms is None or self._deadline_timer is not None:
             return
         t = threading.Timer(self.max_wait_ms / 1e3, self._deadline_fire)
@@ -159,6 +167,7 @@ class MicroBatchQueue:
         t.start()
 
     def _cancel_deadline(self) -> None:
+        """lock-held: _lock (flush()/close() call under their lock)."""
         t, self._deadline_timer = self._deadline_timer, None
         if t is not None:
             t.cancel()
@@ -212,6 +221,7 @@ class MicroBatchQueue:
         return b
 
     def _stage(self, name: str, bucket: int, dtype) -> np.ndarray:
+        """lock-held: _lock (only reached from flush())."""
         buf = self._staging.get((name, bucket))
         if buf is None:
             buf = np.empty(bucket, dtype)
@@ -220,7 +230,11 @@ class MicroBatchQueue:
 
     def _ingest_with_retry(self, keys, pays):
         """Dispatch one coalesced ingest with retry-with-backoff and a
-        final host-path fallback (see class doc).  Retries transient
+        final host-path fallback (see class doc).
+
+        lock-held: _lock (only reached from flush()).
+
+        Retries transient
         ``RuntimeError``s only — ``InjectedCrash`` (process death) and
         caller bugs (``KeyError``/``ValueError``: duplicate keys, shape
         mismatches) propagate immediately, since replaying them cannot

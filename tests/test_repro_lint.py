@@ -1,0 +1,511 @@
+"""repro-lint analyzer tests: per-rule fixtures (true positive +
+suppressed + clean), suppression syntax, the CLI, and the dogfood
+guarantee that the repo itself lints clean."""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.core import (default_checkers, lint_paths,
+                                 lint_source, parse_suppressions)
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def run_lint(source, path="src/repro/core/gaps_fixture.py", rules=None):
+    src = textwrap.dedent(source)
+    findings = lint_source(src, path, default_checkers(), rules=rules)
+    return [f for f in findings if not f.suppressed]
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# epoch-bump
+# ---------------------------------------------------------------------------
+
+EPOCH_BAD = """
+class GappedArray:
+    def _invalidate(self):
+        self.version += 1
+
+    def clobber(self, i, key):
+        self.slot_key[i] = key
+"""
+
+EPOCH_GOOD = """
+class GappedArray:
+    def _invalidate(self):
+        self.version += 1
+
+    def clobber(self, i, key):
+        self._invalidate()
+        self.slot_key[i] = key
+"""
+
+EPOCH_MARKED = """
+class GappedArray:
+    def _clobber_inner(self, i, key):
+        \"\"\"caller-invalidates: clobber() bumps first.\"\"\"
+        self.slot_key[i] = key
+"""
+
+
+class TestEpochBump:
+    def test_true_positive(self):
+        fs = run_lint(EPOCH_BAD)
+        assert "epoch-bump" in rules_of(fs)
+        assert any("clobber" in f.message for f in fs)
+
+    def test_bump_evidence_is_clean(self):
+        assert not run_lint(EPOCH_GOOD)
+
+    def test_caller_invalidates_marker_is_clean(self):
+        assert not run_lint(EPOCH_MARKED)
+
+    def test_version_write_counts_as_evidence(self):
+        # the retrain idiom: replace arrays, bump .version directly
+        src = """
+        class Index:
+            def retrain(self):
+                old = self.epoch
+                new = build()
+                new.gapped.version = old + 1
+                self.gapped = new.gapped
+        """
+        assert not run_lint(src, path="src/repro/core/handle_fixture.py")
+
+    def test_suppression(self):
+        src = EPOCH_BAD.replace(
+            "self.slot_key[i] = key",
+            "self.slot_key[i] = key  "
+            "# repro-lint: disable=epoch-bump -- test waiver")
+        assert not run_lint(src)
+
+
+# ---------------------------------------------------------------------------
+# snapshot-mutate
+# ---------------------------------------------------------------------------
+
+SNAP_BAD = """
+class GapSnapshot:
+    def poke(self, x):
+        self.n_keys = x
+"""
+
+PIN_BAD = """
+def serve(index):
+    snap = index.gapped.pin_snapshot()
+    snap.epoch = 0
+    return snap
+"""
+
+
+class TestSnapshotMutate:
+    def test_method_mutation(self):
+        fs = run_lint(SNAP_BAD)
+        assert rules_of(fs) == {"snapshot-mutate"}
+
+    def test_allowed_methods_clean(self):
+        src = """
+        class GapSnapshot:
+            def release(self):
+                self._cell = None
+        """
+        assert not run_lint(src)
+
+    def test_pinned_name_mutation(self):
+        fs = run_lint(PIN_BAD)
+        assert rules_of(fs) == {"snapshot-mutate"}
+
+    def test_suppressed(self):
+        src = PIN_BAD.replace(
+            "snap.epoch = 0",
+            "snap.epoch = 0  # repro-lint: disable=snapshot-mutate -- x")
+        assert not run_lint(src)
+
+
+# ---------------------------------------------------------------------------
+# trace-safety rules
+# ---------------------------------------------------------------------------
+
+TRACE_FIXTURE = "src/repro/kernels/lint_fixture.py"
+
+HOST_SYNC_BAD = """
+import jax, numpy as np
+
+@jax.jit
+def f(x):
+    return np.asarray(x) + 1
+"""
+
+PY_BRANCH_BAD = """
+import jax
+
+@jax.jit
+def f(x):
+    if x > 0:
+        return x
+    return -x
+"""
+
+SELF_CAPTURE_BAD = """
+import jax
+
+class K:
+    def build(self):
+        def kern(x):
+            return x + self.offset
+        return jax.jit(kern)
+"""
+
+DYN_SHAPE_BAD = """
+import jax, jax.numpy as jnp
+
+@jax.jit
+def f(n):
+    return jnp.arange(n)
+"""
+
+STATIC_THREADING_OK = """
+import functools, jax, jax.numpy as jnp
+
+def helper(x, flag):
+    if flag:
+        return x * 2
+    return x
+
+@functools.partial(jax.jit, static_argnames=("flag",))
+def f(x, flag):
+    return helper(x, flag)
+"""
+
+CALLBACK_TAINTED = """
+import jax
+
+@jax.jit
+def f(x, n):
+    def body(i, c):
+        if c > 0:
+            return c
+        return c + 1
+    return jax.lax.fori_loop(0, 3, body, x)
+"""
+
+
+class TestTraceSafety:
+    def test_host_sync(self):
+        fs = run_lint(HOST_SYNC_BAD, path=TRACE_FIXTURE)
+        assert "trace-host-sync" in rules_of(fs)
+
+    def test_py_branch(self):
+        fs = run_lint(PY_BRANCH_BAD, path=TRACE_FIXTURE)
+        assert "trace-py-branch" in rules_of(fs)
+
+    def test_self_capture(self):
+        fs = run_lint(SELF_CAPTURE_BAD, path=TRACE_FIXTURE)
+        assert "trace-self-capture" in rules_of(fs)
+
+    def test_dynamic_shape(self):
+        fs = run_lint(DYN_SHAPE_BAD, path=TRACE_FIXTURE)
+        assert "trace-dynamic-shape" in rules_of(fs)
+
+    def test_static_flag_threaded_through_helper_is_clean(self):
+        # interprocedural: `flag` is static at the root, so branching
+        # on it inside the helper is fine (the key_wide idiom)
+        assert not run_lint(STATIC_THREADING_OK, path=TRACE_FIXTURE)
+
+    def test_callback_params_are_tainted(self):
+        # a fori_loop body's carry IS traced even though the body is
+        # never called directly
+        fs = run_lint(CALLBACK_TAINTED, path=TRACE_FIXTURE)
+        assert "trace-py-branch" in rules_of(fs)
+
+    def test_shape_access_cuts_taint(self):
+        src = """
+        import jax, numpy as np
+
+        @jax.jit
+        def f(x):
+            trips = int(np.log2(max(x.shape[0], 2)))
+            return x * trips
+        """
+        assert not run_lint(src, path=TRACE_FIXTURE)
+
+    def test_is_none_test_is_static(self):
+        src = """
+        import jax
+
+        @jax.jit
+        def f(x, t=None):
+            if t is not None:
+                return x + t
+            return x
+        """
+        assert not run_lint(src, path=TRACE_FIXTURE)
+
+    def test_outside_kernels_not_checked(self):
+        fs = run_lint(PY_BRANCH_BAD, path="src/repro/core/other.py")
+        assert "trace-py-branch" not in rules_of(fs)
+
+    def test_suppressed(self):
+        src = PY_BRANCH_BAD.replace(
+            "    if x > 0:",
+            "    # repro-lint: disable=trace-py-branch -- test waiver\n"
+            "    if x > 0:")
+        assert not run_lint(src, path=TRACE_FIXTURE)
+
+
+# ---------------------------------------------------------------------------
+# guarded-by
+# ---------------------------------------------------------------------------
+
+GUARDED_BAD = """
+import threading
+
+class Q:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items = []   #: guarded-by: _lock
+
+    def pop(self):
+        return self._items.pop()
+"""
+
+GUARDED_WITH = """
+import threading
+
+class Q:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items = []   #: guarded-by: _lock
+
+    def pop(self):
+        with self._lock:
+            return self._items.pop()
+"""
+
+GUARDED_DOC = """
+import threading
+
+class Q:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items = []   #: guarded-by: _lock
+
+    def pop(self):
+        \"\"\"lock-held: _lock\"\"\"
+        return self._items.pop()
+"""
+
+GUARDED_NESTED_DEF = """
+import threading
+
+class Q:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items = []   #: guarded-by: _lock
+
+    def pop(self):
+        with self._lock:
+            def later():
+                return self._items.pop()
+            return later
+"""
+
+
+class TestGuardedBy:
+    def test_unguarded_access(self):
+        fs = run_lint(GUARDED_BAD)
+        assert rules_of(fs) == {"guarded-by"}
+
+    def test_with_lock_clean(self):
+        assert not run_lint(GUARDED_WITH)
+
+    def test_lock_held_doc_clean(self):
+        assert not run_lint(GUARDED_DOC)
+
+    def test_nested_def_does_not_inherit_held(self):
+        # the closure runs later, on an unknown thread
+        fs = run_lint(GUARDED_NESTED_DEF)
+        assert rules_of(fs) == {"guarded-by"}
+
+    def test_annotation_line_above(self):
+        src = GUARDED_BAD.replace(
+            "        self._items = []   #: guarded-by: _lock",
+            "        #: guarded-by: _lock\n        self._items = []")
+        assert rules_of(run_lint(src)) == {"guarded-by"}
+
+    def test_suppressed(self):
+        src = GUARDED_BAD.replace(
+            "        return self._items.pop()",
+            "        return self._items.pop()  "
+            "# repro-lint: disable=guarded-by -- single-threaded path")
+        assert not run_lint(src)
+
+
+# ---------------------------------------------------------------------------
+# pair-exactness
+# ---------------------------------------------------------------------------
+
+PAIR_FIXTURE = "src/repro/kernels/gap_place_fixture.py"
+
+PAIR_F64_BAD = """
+import jax, jax.numpy as jnp
+
+@jax.jit
+def f(key_hi, key_lo):
+    return key_hi.astype(jnp.float64) + key_lo
+"""
+
+PAIR_FMA_BAD = """
+import jax
+
+@jax.jit
+def f(slope, dx, icept):
+    return slope * dx + icept
+"""
+
+PAIR_EFT_OK = """
+import jax
+
+def _two_sum(a, b):
+    s = a + b
+    t = s - a
+    return s, (a - (s - t)) + (b - t)
+
+@jax.jit
+def f(key_hi, key_lo):
+    s, e = _two_sum(key_hi, key_lo)
+    return s
+"""
+
+
+class TestPairExact:
+    def test_float64(self):
+        fs = run_lint(PAIR_F64_BAD, path=PAIR_FIXTURE)
+        assert "pair-float64" in rules_of(fs)
+
+    def test_raw_fma(self):
+        fs = run_lint(PAIR_FMA_BAD, path=PAIR_FIXTURE)
+        assert "pair-raw-fma" in rules_of(fs)
+
+    def test_eft_primitives_exempt(self):
+        assert not run_lint(PAIR_EFT_OK, path=PAIR_FIXTURE)
+
+    def test_non_pairish_names_clean(self):
+        src = PAIR_FMA_BAD.replace("slope", "a").replace(
+            "dx", "b").replace("icept", "c")
+        assert not run_lint(src, path=PAIR_FIXTURE)
+
+    def test_only_kernel_pair_files_checked(self):
+        fs = run_lint(PAIR_FMA_BAD, path="src/repro/core/handle2.py")
+        assert "pair-raw-fma" not in rules_of(fs)
+
+    def test_suppressed(self):
+        src = PAIR_FMA_BAD.replace(
+            "    return slope * dx + icept",
+            "    # repro-lint: disable=pair-raw-fma -- test waiver\n"
+            "    return slope * dx + icept")
+        assert not run_lint(src, path=PAIR_FIXTURE)
+
+
+# ---------------------------------------------------------------------------
+# suppression machinery + framework
+# ---------------------------------------------------------------------------
+
+class TestSuppressions:
+    def test_parse_same_line_and_above(self):
+        comments, line, file_ = parse_suppressions(
+            "x = 1  # repro-lint: disable=a,b -- why\n"
+            "# repro-lint: disable-file=c\n")
+        assert line[1] == {"a", "b"}
+        assert file_ == {"c"}
+
+    def test_disable_all(self):
+        src = EPOCH_BAD + "\n# repro-lint: disable-file=all\n"
+        assert not run_lint(src)
+
+    def test_suppressed_findings_still_counted(self):
+        src = EPOCH_BAD.replace(
+            "self.slot_key[i] = key",
+            "self.slot_key[i] = key  # repro-lint: disable=epoch-bump -- x")
+        all_f = lint_source(textwrap.dedent(src),
+                            "src/repro/core/gaps_fixture.py",
+                            default_checkers())
+        assert [f for f in all_f if f.suppressed]
+
+    def test_rules_filter(self):
+        fs = run_lint(EPOCH_BAD, rules=["guarded-by"])
+        assert not fs
+
+    def test_syntax_error_is_a_finding(self):
+        fs = run_lint("def broken(:\n")
+        assert rules_of(fs) == {"parse-error"}
+
+
+class TestCLI:
+    def _run(self, *args):
+        return subprocess.run(
+            [sys.executable, "-m", "repro.analysis", *args],
+            capture_output=True, text=True, cwd=str(REPO),
+            env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+
+    def test_repo_is_clean(self):
+        # THE dogfood guarantee: the analyzer passes on its own repo
+        p = self._run("src", "tests")
+        assert p.returncode == 0, p.stdout + p.stderr
+
+    def test_violation_fixture_fails(self, tmp_path):
+        bad = tmp_path / "src" / "repro" / "core" / "gaps_fixture.py"
+        bad.parent.mkdir(parents=True)
+        bad.write_text(textwrap.dedent(EPOCH_BAD))
+        p = self._run(str(bad))
+        assert p.returncode == 1
+        assert "epoch-bump" in p.stdout
+
+    def test_json_output(self, tmp_path):
+        bad = tmp_path / "guard_fixture.py"
+        bad.write_text(textwrap.dedent(GUARDED_BAD))
+        p = self._run("--json", str(bad))
+        data = json.loads(p.stdout)
+        assert data["findings"][0]["rule"] == "guarded-by"
+
+    def test_list_rules(self):
+        p = self._run("--list-rules")
+        out = p.stdout
+        for rule in ("epoch-bump", "snapshot-mutate", "trace-host-sync",
+                     "guarded-by", "pair-raw-fma"):
+            assert rule in out
+        assert p.returncode == 0
+
+
+class TestLintPaths:
+    def test_walks_directories(self, tmp_path):
+        d = tmp_path / "pkg"
+        d.mkdir()
+        (d / "ok.py").write_text("x = 1\n")
+        (d / "bad_fixture.py").write_text(textwrap.dedent(GUARDED_BAD))
+        findings = lint_paths([str(d)], default_checkers())
+        assert any(f.rule == "guarded-by" for f in findings)
+
+    def test_seeded_fixtures_per_rule_all_detected(self, tmp_path):
+        seeds = {
+            "epoch-bump": ("core/f1_fixture.py", EPOCH_BAD),
+            "snapshot-mutate": ("core/f2_fixture.py", SNAP_BAD),
+            "trace-py-branch": ("kernels/f3_fixture.py", PY_BRANCH_BAD),
+            "guarded-by": ("core/f4_fixture.py", GUARDED_BAD),
+            "pair-raw-fma": ("kernels/f5_fixture.py", PAIR_FMA_BAD),
+        }
+        for rule, (rel, src) in seeds.items():
+            p = tmp_path / rel
+            p.parent.mkdir(parents=True, exist_ok=True)
+            p.write_text(textwrap.dedent(src))
+        findings = lint_paths([str(tmp_path)], default_checkers())
+        assert set(seeds) <= {f.rule for f in findings}

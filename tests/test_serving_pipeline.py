@@ -447,3 +447,133 @@ def test_step_watchdog_exception_exit_cancels_and_joins():
     assert fired == [5] and wd2.events[0]["step"] == 5
     # close() after the timer already fired joins cleanly (no hang)
     wd2.close()
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 10 satellites: regressions for the concurrency fixes repro-lint /
+# locksan surfaced, and the MDL-drift retrain daemon
+
+
+def test_snapshot_refcount_survives_concurrent_publish():
+    """Regression: ``publish()`` dropping the pipeline's reference to
+    the old snapshot must NOT unpin it under a reader that retained it
+    — the pin (and its copy-on-write protection) drops only when the
+    last reference goes."""
+    idx, keys = _mk_index(n=6_000)
+    pipe = EpochPipeline(idx)
+    snap = pipe._snapshot
+    snap.retain()                      # in-flight reader
+    pre = snap.lookup(keys[:64])
+    try:
+        pipe.ingest(_fresh(keys, 64), np.arange(64, dtype=np.int64))
+        pipe.publish()                 # pipeline drops its old-pin ref
+        assert snap._snap.pinned       # reader's retain keeps it alive
+        mid = snap.lookup(keys[:64])   # still the frozen epoch, exact
+        np.testing.assert_array_equal(np.asarray(pre.payloads),
+                                      np.asarray(mid.payloads))
+        assert mid.epoch == pre.epoch
+    finally:
+        snap.release()
+    assert not snap._snap.pinned       # last ref gone -> unpinned
+    with pytest.raises(RuntimeError):
+        snap.retain()                  # a released snapshot stays dead
+    pipe.close()
+
+
+def test_pipeline_stats_consistent_under_concurrent_readers():
+    """Regression: ``stats`` / ``lag`` reads raced ingest before the
+    pipeline lock — counters now reconcile exactly against the calls
+    issued, with reader threads hammering lookup()+lag the whole
+    time."""
+    idx, keys = _mk_index(n=6_000)
+    pipe = EpochPipeline(idx, publish_every=3)
+    fresh = _fresh(keys, 256)
+    errors, counts = [], []
+    stop = threading.Event()
+
+    def reader():
+        n = 0
+        try:
+            while not stop.is_set():
+                res = pipe.lookup(keys[:16])
+                assert res.epoch <= pipe.live_epoch
+                assert pipe.lag >= 0
+                n += 1
+        except Exception as e:      # noqa: BLE001 - surfaced below
+            errors.append(e)
+        counts.append(n)
+
+    threads = [threading.Thread(target=reader) for _ in range(3)]
+    for t in threads:
+        t.start()
+    try:
+        for i in range(8):
+            pipe.ingest(fresh[i * 32: (i + 1) * 32],
+                        (50_000 + np.arange(32) + i * 32).astype(np.int64))
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    assert not errors, errors
+    s = pipe.stats
+    assert s["snapshot_lookups"] + s["live_lookups"] == sum(counts)
+    assert s["ingests"] == 8 and s["publishes"] == 8 // 3
+    assert pipe.lag == 8 % 3           # un-published tail, exact
+    pipe.close()
+
+
+def test_mdl_drift_retrain_trigger_fires_and_resets_baseline():
+    """The PR-9-residual closer: out-of-domain tail appends grow
+    ``Index.mdl()`` (keys chain past the trained domain); the pipeline
+    daemon sees the growth at publish, retrains, and resets its
+    baseline so a quiesced workload never re-fires."""
+    rng = np.random.default_rng(3)
+    keys = np.unique(rng.choice(2 ** 21, 20_000, replace=False)
+                     ).astype(np.float64) * 2.0
+    idx = Index.build(keys, method="pgm", eps=64, gap_rho=0.15)
+    pipe = EpochPipeline(idx, retrain_mdl_drift=0.02)
+    base0 = pipe._mdl_baseline
+    assert base0 is not None
+    step = float(np.mean(np.diff(keys)))
+    tail = keys[-1] + step * 10.0 * (1.0 + np.arange(800))
+    tail = np.rint(tail) * 2.0         # stay on the even grid
+    fired_at = None
+    for i in range(4):
+        pipe.ingest(tail[i * 200: (i + 1) * 200],
+                    (1_000_000 + np.arange(200) + i * 200).astype(np.int64))
+        pipe.publish()
+        if pipe.stats["mdl_retrains"]:
+            fired_at = i
+            break
+    assert fired_at is not None, "drift never crossed the threshold"
+    assert pipe.stats["mdl_checks"] == fired_at + 1
+    assert pipe.stats["retrains"] >= 1          # the real retrain ran
+    # baseline reset to the post-retrain score: quiesced -> no re-fire
+    assert pipe._mdl_baseline == pytest.approx(pipe._mdl_score())
+    pipe.publish()                              # serve the retrained epoch
+    got = pipe.lookup(np.concatenate([keys[:200],
+                                      tail[:(fired_at + 1) * 200]]))
+    assert got.found.all()
+    n_fired = pipe.stats["mdl_retrains"]
+    pipe.ingest(_fresh(keys, 32),
+                (77_000 + np.arange(32)).astype(np.int64))
+    pipe.publish()
+    assert pipe.stats["mdl_retrains"] == n_fired
+    pipe.close()
+
+
+def test_mdl_drift_check_cadence():
+    """``retrain_check_every=N`` scores every N-th publish only (the
+    score walks the live set — the knob bounds that cost), and a slack
+    threshold never fires."""
+    idx, keys = _mk_index(n=6_000)
+    pipe = EpochPipeline(idx, retrain_mdl_drift=10.0,
+                         retrain_check_every=2)
+    fresh = _fresh(keys, 128)
+    for i in range(4):
+        pipe.ingest(fresh[i * 32: (i + 1) * 32],
+                    (np.arange(32) + i * 32).astype(np.int64))
+        pipe.publish()
+    assert pipe.stats["mdl_checks"] == 2
+    assert pipe.stats["mdl_retrains"] == 0
+    pipe.close()

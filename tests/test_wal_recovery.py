@@ -291,3 +291,109 @@ def test_save_restore_preserves_mechanism_and_lookups(tmp_path):
     more = _fresh(keys, 128)[64:]
     rec.ingest(more, np.arange(more.size, dtype=np.int64))
     assert rec.lookup(more).found.all()
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 10 satellite: load-adaptive group commit (sync_every="adaptive")
+
+
+def test_wal_adaptive_idle_syncs_every_record(tmp_path):
+    """Sparse writers get per-record durability: an inter-write gap
+    above ``idle_s`` fsyncs on the spot (nothing to amortize into)."""
+    import time
+
+    wal = IngestWAL(tmp_path / "a.wal", sync_every="adaptive",
+                    idle_s=0.0005)
+    for i in range(5):
+        wal.append([float(2 * i)], [i])
+        time.sleep(0.003)              # gap >> idle_s: disk is idle
+    assert wal.stats["idle_syncs"] == 5
+    assert wal.stats["records"] == 5
+    wal.close()
+
+
+def test_wal_adaptive_burst_batches_syncs(tmp_path):
+    """A write storm pays O(elapsed / burst_window) fsyncs, not one per
+    record — and every record is still OS-flushed (replayable) before
+    any sync happens."""
+    wal = IngestWAL(tmp_path / "b.wal", sync_every="adaptive",
+                    idle_s=10.0, burst_window_s=1.0)
+    n = 200
+    for i in range(n):
+        wal.append([float(2 * i)], [i])
+    assert wal.stats["records"] == n
+    # first record sees the idle boot gap; the burst amortizes the rest
+    assert wal.stats["syncs"] <= 2
+    recs, _, torn = replay(wal.path)   # pre-close: flushed, parseable
+    assert len(recs) == n and not torn
+    wal.close()
+
+
+def test_wal_adaptive_window_sync_under_sustained_burst(tmp_path):
+    """A sustained burst longer than ``burst_window_s`` crosses the
+    window and time-batched syncs fire."""
+    import time
+
+    wal = IngestWAL(tmp_path / "w.wal", sync_every="adaptive",
+                    idle_s=10.0, burst_window_s=0.02)
+    for i in range(20):
+        wal.append([float(2 * i)], [i])
+        time.sleep(0.005)              # < idle_s: still "a burst"
+    assert wal.stats["window_syncs"] >= 1
+    assert wal.stats["idle_syncs"] <= 1    # only the boot gap
+    wal.close()
+
+
+def test_wal_adaptive_framing_byte_identical_to_fixed(tmp_path):
+    """Only fsync CADENCE changes under adaptive group commit: the same
+    records produce byte-identical files, so every kill-at-any-byte
+    recovery property proven for the fixed mode transfers verbatim."""
+    rng = np.random.default_rng(5)
+    batches = [(np.sort(rng.choice(2 ** 20, 16, replace=False)
+                        ).astype(np.float64) * 2.0,
+                (100 * i + np.arange(16)).astype(np.int64))
+               for i in range(6)]
+    wf = IngestWAL(tmp_path / "fixed.wal", sync_every=3)
+    wa = IngestWAL(tmp_path / "adaptive.wal", sync_every="adaptive")
+    for k, p in batches:
+        wf.append(k, p)
+        wa.append(k, p)
+    wf.fence(1)
+    wa.fence(1)
+    wf.close()
+    wa.close()
+    fixed = (tmp_path / "fixed.wal").read_bytes()
+    adaptive = (tmp_path / "adaptive.wal").read_bytes()
+    assert fixed == adaptive
+    # and a torn adaptive tail still recovers the acked prefix cleanly
+    torn_path = tmp_path / "torn.wal"
+    torn_path.write_bytes(adaptive[:-11])
+    recs, _, torn = replay(torn_path)
+    assert torn and len(recs) == 6     # fence torn off, batches intact
+    assert all(r.kind == "batch" for r in recs)
+
+
+def test_wal_concurrent_append_interleaves_whole_records(tmp_path):
+    """Regression for the WAL lock: concurrent appenders (caller +
+    deadline-timer threads in serving) must interleave whole framed
+    records — replay sees every record, valid CRCs, no torn middle."""
+    import threading
+
+    wal = IngestWAL(tmp_path / "c.wal", sync_every="adaptive")
+
+    def writer(tid):
+        for i in range(50):
+            wal.append([float(2 * (tid * 1_000 + i))], [tid * 1_000 + i])
+
+    threads = [threading.Thread(target=writer, args=(t,))
+               for t in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wal.close()
+    recs, _, torn = replay(tmp_path / "c.wal")
+    assert not torn and len(recs) == 200
+    got = sorted(int(r.payloads[0]) for r in recs)
+    assert got == sorted(t * 1_000 + i for t in range(4)
+                         for i in range(50))
